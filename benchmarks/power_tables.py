@@ -1,0 +1,69 @@
+"""Benchmark: the paper's Fig. 5a / Fig. 5b power comparisons + Table 1/2.
+
+Emits ``name,value,derived`` CSV rows: normalized system power for the
+centralized vs distributed architectures, the hybrid-memory on-sensor
+comparison, and the layer-granularity partition sweep (beyond-paper)."""
+
+from __future__ import annotations
+
+import time
+
+
+def rows() -> list[tuple[str, float, str]]:
+    from repro.core import partition, system
+    from repro.core.constants import MIPI, UTSV
+    from repro.core.handtracking import build_detnet
+
+    out: list[tuple[str, float, str]] = []
+    t0 = time.perf_counter()
+    f5a = system.fig5a_comparison()
+    f5b = system.fig5b_comparison()
+    dt = (time.perf_counter() - t0) * 1e6
+
+    out.append(("fig5a.centralized_A7", 1.0, "normalized power"))
+    out.append(("fig5a.distributed_A7_O7", f5a["distributed[A=7nm,O=7nm]"],
+                f"saving={f5a['_saving_7nm']*100:.1f}% (paper: 24%)"))
+    out.append(("fig5a.distributed_A7_O16",
+                f5a["distributed[A=7nm,O=16nm]"],
+                f"saving={f5a['_saving_16nm']*100:.1f}% (paper: 16%)"))
+    out.append(("fig5b.onsensor_sram", 1.0, "normalized power"))
+    out.append(("fig5b.onsensor_hybrid_mram", f5b["hybrid"],
+                f"saving={f5b['_saving']*100:.1f}% (paper: 39%)"))
+
+    cen = system.build_centralized("7nm")
+    bd = cen.breakdown()
+    out.append(("fig5a.centralized_total_mw", cen.avg_power * 1e3,
+                "absolute model output"))
+    out.append(("fig5a.camera_mipi_share",
+                (bd["camera"] + bd["mipi"]) / cen.avg_power,
+                "paper: cameras+MIPIs dominate"))
+
+    out.append(("table2.mipi_pj_per_byte", MIPI.energy_per_byte * 1e12,
+                "paper: 100"))
+    out.append(("table2.utsv_pj_per_byte", UTSV.energy_per_byte * 1e12,
+                "paper: 5"))
+
+    t0 = time.perf_counter()
+    pts = partition.sweep_partitions()
+    sweep_us = (time.perf_counter() - t0) * 1e6
+    n_det = len(build_detnet().layers)
+    best = min(pts, key=lambda p: p.avg_power)
+    out.append(("partition.paper_split_saving",
+                1 - pts[n_det].avg_power / pts[0].avg_power,
+                "DetNet|KeyNet boundary (the paper's Fig. 2 choice)"))
+    out.append(("partition.sweep_best_saving",
+                1 - best.avg_power / pts[0].avg_power,
+                f"beyond-paper layer-level optimum at cut {best.cut}"))
+    out.append(("partition.sweep_eval_us", sweep_us,
+                f"{len(pts)} cuts, semi-analytical"))
+    out.append(("fig5_eval_us", dt, "full Fig.5 model eval"))
+    return out
+
+
+def main() -> None:
+    for name, val, derived in rows():
+        print(f"{name},{val:.6g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark: the paper's Fig. 4 — RBE accelerator roofline.
+
+Characterizes representative Regular / Pointwise / Depthwise convolutions
+(as the paper does with GVSoC) and reports streamed-weight arithmetic
+intensity, effective MAC/cycle and the binding constraint per layer."""
+
+from __future__ import annotations
+
+
+def rows():
+    from repro.core import rbe
+    from repro.core.constants import RBE
+    from repro.core.handtracking import build_detnet, build_keynet
+    from repro.core.workloads import conv2d, depthwise, pointwise
+
+    out = []
+    # the paper's layer sweep: kinds x channel/spatial variations
+    sweep = []
+    for c in (32, 96, 192):
+        sweep.append(conv2d(f"conv3x3_c{c}", 40, 30, c, c, k=3))
+        sweep.append(pointwise(f"pointwise_c{c}", 40, 30, c, c))
+        sweep.append(depthwise(f"depthwise_c{c}", 40, 30, c))
+    for layer in sweep:
+        eff = rbe.mac_per_cycle(layer, RBE)
+        out.append((f"fig4.{layer.name}.mac_per_cycle", eff,
+                    f"AI={rbe.streamed_intensity(layer):.1f} MAC/B, "
+                    f"peak={RBE.peak_mac_per_cycle}"))
+    # orderings the paper reports
+    conv = rbe.mac_per_cycle(conv2d("c", 40, 30, 96, 96, k=3), RBE)
+    pw = rbe.mac_per_cycle(pointwise("p", 40, 30, 96, 96), RBE)
+    dw = rbe.mac_per_cycle(depthwise("d", 40, 30, 96), RBE)
+    out.append(("fig4.ordering_conv_gt_pw_gt_dw",
+                float(conv > pw > dw), "paper: conv > pointwise > depthwise"))
+    pts = (rbe.roofline_points(build_detnet())
+           + rbe.roofline_points(build_keynet()))
+    n_ws = sum(1 for p in pts if p.bound == "weight-stream")
+    out.append(("fig4.weight_stream_bound_layers", n_ws,
+                f"of {len(pts)} hand-tracking layers (paper: 'several')"))
+    return out
+
+
+def main() -> None:
+    for name, val, derived in rows():
+        print(f"{name},{val:.6g},{derived}")
+
+
+if __name__ == "__main__":
+    main()

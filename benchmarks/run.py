@@ -1,0 +1,68 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only <name>]
+
+Emits ``name,value,derived`` CSV rows:
+  * power_tables  — Fig. 5a / Fig. 5b / Table 2 reproduction
+  * rbe_roofline  — Fig. 4 RBE accelerator roofline
+  * tpu_roofline  — the 40-cell (arch x shape) TPU roofline + energy table
+  * kernel_bench  — Pallas kernel validation/timing + VMEM budgets
+  * dosc_advisor  — the two-tier (ICI/DCN) communication-plan table
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def dosc_advisor_rows():
+    from repro.core import dosc
+    out = []
+    ranked = dosc.advise(grad_elems_per_chip=100e6, pods=2,
+                         intra_pod_chips=256, objective="time")
+    for c in ranked:
+        out.append((f"dosc.{c.plan.name}.t_comm_ms", c.t_comm_s * 1e3,
+                    f"dcn_edge={c.dcn_edge_bytes/2**20:.1f}MiB "
+                    f"e={c.e_comm_j*1e3:.2f}mJ/chip"))
+    flat = next(c for c in ranked if c.plan.name == "flat-ar-f32")
+    best = ranked[0]
+    out.append(("dosc.best_vs_flat_speedup",
+                flat.t_comm_s / best.t_comm_s,
+                f"best={best.plan.name} (the paper's two-tier insight)"))
+    return out
+
+
+SUITES = ["power_tables", "rbe_roofline", "tpu_roofline", "kernel_bench",
+          "dosc_advisor"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=SUITES)
+    args = ap.parse_args()
+    suites = [args.only] if args.only else SUITES
+    print("name,value,derived")
+    t0 = time.time()
+    failures = 0
+    for s in suites:
+        try:
+            if s == "dosc_advisor":
+                rows = dosc_advisor_rows()
+            else:
+                mod = __import__(f"benchmarks.{s}", fromlist=["rows"])
+                rows = mod.rows()
+            for name, val, derived in rows:
+                print(f"{name},{val:.6g},{derived}")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{s}.FAILED,0,{type(e).__name__}: {e}")
+    print(f"benchmarks.wall_s,{time.time()-t0:.1f},"
+          f"{len(suites)} suites, {failures} failures")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Partition study: sweep the paper's optimization knobs.
+
+    PYTHONPATH=src python examples/partition_study.py
+
+Explores the design space the simulation framework was built for:
+* partition point x on-sensor technology node,
+* DetNet frame rate (the paper's 'ROI reuse' knob),
+* SRAM vs hybrid MRAM on-sensor weight memory,
+* sensitivity of the optimal cut to MIPI energy/byte.
+"""
+
+import dataclasses
+
+from repro.core import partition, system
+from repro.core.constants import MIPI, NUM_CAMERAS
+
+
+def sweep_tech_nodes():
+    print("== partition x on-sensor node ==")
+    print(f"{'cut':>4s} {'7nm sensor (mW)':>16s} {'16nm sensor (mW)':>17s}")
+    pts7 = partition.sweep_partitions(sensor_node="7nm")
+    pts16 = partition.sweep_partitions(sensor_node="16nm")
+    for i in range(0, len(pts7), 4):
+        print(f"{i:4d} {pts7[i].avg_power*1e3:16.3f} "
+              f"{pts16[i].avg_power*1e3:17.3f}")
+    b7 = min(pts7, key=lambda p: p.avg_power)
+    b16 = min(pts16, key=lambda p: p.avg_power)
+    print(f"best: cut {b7.cut} @7nm ({b7.avg_power*1e3:.3f} mW), "
+          f"cut {b16.cut} @16nm ({b16.avg_power*1e3:.3f} mW)")
+
+
+def sweep_detnet_fps():
+    print("\n== DetNet rate (ROI reuse) — paper section 3 ==")
+    for fps in (5.0, 10.0, 15.0, 30.0):
+        rep = system.build_distributed("7nm", "7nm", detnet_fps=fps)
+        print(f"  DetNet @{fps:4.0f} fps: {rep.avg_power*1e3:7.3f} mW")
+
+
+def sweep_memory_tech():
+    print("\n== on-sensor weight memory tech (16nm sensors) ==")
+    for mem in ("sram", "mram"):
+        rep = system.build_distributed("7nm", "16nm",
+                                       sensor_weight_mem=mem)
+        onsensor = rep.group_power("sensor")
+        print(f"  {mem:5s}: system {rep.avg_power*1e3:7.3f} mW, "
+              f"on-sensor subsystem {onsensor*1e3:7.3f} mW")
+
+
+def sweep_mipi_energy():
+    print("\n== sensitivity: optimal cut vs MIPI energy/byte ==")
+    for pj in (25.0, 50.0, 100.0, 200.0):
+        # rebuild the sweep with a modified link (Eq. 5's E_byte)
+        import repro.core.system as S
+        import repro.core.partition as P
+        orig = S.MIPI
+        link = dataclasses.replace(orig, energy_per_byte=pj * 1e-12)
+        S.MIPI = link
+        P.MIPI = link
+        try:
+            pts = partition.sweep_partitions()
+            best = min(pts, key=lambda p: p.avg_power)
+            print(f"  MIPI {pj:5.0f} pJ/B: best cut {best.cut:2d}, "
+                  f"{best.avg_power*1e3:7.3f} mW "
+                  f"(centralized {pts[0].avg_power*1e3:7.3f} mW)")
+        finally:
+            S.MIPI = orig
+            P.MIPI = orig
+
+
+if __name__ == "__main__":
+    sweep_tech_nodes()
+    sweep_detnet_fps()
+    sweep_memory_tech()
+    sweep_mipi_energy()

@@ -1,0 +1,7 @@
+"""repro: Distributed On-Sensor Compute (DOSC) power-estimation framework.
+
+A JAX/TPU production framework reproducing and extending Gomez & Patel et
+al., "Distributed On-Sensor Compute System for AR/VR Devices" (tinyML'22).
+"""
+
+__version__ = "1.0.0"

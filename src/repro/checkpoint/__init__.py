@@ -1,0 +1,3 @@
+"""Atomic, resharding-tolerant checkpointing."""
+
+from .manager import CheckpointManager  # noqa: F401

@@ -1,0 +1,4 @@
+"""Assigned architecture configs + input shapes."""
+
+from .registry import ARCH_IDS, BUILDERS, get_config, get_reduced_config  # noqa: F401
+from .shapes import SHAPES, InputShape, cell_is_runnable  # noqa: F401

@@ -1,0 +1,4 @@
+"""Core: the paper's semi-analytical DOSC power model + TPU adaptation."""
+
+from . import (constants, dosc, energy, handtracking, hlo_analysis,  # noqa: F401
+               partition, rbe, roofline, system, tpu_energy, workloads)

@@ -1,0 +1,99 @@
+"""End-to-end frame latency for the two topologies (paper §1: the DOSC
+system claims "significant benefits in terms of communication costs,
+latency constraints and privacy").
+
+Latency of one hand-tracking result, per camera frame, for an N-camera
+rig.  The key structural difference:
+
+* **centralized** — the aggregator serializes ALL cameras' work
+  (N x (DetNet_amortized + KeyNet)) behind each result, and the raw frame
+  crosses the slow MIPI first;
+* **distributed** — DetNet runs *in parallel* on the N sensors (each at
+  1/4 the aggregator's throughput), only the ROI crosses MIPI, and the
+  aggregator's queue holds KeyNets only.
+
+Uses the same Eq. 6 / Eq. 9 building blocks as the power model — one more
+consumer of the semi-analytical counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from . import energy as E
+from . import rbe
+from .constants import (MIPI, NUM_CAMERAS, ON_SENSOR_SCALE, T_SENSE_S,
+                        TECH_NODES, UTSV, TechNode)
+from .handtracking import (FULL_FRAME_BYTES, ROI_BYTES, build_detnet,
+                           build_keynet)
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyBreakdown:
+    name: str
+    t_expose: float
+    t_readout: float
+    t_detnet: float        # amortized per frame (ROI reuse), own camera
+    t_comm_roi: float
+    t_queue: float         # other cameras' work serialized ahead of us
+    t_keynet: float
+
+    @property
+    def total(self) -> float:
+        return (self.t_expose + self.t_readout + self.t_detnet
+                + self.t_comm_roi + self.t_queue + self.t_keynet)
+
+
+def _node(x) -> TechNode:
+    return TECH_NODES[x] if isinstance(x, str) else x
+
+
+def centralized_latency(agg_node: str | TechNode = "7nm",
+                        detnet_every: int = 3,
+                        num_cameras: int = NUM_CAMERAS
+                        ) -> LatencyBreakdown:
+    node = _node(agg_node)
+    det, key = build_detnet(), build_keynet()
+    t_det = rbe.processing_time_s(det, node) / detnet_every
+    t_key = rbe.processing_time_s(key, node)
+    return LatencyBreakdown(
+        name=f"centralized[A={node.name}]",
+        t_expose=T_SENSE_S,
+        t_readout=E.comm_time(FULL_FRAME_BYTES, MIPI),
+        t_detnet=t_det,
+        t_comm_roi=0.0,     # crop is local to the aggregator
+        t_queue=(num_cameras - 1) * (t_det + t_key),
+        t_keynet=t_key,
+    )
+
+
+def distributed_latency(agg_node: str | TechNode = "7nm",
+                        sensor_node: str | TechNode = "7nm",
+                        detnet_every: int = 3,
+                        num_cameras: int = NUM_CAMERAS
+                        ) -> LatencyBreakdown:
+    agg, sen = _node(agg_node), _node(sensor_node)
+    det, key = build_detnet(), build_keynet()
+    t_key = rbe.processing_time_s(key, agg)
+    return LatencyBreakdown(
+        name=f"distributed[A={agg.name},O={sen.name}]",
+        t_expose=T_SENSE_S,
+        t_readout=E.comm_time(FULL_FRAME_BYTES, UTSV),
+        t_detnet=rbe.processing_time_s(det, sen, scale=ON_SENSOR_SCALE)
+        / detnet_every,     # parallel per sensor: no cross-camera queue
+        t_comm_roi=E.comm_time(ROI_BYTES, MIPI),
+        t_queue=(num_cameras - 1) * t_key,   # aggregator runs KeyNet only
+        t_keynet=t_key,
+    )
+
+
+def latency_comparison(**kw) -> dict[str, float]:
+    c = centralized_latency(**kw)
+    d = distributed_latency(**kw)
+    return {
+        "centralized_ms": c.total * 1e3,
+        "distributed_ms": d.total * 1e3,
+        "_saving": 1.0 - d.total / c.total,
+        "_readout_saving_ms": (c.t_readout - d.t_readout) * 1e3,
+        "_queue_saving_ms": (c.t_queue - d.t_queue) * 1e3,
+    }

@@ -1,0 +1,168 @@
+"""Workload partition optimizer across the distributed compute hierarchy.
+
+The paper's central system knob: where to cut the CV pipeline between the
+on-sensor processor and the aggregator.  The hand-tracking pipeline is
+
+    raw frame -> DetNet -> (boxes back to sensor) -> ROI crop -> KeyNet -> kp
+
+and every layer boundary is a legal cut.  For cut index ``k`` over the
+concatenated layer list (DetNet ++ KeyNet):
+
+* ``k == 0``                  — fully centralized (Fig. 1a): the raw frame
+  crosses MIPI at camera rate (the aggregator needs it for the ROI crop).
+* ``0 < k < len(DetNet)``     — DetNet is split: the cut activation crosses
+  MIPI at DetNet rate, *and* the ROI crop still has to cross at KeyNet rate
+  (the raw frame only exists on-sensor; box coords return over MIPI, tiny).
+* ``k == len(DetNet)``        — the paper's choice (Fig. 2): only the ROI
+  (at KeyNet rate) + DetNet outputs (at DetNet rate) cross MIPI.
+* ``k > len(DetNet)``         — KeyNet is split: the KeyNet cut activation
+  crosses at KeyNet rate; ROI stays on-sensor.
+
+The optimizer evaluates Eq. 1/2 for every cut and returns the sweep — the
+reproduction target is that the minimum lands exactly on the paper's
+DetNet/KeyNet boundary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from . import energy as E
+from .constants import (CAMERA_FPS, DETNET_FPS, KEYNET_FPS, MIPI, NUM_CAMERAS,
+                        ON_SENSOR_SCALE, T_SENSE_S, UTSV, TechNode)
+from .handtracking import (FULL_FRAME_BYTES, ROI_BYTES, build_detnet,
+                           build_keynet)
+from .system import (Deployment, ProcessorSite, SystemReport,
+                     _camera_modules, _link_modules, _resolve_node, MemKind)
+from .workloads import NNWorkload
+
+BOX_COORDS_BYTES = 64   # detection boxes returned sensor-ward (per frame)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPoint:
+    cut: int
+    label: str
+    avg_power: float
+    mipi_bytes_per_s: float
+    sensor_macs_per_s: float
+    report: SystemReport
+
+
+def _sub_workload(wl: NNWorkload, lo: int, hi: int,
+                  name: str) -> NNWorkload | None:
+    layers = wl.layers[lo:hi]
+    if not layers:
+        return None
+    return NNWorkload(name=name, layers=tuple(layers),
+                      input_bytes=layers[0].in_act_bytes,
+                      output_bytes=layers[-1].out_act_bytes)
+
+
+def evaluate_cut(cut: int,
+                 agg_node: str | TechNode = "7nm",
+                 sensor_node: str | TechNode = "7nm",
+                 sensor_weight_mem: MemKind = "sram",
+                 detnet: NNWorkload | None = None,
+                 keynet: NNWorkload | None = None,
+                 num_cameras: int = NUM_CAMERAS,
+                 camera_fps: float = CAMERA_FPS,
+                 detnet_fps: float = DETNET_FPS,
+                 keynet_fps: float = KEYNET_FPS) -> PartitionPoint:
+    """Build the full Eq.1/2 module list for one partition point."""
+    detnet = detnet or build_detnet()
+    keynet = keynet or build_keynet()
+    agg_n = _resolve_node(agg_node)
+    sen_n = _resolve_node(sensor_node)
+    n_det = len(detnet.layers)
+    n_all = n_det + len(keynet.layers)
+    assert 0 <= cut <= n_all
+
+    mods: list[E.ModuleEnergy] = []
+    centralized = cut == 0
+    cam_link = MIPI if centralized else UTSV
+    mods += _camera_modules(num_cameras, readout_link=cam_link,
+                            fps=camera_fps, t_sense=T_SENSE_S)
+    if not centralized:
+        mods += _link_modules(num_cameras, UTSV, FULL_FRAME_BYTES,
+                              camera_fps, tag="utsv")
+
+    # ---- what crosses MIPI ----
+    mipi_payloads: list[tuple[float, float]] = []   # (bytes, rate)
+    if centralized:
+        mipi_payloads.append((FULL_FRAME_BYTES, camera_fps))
+    elif cut < n_det:
+        act = detnet.layers[cut - 1].out_act_bytes if cut > 0 else 0
+        mipi_payloads.append((act, detnet_fps))
+        mipi_payloads.append((BOX_COORDS_BYTES, detnet_fps))  # boxes back
+        mipi_payloads.append((ROI_BYTES, keynet_fps))         # crop forward
+    elif cut == n_det:
+        mipi_payloads.append((detnet.output_bytes, detnet_fps))
+        mipi_payloads.append((ROI_BYTES, keynet_fps))
+    else:
+        act = keynet.layers[cut - n_det - 1].out_act_bytes
+        mipi_payloads.append((act, keynet_fps))
+        mipi_payloads.append((detnet.output_bytes, detnet_fps))
+    for i, (b, r) in enumerate(mipi_payloads):
+        mods += _link_modules(num_cameras, MIPI, b, r, tag=f"mipi.{i}")
+
+    # ---- sensor-side deployment ----
+    sensor_wls: list[tuple[NNWorkload, float]] = []
+    det_s = _sub_workload(detnet, 0, min(cut, n_det), "DetNet.sensor")
+    if det_s:
+        sensor_wls.append((det_s, detnet_fps))
+    key_s = _sub_workload(keynet, 0, max(0, cut - n_det), "KeyNet.sensor")
+    if key_s:
+        sensor_wls.append((key_s, keynet_fps))
+    if not centralized:
+        for i in range(num_cameras):
+            mods += Deployment(
+                site=ProcessorSite(name=f"sensor{i}", node=sen_n,
+                                   scale=ON_SENSOR_SCALE,
+                                   weight_mem=sensor_weight_mem,
+                                   l1_bytes=16 * 1024),
+                workloads=[(w, f) for w, f in sensor_wls],
+                extra_buffer_bytes=detnet.input_bytes,
+            ).modules()
+
+    # ---- aggregator-side deployment ----
+    agg_wls: list[tuple[NNWorkload, float]] = []
+    det_a = _sub_workload(detnet, min(cut, n_det), n_det, "DetNet.agg")
+    if det_a:
+        agg_wls.append((det_a, detnet_fps * num_cameras))
+    key_a = _sub_workload(keynet, max(0, cut - n_det), len(keynet.layers),
+                          "KeyNet.agg")
+    if key_a:
+        agg_wls.append((key_a, keynet_fps * num_cameras))
+    in_buf = (FULL_FRAME_BYTES if centralized else
+              max(b for b, _ in mipi_payloads)) * num_cameras
+    if agg_wls:
+        mods += Deployment(
+            site=ProcessorSite(name="agg", node=agg_n, scale=1.0),
+            workloads=agg_wls,
+            extra_buffer_bytes=in_buf,
+        ).modules()
+
+    label = ("centralized" if centralized else
+             "paper-split(DetNet|KeyNet)" if cut == n_det else
+             f"cut@{cut}")
+    rep = SystemReport(name=f"partition[{label}]", modules=mods)
+    mipi_rate = sum(b * r for b, r in mipi_payloads) * num_cameras
+    sensor_macs = sum(w.total_macs * f for w, f in sensor_wls) * num_cameras
+    return PartitionPoint(cut=cut, label=label, avg_power=rep.avg_power,
+                          mipi_bytes_per_s=mipi_rate,
+                          sensor_macs_per_s=sensor_macs, report=rep)
+
+
+def sweep_partitions(**kw) -> list[PartitionPoint]:
+    detnet = kw.get("detnet") or build_detnet()
+    keynet = kw.get("keynet") or build_keynet()
+    kw["detnet"], kw["keynet"] = detnet, keynet
+    n_all = len(detnet.layers) + len(keynet.layers)
+    return [evaluate_cut(c, **kw) for c in range(n_all + 1)]
+
+
+def optimal_partition(**kw) -> PartitionPoint:
+    """The paper's claim: the optimum sits at the DetNet/KeyNet boundary."""
+    return min(sweep_partitions(**kw), key=lambda p: p.avg_power)

@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline with sharding + prefetch."""
+
+from .pipeline import (DataConfig, PrefetchIterator, SyntheticLM,  # noqa: F401
+                       make_pipeline)

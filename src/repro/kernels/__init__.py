@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as a subpackage: ``kernel.py`` (pl.pallas_call +
+BlockSpec VMEM tiling), ``ops.py`` (jit'd wrapper), ``ref.py`` (pure-jnp
+oracle).  Kernels are validated on CPU with interpret=True; TPU is the
+lowering target.
+
+* ``flash_attention`` — fused online-softmax attention (GQA, causal,
+  sliding window, logit softcap);
+* ``rbe_matmul``      — the paper's 8-bit RBE engine adapted to the MXU:
+  int8 x int8 -> int32 blocked matmul with per-channel dequant;
+* ``rmsnorm``         — fused bandwidth-bound normalization.
+"""

@@ -1,0 +1,135 @@
+"""Pallas TPU flash-attention kernel (forward).
+
+Grid: (batch, kv_head, q_blocks) — each program instance owns one
+(q_block x head_dim) output tile and loops over kv blocks with the online-
+softmax recurrence, keeping the score tile in VMEM.  This is the TPU-native
+twin of ``repro.models.flash`` (same algorithm, same block enumeration);
+the lowering-path version is what the dry-run compiles, this kernel is what
+a real v5e deployment runs.
+
+Tiling:
+* ``block_q x head_dim`` q tile and ``block_kv x head_dim`` k/v tiles live
+  in VMEM;  with the defaults (256 x 128, 512 x 128, fp32 accumulators)
+  the working set is ~1.4 MiB — far below the ~16 MiB/core VMEM budget,
+  leaving room for double buffering.
+* head_dim and block sizes must be multiples of 128 (MXU lane alignment) —
+  asserted in ops.py.
+
+GQA is handled by the grid: all ``g = H / KV`` q-heads of one kv head are
+folded into the q tile's second dim, so k/v tiles are fetched once per kv
+head (the weight-streaming economy the paper's RBE roofline is about).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0e38
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *,
+                      block_kv: int, seq_kv: int, causal: bool,
+                      window: int, logit_softcap: float, scale: float,
+                      seq_offset: int, block_q: int):
+    """One (batch, kv_head, q_block) program instance.
+
+    q_ref: (block_q, g, d) VMEM tile
+    k_ref/v_ref: (seq_kv, d) VMEM (whole kv stream for this head)
+    o_ref: (block_q, g, d)
+    """
+    qi = pl.program_id(2)
+    _, bq, _, g, d = q_ref.shape                    # (1, bq, 1, g, d)
+    q = q_ref[...].astype(jnp.float32) * scale
+    q2 = q.reshape(bq * g, d)
+    k_all = k_ref[...].reshape(seq_kv, d)           # VMEM-resident stream
+    v_all = v_ref[...].reshape(seq_kv, d)
+
+    n_kv = seq_kv // block_kv
+
+    def body(kj, carry):
+        o, m, l = carry
+        k = jax.lax.dynamic_slice_in_dim(
+            k_all, kj * block_kv, block_kv).astype(jnp.float32)
+        v = jax.lax.dynamic_slice_in_dim(
+            v_all, kj * block_kv, block_kv).astype(jnp.float32)
+        s = jax.lax.dot_general(q2, k, (((1,), (1,)), ((), ())))
+        if logit_softcap:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        # masking in absolute positions
+        qpos = (qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, g), 0) + seq_offset).reshape(bq * g, 1)
+        kpos = kj * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (bq * g, block_kv), 1)
+        mask = jnp.ones_like(kpos, dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.where(m <= NEG_INF / 2, 0.0, jnp.exp(m - m_safe))
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        o_new = o * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        return o_new, m_new, l_new
+
+    o0 = jnp.zeros((bq * g, d), jnp.float32)
+    m0 = jnp.full((bq * g,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq * g,), jnp.float32)
+
+    if causal:
+        # only kv blocks intersecting the causal triangle for this q block
+        hi_pos = qi * block_q + block_q - 1 + seq_offset
+        n_iter = jnp.minimum(hi_pos // block_kv + 1, n_kv)
+    else:
+        n_iter = n_kv
+    o, m, l = jax.lax.fori_loop(0, n_iter, body, (o0, m0, l0))
+    o = o / jnp.maximum(l[:, None], 1e-30)
+    o_ref[...] = o.reshape(1, bq, 1, g, d).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        logit_softcap: float = 0.0, block_q: int = 256,
+                        block_kv: int = 512, scale: float | None = None,
+                        interpret: bool = True):
+    """q: (B, Sq, H, D); k/v: (B, Skv, KV, D) -> (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    scale = float(scale if scale is not None else d ** -0.5)
+    n_q = sq // block_q
+
+    # layout: fold (H) -> (KV, g); kv stream per (batch, kv_head)
+    q4 = q.reshape(b, sq, kvh, g, d)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, block_kv=block_kv, seq_kv=skv, causal=causal,
+        window=window, logit_softcap=logit_softcap, scale=scale,
+        seq_offset=skv - sq, block_q=block_q)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kvh, n_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, g, d),
+                         lambda bi, hi, qi: (bi, qi, hi, 0, 0)),
+            pl.BlockSpec((1, skv, 1, d), lambda bi, hi, qi: (bi, 0, hi, 0)),
+            pl.BlockSpec((1, skv, 1, d), lambda bi, hi, qi: (bi, 0, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, g, d),
+                               lambda bi, hi, qi: (bi, qi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, kvh, g, d), q.dtype),
+        interpret=interpret,
+    )(q4, k, v)
+    return out.reshape(b, sq, h, d)

@@ -1,0 +1,32 @@
+"""Jit'd public wrapper for the Pallas flash-attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_fwd
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "logit_softcap", "block_q", "block_kv", "scale",
+    "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    logit_softcap: float = 0.0, block_q: int = 256,
+                    block_kv: int = 512, scale: float | None = None,
+                    interpret: bool = True):
+    """Fused attention on TPU (interpret=True validates on CPU).
+
+    Constraints (asserted): head_dim % 128 == 0 on TPU targets is
+    recommended for MXU alignment; block sizes must tile the sequence.
+    """
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    assert h % kvh == 0, "q heads must be a multiple of kv heads"
+    assert sq % min(block_q, sq) == 0
+    assert skv % min(block_kv, skv) == 0
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window,
+        logit_softcap=logit_softcap, block_q=block_q, block_kv=block_kv,
+        scale=scale, interpret=interpret)

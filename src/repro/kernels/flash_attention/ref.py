@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        logit_softcap: float = 0.0,
+                        scale: float | None = None):
+    """q: (B, Sq, H, D); k/v: (B, Skv, KV, D). Full softmax attention."""
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, sq, kvh, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,btkd->bqkgt", qg,
+                   k.astype(jnp.float32)) * scale
+    if logit_softcap:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    qpos = jnp.arange(sq) + (skv - sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgt,btkd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, d).astype(q.dtype)

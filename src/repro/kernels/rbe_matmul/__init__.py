@@ -1,0 +1,3 @@
+from .kernel import quantize_rowwise, rbe_matmul_raw  # noqa: F401
+from .ops import rbe_matmul  # noqa: F401
+from .ref import dequant_matmul_ref, rbe_matmul_ref  # noqa: F401

@@ -1,0 +1,97 @@
+"""RBE-adapted int8 matmul Pallas kernel.
+
+The paper's on-sensor accelerator is the Reconfigurable Binary Engine —
+an 8-bit MAC array whose performance is bounded by *weight streaming*
+(Fig. 4).  The TPU-native adaptation: an int8 x int8 -> int32 blocked
+matmul on the MXU with per-output-channel dequantization, tiled so that
+
+* the weight tile is fetched once per (m_block, n_block) grid step and
+  reused across the whole m block — maximizing MACs per streamed weight
+  byte, the quantity on the x-axis of the paper's roofline;
+* all tiles are multiples of 128 (MXU systolic array alignment);
+* the accumulator stays in VMEM as int32 until the final dequant.
+
+Grid: (M / block_m, N / block_n); the K loop runs inside the kernel so the
+int32 accumulator never round-trips to HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rbe_matmul_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, *,
+                       block_k: int, k_total: int):
+    """x_ref: (block_m, K) int8; w_ref: (K, block_n) int8;
+    sx_ref: (block_m, 1) f32 per-row scale; sw_ref: (1, block_n) f32
+    per-channel scale; o_ref: (block_m, block_n) f32."""
+    bm = x_ref.shape[0]
+    bn = w_ref.shape[1]
+    n_k = k_total // block_k
+
+    def body(ki, acc):
+        x = jax.lax.dynamic_slice(
+            x_ref[...], (0, ki * block_k), (bm, block_k))
+        w = jax.lax.dynamic_slice(
+            w_ref[...], (ki * block_k, 0), (block_k, bn))
+        prod = jax.lax.dot_general(
+            x.astype(jnp.int32), w.astype(jnp.int32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        return acc + prod
+
+    acc = jnp.zeros((bm, bn), jnp.int32)
+    acc = jax.lax.fori_loop(0, n_k, body, acc)
+    o_ref[...] = (acc.astype(jnp.float32)
+                  * sx_ref[...] * sw_ref[...]).astype(o_ref.dtype)
+
+
+def rbe_matmul_raw(x_q, w_q, sx, sw, *, block_m: int = 128,
+                   block_n: int = 128, block_k: int = 128,
+                   out_dtype=jnp.float32, interpret: bool = True):
+    """Quantized matmul: (M, K) int8 @ (K, N) int8 -> (M, N) out_dtype.
+
+    ``sx`` (M,) per-row activation scales, ``sw`` (N,) per-channel weight
+    scales (the symmetric-quantization layout the RBE uses at 8 bit).
+    """
+    m, k = x_q.shape
+    _, n = w_q.shape
+
+    def _fit(block, dim):
+        block = min(block, dim)
+        while dim % block:
+            block -= 1
+        return max(block, 1)
+
+    block_m = _fit(block_m, m)
+    block_n = _fit(block_n, n)
+    block_k = _fit(block_k, k)
+
+    kernel = functools.partial(_rbe_matmul_kernel, block_k=block_k,
+                               k_total=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(x_q, w_q, sx.reshape(m, 1), sw.reshape(1, n))
+
+
+def quantize_rowwise(x, axis: int = -1):
+    """Symmetric int8 quantization with per-row scales."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis,
+                   keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.squeeze(axis)

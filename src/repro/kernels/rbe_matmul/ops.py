@@ -1,0 +1,26 @@
+"""Jit'd public wrapper: float-in/float-out int8 matmul (RBE-adapted)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import quantize_rowwise, rbe_matmul_raw
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "block_n", "block_k", "interpret"))
+def rbe_matmul(x, w, *, block_m: int = 128, block_n: int = 128,
+               block_k: int = 128, interpret: bool = True):
+    """Quantize (x, w) to int8 and multiply on the 8-bit path.
+
+    x: (M, K) float; w: (K, N) float -> (M, N) float32.
+    Mirrors the RBE's 8-bit weights/activations datapath [Conti'18].
+    """
+    x_q, sx = quantize_rowwise(x, axis=-1)
+    w_q, sw = quantize_rowwise(w, axis=0)
+    return rbe_matmul_raw(x_q, w_q, sx, sw, block_m=block_m,
+                          block_n=block_n, block_k=block_k,
+                          interpret=interpret)

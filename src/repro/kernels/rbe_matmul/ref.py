@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the RBE int8 matmul kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rbe_matmul_ref(x_q, w_q, sx, sw, out_dtype=jnp.float32):
+    """Exact integer accumulation then dequant — matches the kernel
+    bit-for-bit up to float rounding of the final scale multiply."""
+    acc = x_q.astype(jnp.int32) @ w_q.astype(jnp.int32)
+    return (acc.astype(jnp.float32) * sx[:, None] * sw[None, :]
+            ).astype(out_dtype)
+
+
+def dequant_matmul_ref(x, w):
+    """Float reference for end-to-end quantization error checks."""
+    return x.astype(jnp.float32) @ w.astype(jnp.float32)

@@ -1,0 +1,52 @@
+"""Fused RMSNorm Pallas kernel.
+
+RMSNorm is bandwidth-bound (one read + one write of the activation, a
+handful of flops per element); fusing the variance reduction, rsqrt and
+scale into one VMEM-resident pass halves its HBM traffic vs the naive
+three-op lowering.  Used by every block of every assigned architecture.
+
+Grid: rows / block_rows; each instance owns (block_rows, d) in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * (1.0 + scale_ref[...].astype(jnp.float32))
+                  ).astype(o_ref.dtype)
+
+
+def rmsnorm_fused(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+                  interpret: bool = True):
+    """x: (..., d); scale: (d,). Returns rmsnorm(x) * (1 + scale)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    rows = x2.shape[0]
+    block_rows = min(block_rows, rows)
+    while rows % block_rows:
+        block_rows //= 2
+    block_rows = max(block_rows, 1)
+
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    out = pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    return out.reshape(orig_shape)

@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the fused RMSNorm kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import rmsnorm_fused
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool = True):
+    return rmsnorm_fused(x, scale, eps=eps, block_rows=block_rows,
+                         interpret=interpret)

@@ -1,0 +1,8 @@
+"""Launchers: production meshes, sharding rules, step builders, dry-run.
+
+Note: ``repro.launch.dryrun`` sets ``XLA_FLAGS`` for 512 host devices at
+import time — never import it from tests or benchmarks; run it as
+``python -m repro.launch.dryrun``.
+"""
+
+from . import mesh, partitioning, specs, steps  # noqa: F401

@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single pod / 2x16x16 multi-pod);
+  2. lowers the mode-appropriate step (train_step / prefill_step /
+     serve_step) with ShapeDtypeStruct inputs and full sharding rules;
+  3. compiles it (``.lower().compile()`` must succeed — sharding
+     mismatches, compile-time OOM or unsupported collectives are bugs);
+  4. records ``memory_analysis()`` (proves it fits), ``cost_analysis()``
+     (FLOPs/bytes for §Roofline), the parsed collective schedule, and the
+     derived three-term roofline into a JSON results file.
+
+Usage:
+    python -m repro.launch.dryrun --arch phi4-mini-3.8b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+
+The XLA_FLAGS line above MUST stay the first statement: jax locks the
+device count on first init, and smoke tests must keep seeing 1 device.
+"""
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp   # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_runnable, get_config  # noqa: E402
+from repro.core import hlo_cost, roofline, tpu_energy  # noqa: E402
+from repro.launch import partitioning as pt  # noqa: E402
+from repro.launch import specs, steps  # noqa: E402
+from repro.launch.mesh import (intra_pod_chips, make_production_mesh,  # noqa: E402
+                               mesh_chips)
+from repro.optim import adamw  # noqa: E402
+
+DEFAULT_OUT = "experiments/dryrun_results.json"
+
+
+def _analytic_state_bytes(shard_tree, shape_tree, chips: int) -> float:
+    """Per-device bytes for a sharded state tree (analytic, from specs)."""
+    total = 0.0
+    for sh, leaf in zip(jax.tree.leaves(shard_tree),
+                        jax.tree.leaves(shape_tree)):
+        n = leaf.size * jnp.dtype(leaf.dtype).itemsize
+        spec = sh.spec
+        div = 1
+        for i, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            for a in axes:
+                div *= sh.mesh.shape[a]
+        total += n / div
+    return total
+
+
+def _make_mesh(multi_pod: bool, mesh_shape: str | None):
+    if mesh_shape:
+        dims = tuple(int(x) for x in mesh_shape.split("x"))
+        axes = (("pod", "data", "model") if len(dims) == 3
+                else ("data", "model"))
+        return jax.make_mesh(
+            dims, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    return make_production_mesh(multi_pod=multi_pod)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               mla_absorb: bool = False, donate: bool = True,
+               mesh_shape: str | None = None,
+               cfg_overrides: dict | None = None):
+    """Lower + compile one cell; returns (compiled, context dict)."""
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh = _make_mesh(multi_pod, mesh_shape)
+    chips = mesh_chips(mesh)
+    p_shapes = specs.params_specs(cfg)
+    with jax.set_mesh(mesh):
+        p_shard = pt.params_shardings(mesh, p_shapes)
+        batch_shapes = specs.input_specs(cfg, shape)
+        b_shard = pt.batch_spec(mesh, batch_shapes)
+        if shape.mode == "train":
+            opt_cfg = adamw.AdamWConfig(
+                moment_dtype=specs.moment_dtype_for(cfg))
+            o_shapes = specs.opt_specs(opt_cfg, p_shapes)
+            o_shard = adamw.AdamWState(
+                step=pt.replicated(mesh),
+                mu=jax.tree.map(lambda s: s, p_shard),
+                nu=jax.tree.map(lambda s: s, p_shard))
+            fn = steps.make_train_step(cfg, opt_cfg)
+            jfn = jax.jit(fn,
+                          in_shardings=(p_shard, o_shard, b_shard),
+                          out_shardings=(p_shard, o_shard, None),
+                          donate_argnums=(0, 1) if donate else ())
+            lowered = jfn.lower(p_shapes, o_shapes, batch_shapes)
+            state_bytes = (_analytic_state_bytes(p_shard, p_shapes, chips)
+                           + 2 * _analytic_state_bytes(p_shard, o_shapes.mu,
+                                                       chips))
+        elif shape.mode == "prefill":
+            fn = steps.make_prefill_step(cfg)
+            jfn = jax.jit(fn, in_shardings=(p_shard, b_shard))
+            lowered = jfn.lower(p_shapes, batch_shapes)
+            state_bytes = _analytic_state_bytes(p_shard, p_shapes, chips)
+        else:  # decode
+            c_shapes = specs.cache_specs(cfg, shape)
+            c_shard = pt.cache_spec(mesh, c_shapes, shape.global_batch)
+            fn = steps.make_serve_step(cfg, mla_absorb=mla_absorb)
+            jfn = jax.jit(fn,
+                          in_shardings=(p_shard, c_shard, b_shard, None),
+                          out_shardings=(None, c_shard),
+                          donate_argnums=(1,) if donate else ())
+            lowered = jfn.lower(p_shapes, c_shapes, batch_shapes,
+                                specs.pos_spec())
+            state_bytes = (_analytic_state_bytes(p_shard, p_shapes, chips)
+                           + _analytic_state_bytes(c_shard, c_shapes,
+                                                   chips))
+        compiled = lowered.compile()
+    ctx = dict(cfg=cfg, shape=shape, mesh=mesh, chips=chips,
+               state_bytes_per_device=state_bytes)
+    return lowered, compiled, ctx
+
+
+def analyse_cell(arch: str, shape_name: str, multi_pod: bool,
+                 lowered, compiled, ctx,
+                 vmem_credit: bool = False) -> dict:
+    cfg, shape, mesh = ctx["cfg"], ctx["shape"], ctx["mesh"]
+    chips = ctx["chips"]
+    xla_cost = compiled.cost_analysis()
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        }
+    except Exception as e:   # pragma: no cover
+        mem_d = {"error": str(e)}
+    # trip-count-aware static analysis (XLA's cost_analysis counts each
+    # while body once — see repro.core.hlo_cost)
+    hc = hlo_cost.analyze(compiled.as_text(),
+                          vmem_credit_depth=2 if vmem_credit else None)
+    colls = hc.collectives
+    tokens = specs.tokens_per_step(cfg, shape)
+    mf = cfg.model_flops(tokens, decode=shape.mode != "train")
+    terms = roofline.build_terms(
+        arch, shape_name, "2x16x16" if multi_pod else "16x16", chips,
+        {"flops": hc.flops, "bytes accessed": hc.bytes}, colls, mf)
+    energy = tpu_energy.step_energy(terms, colls, intra_pod_chips(mesh))
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": shape.mode, "chips": chips,
+        "status": "ok",
+        "cost_analysis": {
+            "flops_per_device": hc.flops,
+            "bytes_per_device": hc.bytes,
+            "flops_by_op": dict(hc.flops_by_op),
+            "bytes_top": hlo_cost.top_bytes_breakdown(hc),
+            "xla_reported_flops": xla_cost.get("flops"),
+            "xla_reported_bytes": xla_cost.get("bytes accessed"),
+            "unknown_trip_whiles": hc.unknown_trip_whiles,
+        },
+        "memory_analysis": mem_d,
+        "state_bytes_per_device": ctx["state_bytes_per_device"],
+        "collectives": colls.by_opcode(),
+        "collective_wire_bytes": colls.total_wire_bytes,
+        "roofline": terms.to_dict(),
+        "energy_per_step_j": energy.breakdown() | {"total": energy.total},
+        "est_system_power_w": tpu_energy.system_power_w(energy, chips),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             mla_absorb: bool = False, mesh_shape: str | None = None,
+             cfg_overrides: dict | None = None, tag: str = "baseline",
+             vmem_credit: bool = False) -> dict:
+    runnable, reason = cell_is_runnable(arch, shape_name)
+    mesh_name = mesh_shape or ("2x16x16" if multi_pod else "16x16")
+    if not runnable:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "tag": tag, "status": "skipped", "reason": reason}
+    t0 = time.time()
+    try:
+        lowered, compiled, ctx = lower_cell(
+            arch, shape_name, multi_pod, mla_absorb=mla_absorb,
+            mesh_shape=mesh_shape, cfg_overrides=cfg_overrides)
+        row = analyse_cell(arch, shape_name, multi_pod, lowered, compiled,
+                           ctx, vmem_credit=vmem_credit)
+        row["mesh"] = mesh_name
+        row["tag"] = tag
+        row["compile_seconds"] = round(time.time() - t0, 1)
+        return row
+    except Exception as e:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "tag": tag,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:],
+                "compile_seconds": round(time.time() - t0, 1)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--mla-absorb", action="store_true")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override, e.g. 32x8 or 2x32x8 (§Perf)")
+    ap.add_argument("--moe-partial-sum", action="store_true")
+    ap.add_argument("--attn-p-bf16", action="store_true")
+    ap.add_argument("--fsdp-threshold-mb", type=float, default=None,
+                    help="params above this get a second data-axis shard; "
+                    "use a huge value to disable FSDP (§Perf)")
+    ap.add_argument("--vmem-credit", action="store_true",
+                    help="price inner-loop bodies as VMEM-fused Pallas "
+                    "kernels (block I/O only) — §Perf projection")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="Megatron-style sequence parallelism (§Perf)")
+    ap.add_argument("--tag", default="baseline",
+                    help="label for this variant in the results file")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    overrides = {}
+    if args.moe_partial_sum:
+        overrides["moe_partial_sum"] = True
+    if args.attn_p_bf16:
+        overrides["attn_p_bf16"] = True
+    if args.seq_parallel:
+        overrides["seq_parallel"] = True
+    if args.fsdp_threshold_mb is not None:
+        pt.FSDP_THRESHOLD_BYTES = int(args.fsdp_threshold_mb * 2**20)
+
+    cells: list[tuple[str, str, bool]] = []
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                for m in meshes:
+                    cells.append((a, s, m))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        for m in meshes:
+            cells.append((args.arch, args.shape, m))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("tag", "baseline"))
+            for r in results if r.get("status") == "ok"}
+
+    for arch, shape_name, mp in cells:
+        mesh_name = args.mesh_shape or ("2x16x16" if mp else "16x16")
+        if (arch, shape_name, mesh_name, args.tag) in done:
+            print(f"[skip-cached] {arch} x {shape_name} x {mesh_name} "
+                  f"[{args.tag}]")
+            continue
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name} "
+              f"[{args.tag}] ...", flush=True)
+        row = run_cell(arch, shape_name, mp, mla_absorb=args.mla_absorb,
+                       mesh_shape=args.mesh_shape, cfg_overrides=overrides,
+                       tag=args.tag, vmem_credit=args.vmem_credit)
+        results = [r for r in results
+                   if not (r["arch"] == arch and r["shape"] == shape_name
+                           and r["mesh"] == mesh_name
+                           and r.get("tag", "baseline") == args.tag)]
+        results.append(row)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        if row["status"] == "ok":
+            rf = row["roofline"]
+            print(f"  ok in {row['compile_seconds']}s: "
+                  f"dominant={rf['dominant']} "
+                  f"t_bound={rf['t_bound']*1e3:.2f}ms "
+                  f"roofline={rf['roofline_fraction']*100:.1f}% "
+                  f"state/dev={row['state_bytes_per_device']/2**30:.2f}GiB",
+                  flush=True)
+            print(f"  memory_analysis: {row['memory_analysis']}")
+            print(f"  cost_analysis: {row['cost_analysis']}")
+        else:
+            print(f"  {row['status']}: "
+                  f"{row.get('reason') or row.get('error')}", flush=True)
+
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_err = sum(1 for r in results if r["status"] == "error")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    print(f"\n== dry-run summary: {n_ok} ok, {n_skip} skipped "
+          f"(documented), {n_err} errors -> {args.out}")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,40 @@
+"""Production mesh builders.
+
+Single pod: (16, 16) over ("data", "model") — 256 v5e chips.
+Multi pod:  (2, 16, 16) over ("pod", "data", "model") — 512 chips; the
+"pod" axis is the DCN tier of the DOSC two-tier link model.
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(data: int = 2, model: int = 4) -> jax.sharding.Mesh:
+    """Small mesh for CPU integration tests (8 host devices)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def mesh_chips(mesh: jax.sharding.Mesh) -> int:
+    return mesh.devices.size
+
+
+def intra_pod_chips(mesh: jax.sharding.Mesh) -> int:
+    """Chips per pod = product of non-pod axes."""
+    n = mesh.devices.size
+    if "pod" in mesh.axis_names:
+        n //= mesh.shape["pod"]
+    return n

@@ -1,0 +1,235 @@
+"""Parameter/input/cache sharding rules for the production meshes.
+
+Logical plan:
+* batch dims ride ("pod", "data") (all pod+data axes present in the mesh);
+* feature/head/expert/vocab dims ride "model" (tensor/expert parallelism);
+* large weights additionally shard a second dim over "data" (FSDP-style
+  2D sharding) so optimizer state for the 100B+ cells fits per-chip HBM;
+* decode KV caches shard the sequence dim over "model" (and over "data"
+  too when the batch can't use it, e.g. ``long_500k`` with batch 1).
+
+Rules are name-based with a divisibility check; any dim not divisible by
+its axis size is replicated (recorded by ``explain()``).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# params above this size get a second (FSDP) shard dim over "data"
+FSDP_THRESHOLD_BYTES = 32 * (1 << 20)
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+
+
+def _axsize(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+# name-pattern -> index of the dim (negative = from the end) to put on
+# "model".  Applied to the *unstacked* trailing dims.
+_MODEL_DIM_RULES: list[tuple[str, int]] = [
+    (r"embed/table$", -2),          # (V, d) -> vocab
+    (r"unembed/w$", -1),            # (d, V) -> vocab
+    (r"w_q$", -2), (r"w_k$", -2), (r"w_v$", -2),   # (d, H, hd) -> heads
+    (r"b_q$", -2), (r"b_k$", -2), (r"b_v$", -2),   # (H, hd)
+    (r"w_o$", -3),                  # (H, hd, d) -> heads
+    (r"w_gate$", -1), (r"w_up$", -1),   # (d, f) / (E, d, f) -> f
+    (r"w_down$", -2),               # (f, d) / (E, f, d) -> f
+    (r"in_proj$", -1), (r"out_proj$", -2),         # mamba
+    (r"conv_w$", -1), (r"conv_b$", -1),
+    (r"w_bcdt$", -2), (r"dt_proj$", -1), (r"dt_bias$", -1),
+    (r"A_log$", -2), (r"/D$", -1),
+    (r"w_dq$", -1), (r"w_uq$", -2),                # MLA
+    (r"w_dkv$", -1), (r"w_kr$", -1),
+    (r"w_uk$", -2), (r"w_uv$", -2),
+    (r"router$", None),             # replicated (tiny, fp32)
+]
+
+# MoE expert tensors: expert dim (first trailing dim) on "model".
+_EXPERT_RE = re.compile(r"ffn/(w_gate|w_up|w_down)$")
+_NORM_RE = re.compile(r"(norm|scale|b_ig|b_fg|b_z|b_i|b_f|b_o)")
+
+
+def _stacked_prefix(path_s: str, ndim: int, shape) -> int:
+    """Number of leading stack dims (scan-over-repeats) to skip."""
+    return 1 if re.search(r"blocks/\d+/", path_s) else 0
+
+
+def param_spec(mesh, path, leaf) -> P:
+    path_s = _path_str(path)
+    shape = leaf.shape
+    ndim = len(shape)
+    model_n = _axsize(mesh, "model")
+    data_n = _axsize(mesh, "data")
+    skip = _stacked_prefix(path_s, ndim, shape)
+    spec: list = [None] * ndim
+
+    if _NORM_RE.search(path_s) or ndim <= skip:
+        return P(*spec)
+
+    # --- choose the model dim ---
+    model_dim: Optional[int] = None
+    if _EXPERT_RE.search(path_s):
+        model_dim = skip  # expert dim
+    else:
+        for pat, rel in _MODEL_DIM_RULES:
+            if re.search(pat, path_s):
+                if rel is None:
+                    return P(*spec)     # explicitly replicated
+                cand = ndim + rel
+                if cand >= skip:
+                    model_dim = cand
+                break
+    if model_dim is None:
+        # fallback: largest trailing dim divisible by model axis
+        cands = [i for i in range(skip, ndim) if shape[i] % model_n == 0]
+        if cands:
+            model_dim = max(cands, key=lambda i: shape[i])
+    if model_dim is not None and shape[model_dim] % model_n == 0 \
+            and model_n > 1:
+        spec[model_dim] = "model"
+    else:
+        model_dim = None
+
+    # --- FSDP second dim over "data" for large tensors ---
+    size_bytes = leaf.size * jnp.dtype(leaf.dtype).itemsize
+    if data_n > 1 and size_bytes >= FSDP_THRESHOLD_BYTES:
+        cands = [i for i in range(skip, ndim)
+                 if i != model_dim and shape[i] % data_n == 0]
+        if cands:
+            if _EXPERT_RE.search(path_s):
+                # experts: FSDP the *contraction* dim (d for w_up/w_gate,
+                # f for w_down = always the dim right after the expert
+                # dim) so the partial-sum MoE path contracts locally and
+                # never gathers weights (§Perf, see models/moe.py).
+                fsdp_dim = min(cands)
+            else:
+                fsdp_dim = max(cands, key=lambda i: shape[i])
+            spec[fsdp_dim] = "data"
+    return P(*spec)
+
+
+def params_shardings(mesh, params_shapes) -> Any:
+    """PartitionSpec pytree (as NamedShardings) for a params shape-tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(mesh, path, leaf)),
+        params_shapes)
+
+
+def explain(mesh, params_shapes) -> list[str]:
+    """Human-readable sharding decisions incl. replication fallbacks."""
+    lines = []
+
+    def visit(path, leaf):
+        spec = param_spec(mesh, path, leaf)
+        lines.append(f"{_path_str(path):60s} {str(leaf.shape):24s} "
+                     f"-> {spec}")
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, params_shapes)
+    return lines
+
+
+# ---------------------------------------------------------------------------
+# Inputs / caches
+# ---------------------------------------------------------------------------
+
+
+def batch_pspec(mesh, batch_shapes) -> Any:
+    """Raw PartitionSpecs for a Batch (tokens/embeds/positions/labels)."""
+    baxes = batch_axes(mesh)
+    full = 1
+    for a in baxes:
+        full *= mesh.shape[a]
+
+    def spec_for(path, leaf):
+        path_s = _path_str(path)
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        if "positions" in path_s and nd == 3:   # (3, B, S)
+            ok = leaf.shape[1] % full == 0
+            return P(None, baxes if ok else None, None)
+        spec = [None] * nd
+        if leaf.shape[0] % full == 0:
+            spec[0] = baxes
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shapes)
+
+
+def batch_spec(mesh, batch_shapes) -> Any:
+    """NamedShardings for a Batch."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        batch_pspec(mesh, batch_shapes))
+
+
+def cache_spec(mesh, cache_shapes, global_batch: int) -> Any:
+    """Decode-cache shardings.
+
+    Caches are stacked (R, B, ...) pytrees.  The batch dim shards over the
+    batch axes when divisible; the sequence dim of KV caches shards over
+    "model" (plus any batch axes the batch couldn't use — the ``long_500k``
+    batch=1 case).  SSM states shard their feature dim over "model".
+    """
+    baxes = batch_axes(mesh)
+    # batch shardable only if divisible by the full batch-axes product
+    full = 1
+    for a in baxes:
+        full *= mesh.shape[a]
+    batch_ok = global_batch % full == 0
+    leftover = () if batch_ok else baxes   # give unused axes to seq dim
+
+    def spec_for(path, leaf):
+        path_s = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        skip = 1 if re.search(r"blocks/\d+", path_s) else 0
+        spec = [None] * nd
+        if nd <= skip:
+            return NamedSharding(mesh, P(*spec))
+        if batch_ok:
+            spec[skip] = baxes
+        # KV caches: (R, B, S, KV, hd) / MLA (R, B, S, r): shard S
+        is_kv = nd - skip >= 3 and shape[skip + 1] > 1024
+        if is_kv:
+            seq_axes = tuple(leftover) + ("model",)
+            n = 1
+            for a in seq_axes:
+                n *= mesh.shape[a]
+            if shape[skip + 1] % n == 0:
+                spec[skip + 1] = seq_axes
+        else:
+            # SSM state: shard the largest model-divisible trailing dim
+            model_n = _axsize(mesh, "model")
+            cands = [i for i in range(skip + 1, nd)
+                     if shape[i] % model_n == 0 and shape[i] >= model_n]
+            if cands and model_n > 1:
+                spec[max(cands, key=lambda i: shape[i])] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shapes)
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,94 @@
+"""Batched serving driver: prefill + decode with a KV cache.
+
+CPU-sized example:
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch qwen2-0.5b --reduced --batch 4 --prompt-len 32 --gen 16
+
+Implements the production serve loop: one jitted prefill (builds the cache
+for the prompt), then jitted single-token decode steps with greedy/
+temperature sampling against the shared cache.  The decode path is exactly
+what the ``decode_32k`` / ``long_500k`` dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced_config
+from repro.models import transformer as T
+from repro.models.transformer import Batch
+
+
+def prefill(cfg, params, cache, tokens):
+    """Sequential prefill via the decode path (cache-exact)."""
+    b, s = tokens.shape
+    step = jax.jit(lambda p, c, tok, pos: T.decode_step(
+        cfg, p, c, Batch(tokens=tok), pos))
+    logits = None
+    for t in range(s):
+        logits, cache = step(params, cache, tokens[:, t:t + 1],
+                             jnp.int32(t))
+    return logits, cache
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced_config(args.arch) if args.reduced \
+        else get_config(args.arch)
+    if cfg.frontend_stub:
+        raise SystemExit(f"{cfg.name} is a modality-stub backbone; "
+                         "serve text archs here")
+    key = jax.random.key(args.seed)
+    params = T.init_params(cfg, key)
+    max_len = args.prompt_len + args.gen
+    cache = T.init_cache(cfg, args.batch, max_len)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+
+    t0 = time.time()
+    logits, cache = prefill(cfg, params, cache, prompts)
+    t_prefill = time.time() - t0
+
+    decode = jax.jit(lambda p, c, tok, pos: T.decode_step(
+        cfg, p, c, Batch(tokens=tok), pos))
+    toks = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    generated = [toks]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        pos = jnp.int32(args.prompt_len + i)
+        logits, cache = decode(params, cache, toks, pos)
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            toks = jax.random.categorical(
+                sub, logits[:, -1] / args.temperature)[:, None]
+        else:
+            toks = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        generated.append(toks)
+    t_decode = time.time() - t0
+    out = jnp.concatenate(generated, axis=1)
+    tput = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"[serve] prefill {args.prompt_len} toks in {t_prefill:.2f}s; "
+          f"decoded {args.gen-1} toks/seq x {args.batch} seqs "
+          f"({tput:.1f} tok/s)")
+    print(f"[serve] sample output ids: {np.asarray(out[0])[:12]}")
+    return {"tokens": np.asarray(out), "decode_tok_per_s": float(tput),
+            "prefill_s": t_prefill}
+
+
+if __name__ == "__main__":
+    main()

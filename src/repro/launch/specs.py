@@ -1,0 +1,71 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the Batch spec for an (arch x shape)
+cell; ``params_specs`` / ``cache_specs`` / ``opt_specs`` give the state
+trees.  Modality-stub archs (audio/vlm) get precomputed frame/patch
+embeddings instead of token ids, per the assignment.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import InputShape
+from repro.models import transformer as T
+from repro.models.common import ModelConfig
+from repro.optim import adamw
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> T.Batch:
+    b = shape.global_batch
+    s = shape.seq_len if shape.mode != "decode" else 1
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = embeds = positions = labels = None
+    if cfg.frontend_stub:
+        embeds = SDS((b, s, cfg.d_model), dtype)
+    else:
+        tokens = SDS((b, s), jnp.int32)
+    if cfg.mrope_sections:
+        positions = SDS((3, b, s), jnp.int32)
+    if shape.mode == "train":
+        labels = SDS((b, s), jnp.int32)
+    return T.Batch(tokens=tokens, embeds=embeds, positions=positions,
+                   labels=labels)
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.key(0)))
+
+
+def opt_specs(opt_cfg: adamw.AdamWConfig, params_shapes: Any) -> Any:
+    return jax.eval_shape(
+        functools.partial(adamw.init, opt_cfg), params_shapes)
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape) -> Any:
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def pos_spec() -> SDS:
+    return SDS((), jnp.int32)
+
+
+def tokens_per_step(cfg: ModelConfig, shape: InputShape) -> int:
+    if shape.mode == "decode":
+        return shape.global_batch           # one new token per sequence
+    return shape.global_batch * shape.seq_len
+
+
+def moment_dtype_for(cfg: ModelConfig) -> str:
+    """bf16 AdamW moments for the 100B+ cells so a single v5e pod holds the
+    optimizer (12 B/param fp32 moments would exceed 16 GiB/chip at 480B on
+    256 chips).  Recorded in EXPERIMENTS.md §Dry-run."""
+    return "bfloat16" if cfg.param_count() > 100e9 else "float32"

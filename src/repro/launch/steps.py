@@ -1,0 +1,60 @@
+"""Jittable step functions: train_step, prefill_step, serve_step."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.common import ModelConfig
+from repro.optim import adamw
+
+Array = jax.Array
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    remat: bool = True):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch: T.Batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: T.loss_fn(cfg, p, batch, remat=remat))(params)
+        params, opt_state, metrics = adamw.apply(opt_cfg, params, grads,
+                                                 opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """(params, batch) -> last-position logits (B, V).
+
+    Serving prefill: run the full-sequence stack; only the final position's
+    logits are needed to emit the first token.  (Cache writes are covered by
+    the decode cells; prefill isolates the sequence-parallel compute.)
+    """
+
+    def prefill_step(params, batch: T.Batch):
+        h, _ = T.hidden_states(cfg, params, batch)
+        return T._logits(cfg, params, h[:, -1:])
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mla_absorb: bool = False):
+    """(params, cache, batch, pos) -> (logits (B,1,V), cache)."""
+
+    def serve_step(params, cache, batch: T.Batch, pos):
+        return T.decode_step(cfg, params, cache, batch, pos,
+                             mla_absorb=mla_absorb)
+
+    return serve_step

@@ -1,0 +1,5 @@
+"""JAX model substrate: configs, layers, attention, MoE, SSM, transformer."""
+
+from . import attention, common, layers, moe, sharding, ssm, transformer  # noqa: F401
+from .common import ModelConfig, MoEConfig  # noqa: F401
+from .transformer import Batch  # noqa: F401

@@ -1,0 +1,423 @@
+"""Attention: GQA (RoPE, windows, softcap, M-RoPE) and MLA (DeepSeek-V2).
+
+Two execution paths:
+
+* **train/prefill** — block-sparse online-softmax attention in pure JAX
+  (``blockwise_attention``).  Only (q-block, kv-block) pairs that intersect
+  the causal/window mask are enumerated — *statically* — so compiled FLOPs
+  and memory match what a fused TPU kernel would do (the Pallas twin lives
+  in ``repro.kernels.flash_attention``).  This keeps the 32k-token cells
+  compilable: no (S, S) score tensor is ever materialized.
+* **decode** — single-token attention against a preallocated KV cache with
+  position masking.
+
+MLA keeps the compressed ``c_kv`` + shared rope key as the cache (the
+paper-adjacent trick: ship/store the compressed representation, expand near
+compute).  The decode path supports both the naive (expand-then-attend) and
+the absorbed (attend-in-latent-space) formulations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .layers import apply_mrope, apply_rope, rmsnorm, softcap
+
+Array = jax.Array
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Block-sparse online-softmax attention (pure JAX, statically masked pairs)
+# ---------------------------------------------------------------------------
+
+
+def _block_pairs(n_q: int, n_kv: int, q_block: int, kv_block: int,
+                 seq_offset: int, causal: bool,
+                 window: int) -> list[tuple[int, int]]:
+    """Statically enumerate (q_block, kv_block) pairs intersecting the mask.
+
+    Works in absolute positions, so unequal block sizes and
+    prefix-offset queries (``seq_offset = skv - sq``) are handled.  Pairs
+    are ordered by q block then kv block, which the online-softmax update
+    requires.  ``window`` prunes kv blocks entirely below the sliding
+    window.
+    """
+    pairs = []
+    for qi in range(n_q):
+        q_lo = qi * q_block + seq_offset        # first absolute q position
+        q_hi = q_lo + q_block - 1               # last absolute q position
+        for kj in range(n_kv):
+            k_lo = kj * kv_block
+            k_hi = k_lo + kv_block - 1
+            if causal and k_lo > q_hi:
+                continue                        # fully above the diagonal
+            if window and k_hi <= q_lo - window:
+                continue                        # fully below the window
+            pairs.append((qi, kj))
+    return pairs
+
+
+def blockwise_attention(q: Array, k: Array, v: Array, *,
+                        causal: bool = True,
+                        window: int = 0,
+                        logit_softcap: float = 0.0,
+                        q_block: int = 512,
+                        kv_block: int = 512,
+                        scale: float | None = None) -> Array:
+    """q: (B, Sq, H, Dh); k/v: (B, Skv, KV, Dh) with H = G*KV.
+
+    Returns (B, Sq, H, Dv).  Flash-attention algorithm expressed with
+    ``lax.scan`` over statically-enumerated block pairs.
+    """
+    b, sq, h, dh = q.shape
+    _, skv, kv_heads, dv = v.shape
+    g = h // kv_heads
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    assert sq % q_block == 0 and skv % kv_block == 0
+    n_q, n_kv = sq // q_block, skv // kv_block
+    scale = scale if scale is not None else dh ** -0.5
+
+    pairs = jnp.asarray(
+        _block_pairs(n_q, n_kv, q_block, kv_block, skv - sq, causal,
+                     window), jnp.int32)
+
+    qb = q.reshape(b, n_q, q_block, kv_heads, g, dh)
+    kb = k.reshape(b, n_kv, kv_block, kv_heads, dh)
+    vb = v.reshape(b, n_kv, kv_block, kv_heads, dv)
+
+    o0 = jnp.zeros((b, n_q, q_block, kv_heads, g, dv), jnp.float32)
+    m0 = jnp.full((b, n_q, q_block, kv_heads, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_q, q_block, kv_heads, g), jnp.float32)
+
+    q_pos_base = jnp.arange(q_block)
+    k_pos_base = jnp.arange(kv_block)
+    seq_offset = skv - sq  # decode-style alignment (q at the sequence end)
+
+    def body(carry, pair):
+        o, m, l = carry
+        qi, kj = pair[0], pair[1]
+        qblk = jax.lax.dynamic_index_in_dim(qb, qi, axis=1, keepdims=False)
+        kblk = jax.lax.dynamic_index_in_dim(kb, kj, axis=1, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vb, kj, axis=1, keepdims=False)
+        # scores: (b, q_block, kv, g, kv_block)
+        s = jnp.einsum("bqkgd,btkd->bqkgt", qblk.astype(jnp.float32),
+                       kblk.astype(jnp.float32)) * scale
+        if logit_softcap:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        qpos = qi * q_block + q_pos_base + seq_offset      # (q_block,)
+        kpos = kj * kv_block + k_pos_base                  # (kv_block,)
+        mask = jnp.ones((q_block, kv_block), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_blk = jnp.max(s, axis=-1)                        # (b,qb,kv,g)
+        m_old = jax.lax.dynamic_index_in_dim(m, qi, 1, keepdims=False)
+        l_old = jax.lax.dynamic_index_in_dim(l, qi, 1, keepdims=False)
+        o_old = jax.lax.dynamic_index_in_dim(o, qi, 1, keepdims=False)
+        m_new = jnp.maximum(m_old, m_blk)
+        # guard fully-masked rows (m_new == NEG_INF)
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        alpha = jnp.where(m_old <= NEG_INF / 2, 0.0,
+                          jnp.exp(m_old - m_safe))
+        l_new = l_old * alpha + jnp.sum(p, axis=-1)
+        o_new = o_old * alpha[..., None] + jnp.einsum(
+            "bqkgt,btkd->bqkgd", p, vblk.astype(jnp.float32))
+        o = jax.lax.dynamic_update_index_in_dim(o, o_new, qi, 1)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 1)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 1)
+        return (o, m, l), None
+
+    (o, m, l), _ = jax.lax.scan(body, (o0, m0, l0), pairs)
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return o.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def full_attention_reference(q, k, v, *, causal=True, window=0,
+                             logit_softcap=0.0, scale=None):
+    """O(S^2)-memory oracle used by tests (small shapes only)."""
+    b, sq, h, dh = q.shape
+    _, skv, kv_heads, dv = v.shape
+    g = h // kv_heads
+    scale = scale if scale is not None else dh ** -0.5
+    qg = q.reshape(b, sq, kv_heads, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,btkd->bqkgt", qg,
+                   k.astype(jnp.float32)) * scale
+    if logit_softcap:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    qpos = jnp.arange(sq) + (skv - sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgt,btkd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=0,
+                     logit_softcap=0.0, scale=None):
+    """Single-token attention over a preallocated cache.
+
+    q: (B, 1, H, Dh); caches: (B, S_max, KV, Dh); cache_len: () int32 —
+    number of valid positions INCLUDING the token just inserted.
+    """
+    b, _, h, dh = q.shape
+    _, s_max, kv_heads, dv = v_cache.shape
+    g = h // kv_heads
+    scale = scale if scale is not None else dh ** -0.5
+    qg = q.reshape(b, kv_heads, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg,
+                   k_cache.astype(jnp.float32)) * scale
+    if logit_softcap:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    kpos = jnp.arange(s_max)
+    valid = kpos < cache_len
+    if window:
+        valid &= kpos > cache_len - 1 - window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, h, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    d, h, kvh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "w_q": (jax.random.normal(ks[0], (d, h, hd)) * s).astype(dtype),
+        "w_k": (jax.random.normal(ks[1], (d, kvh, hd)) * s).astype(dtype),
+        "w_v": (jax.random.normal(ks[2], (d, kvh, hd)) * s).astype(dtype),
+        "w_o": (jax.random.normal(ks[3], (h, hd, d))
+                * (h * hd) ** -0.5).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((h, hd), dtype)
+        p["b_k"] = jnp.zeros((kvh, hd), dtype)
+        p["b_v"] = jnp.zeros((kvh, hd), dtype)
+    return p
+
+
+def _rope_or_mrope(cfg: ModelConfig, x: Array, positions: Array) -> Array:
+    if not cfg.use_rope:
+        return x
+    if cfg.mrope_sections:
+        if positions.ndim == 2:     # text-only: t=h=w position
+            positions = jnp.broadcast_to(positions[None],
+                                         (3,) + positions.shape)
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def gqa_forward(cfg: ModelConfig, params: dict, x: Array,
+                positions: Array, *, window: int = 0,
+                q_block: int = 512, kv_block: int = 512) -> Array:
+    """Full-sequence (train / prefill) GQA.
+
+    Uses the recompute-based flash VJP so training never materializes or
+    saves (S, S) probability tensors.
+    """
+    from .flash import flash_attention  # local import: avoids import cycle
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["w_v"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["b_q"], k + params["b_k"], v + params["b_v"]
+    q = _rope_or_mrope(cfg, q, positions)
+    k = _rope_or_mrope(cfg, k, positions)
+    o = flash_attention(q, k, v, causal=True, window=window,
+                        logit_softcap=cfg.attn_logit_softcap,
+                        q_block=q_block, kv_block=kv_block,
+                        p_bf16=cfg.attn_p_bf16)
+    return jnp.einsum("bshk,hkd->bsd", o, params["w_o"])
+
+
+class KVCache(NamedTuple):
+    k: Array       # (B, S_max, KV, Dh)
+    v: Array       # (B, S_max, KV, Dh)
+
+
+def gqa_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype) -> KVCache:
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return KVCache(k=jnp.zeros((batch, max_len, kvh, hd), dtype),
+                   v=jnp.zeros((batch, max_len, kvh, hd), dtype))
+
+
+def gqa_decode(cfg: ModelConfig, params: dict, x: Array, cache: KVCache,
+               pos: Array, *, window: int = 0) -> tuple[Array, KVCache]:
+    """One-token decode. x: (B, 1, d); pos: () int32 index to write."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["w_v"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["b_q"], k + params["b_k"], v + params["b_v"]
+    pos_b = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q = _rope_or_mrope(cfg, q, pos_b)
+    k = _rope_or_mrope(cfg, k, pos_b)
+    kc = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                      (0, pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                      (0, pos, 0, 0))
+    o = decode_attention(q, kc, vc, pos + 1, window=window,
+                         logit_softcap=cfg.attn_logit_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["w_o"])
+    return out, KVCache(kc, vc)
+
+
+# ---------------------------------------------------------------------------
+# MLA block (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    p: dict = {}
+    if cfg.q_lora_rank:
+        p["w_dq"] = (jax.random.normal(ks[0], (d, cfg.q_lora_rank))
+                     * s).astype(dtype)
+        p["q_norm"] = {"scale": jnp.zeros((cfg.q_lora_rank,), jnp.float32)}
+        p["w_uq"] = (jax.random.normal(ks[1], (cfg.q_lora_rank, h, qk))
+                     * cfg.q_lora_rank ** -0.5).astype(dtype)
+    else:
+        p["w_q"] = (jax.random.normal(ks[1], (d, h, qk)) * s).astype(dtype)
+    p["w_dkv"] = (jax.random.normal(ks[2], (d, cfg.kv_lora_rank))
+                  * s).astype(dtype)
+    p["kv_norm"] = {"scale": jnp.zeros((cfg.kv_lora_rank,), jnp.float32)}
+    p["w_kr"] = (jax.random.normal(ks[3], (d, cfg.qk_rope_dim))
+                 * s).astype(dtype)
+    p["w_uk"] = (jax.random.normal(ks[4], (cfg.kv_lora_rank, h,
+                                           cfg.qk_nope_dim))
+                 * cfg.kv_lora_rank ** -0.5).astype(dtype)
+    p["w_uv"] = (jax.random.normal(ks[5], (cfg.kv_lora_rank, h,
+                                           cfg.v_head_dim))
+                 * cfg.kv_lora_rank ** -0.5).astype(dtype)
+    p["w_o"] = (jax.random.normal(ks[6], (h, cfg.v_head_dim, d))
+                * (h * cfg.v_head_dim) ** -0.5).astype(dtype)
+    return p
+
+
+def _mla_q(cfg: ModelConfig, params: dict, x: Array,
+           positions: Array) -> tuple[Array, Array]:
+    """Returns (q_nope (B,S,H,nope), q_rope (B,S,H,rope))."""
+    if cfg.q_lora_rank:
+        cq = rmsnorm(params["q_norm"], x @ params["w_dq"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    q_nope = q[..., :cfg.qk_nope_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_forward(cfg: ModelConfig, params: dict, x: Array,
+                positions: Array, *, q_block: int = 512,
+                kv_block: int = 512) -> Array:
+    """Full-sequence MLA (train / prefill): expand latents, then attend."""
+    q_nope, q_rope = _mla_q(cfg, params, x, positions)
+    c_kv = rmsnorm(params["kv_norm"], x @ params["w_dkv"], cfg.norm_eps)
+    k_pe = apply_rope((x @ params["w_kr"])[:, :, None, :], positions,
+                      cfg.rope_theta)                       # (B,S,1,rope)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uv"])
+    from .flash import flash_attention  # local import: avoids import cycle
+    h = cfg.num_heads
+    k_pe_b = jnp.broadcast_to(k_pe, k_pe.shape[:2] + (h, cfg.qk_rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_pe_b], axis=-1)
+    o = flash_attention(q, k, v, causal=True,
+                        q_block=q_block, kv_block=kv_block,
+                        scale=(cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5,
+                        p_bf16=cfg.attn_p_bf16)
+    return jnp.einsum("bshk,hkd->bsd", o, params["w_o"])
+
+
+class MLACache(NamedTuple):
+    c_kv: Array    # (B, S_max, kv_lora)
+    k_pe: Array    # (B, S_max, rope_dim)
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        k_pe=jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype))
+
+
+def mla_decode(cfg: ModelConfig, params: dict, x: Array, cache: MLACache,
+               pos: Array, *, absorb: bool = False
+               ) -> tuple[Array, MLACache]:
+    """One-token MLA decode.
+
+    ``absorb=False`` — naive: expand k/v for the whole cache every step
+    (O(S * kv_lora * H * dh) per step).
+    ``absorb=True``  — absorbed: fold w_uk into q and attend directly in
+    the compressed latent space (O(S * kv_lora) per head) — the §Perf
+    optimization for the MLA decode cells.
+    """
+    b = x.shape[0]
+    pos_b = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(cfg, params, x, pos_b)
+    c_new = rmsnorm(params["kv_norm"], x @ params["w_dkv"], cfg.norm_eps)
+    kpe_new = apply_rope((x @ params["w_kr"])[:, :, None, :], pos_b,
+                         cfg.rope_theta)[:, :, 0, :]
+    c_kv = jax.lax.dynamic_update_slice(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), (0, pos, 0))
+    k_pe = jax.lax.dynamic_update_slice(
+        cache.k_pe, kpe_new.astype(cache.k_pe.dtype), (0, pos, 0))
+    s_max = c_kv.shape[1]
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    kpos = jnp.arange(s_max)
+    valid = kpos <= pos
+    if absorb:
+        # q' = q_nope @ w_uk  -> latent space: (B,1,H,kv_lora)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, params["w_uk"])
+        s = (jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                        c_kv.astype(jnp.float32))
+             + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                          k_pe.astype(jnp.float32))) * scale
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", p,
+                         c_kv.astype(jnp.float32))     # latent context
+        o = jnp.einsum("bshr,rhk->bshk", ctx.astype(x.dtype),
+                       params["w_uv"])
+    else:
+        k_nope = jnp.einsum("btr,rhn->bthn", c_kv, params["w_uk"])
+        v = jnp.einsum("btr,rhk->bthk", c_kv, params["w_uv"])
+        s = (jnp.einsum("bshn,bthn->bhst", q_nope.astype(jnp.float32),
+                        k_nope.astype(jnp.float32))
+             + jnp.einsum("bshn,btn->bhst", q_rope.astype(jnp.float32),
+                          k_pe.astype(jnp.float32))) * scale
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhst,bthk->bshk", p,
+                       v.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["w_o"])
+    return out, MLACache(c_kv, k_pe)

@@ -1,0 +1,140 @@
+"""The hand-tracking CNNs (DetNet / KeyNet) as runnable JAX models.
+
+The semi-analytical model consumes these networks as layer *tables*
+(`repro.core.handtracking`); this module makes the same networks
+executable, layer-for-layer, from the geometry recorded in each
+:class:`LayerSpec`, so that:
+
+* the analytic MAC/weight counts are validated against the traced model
+  (`tests/test_cnn_latency.py`);
+* the end-to-end hand-tracking example runs real inference;
+* the RBE int8 Pallas kernel gets a real workload: pointwise convolutions
+  and the FC head execute on the quantized `rbe_matmul` path when
+  ``use_rbe_int8=True`` (a 1x1 conv is a matmul over pixels — the RBE's
+  native layout).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.handtracking import build_detnet, build_keynet
+from repro.core.workloads import LayerKind, NNWorkload
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class HandCNN:
+    """Executable twin of a hand-tracking layer table."""
+
+    workload: NNWorkload
+    input_hw: tuple[int, int]
+
+    @classmethod
+    def detnet(cls) -> "HandCNN":
+        return cls(build_detnet(), (240, 320))
+
+    @classmethod
+    def keynet(cls) -> "HandCNN":
+        return cls(build_keynet(), (96, 96))
+
+    # ------------------------------------------------------------------
+    def init(self, key: Array, dtype=jnp.float32) -> list[dict]:
+        params = []
+        keys = jax.random.split(key, len(self.workload.layers))
+        for spec, k in zip(self.workload.layers, keys):
+            if spec.kind is LayerKind.FC:
+                w = jax.random.normal(
+                    k, (spec.in_act_bytes, spec.out_act_bytes)) \
+                    * spec.in_act_bytes ** -0.5
+                params.append({"w": w.astype(dtype),
+                               "b": jnp.zeros((spec.out_act_bytes,),
+                                              dtype)})
+            elif spec.kind is LayerKind.DEPTHWISE:
+                w = jax.random.normal(k, (spec.k, spec.k, 1, spec.cin)) \
+                    * spec.k ** -1.0
+                params.append({"w": w.astype(dtype),
+                               "b": jnp.zeros((spec.cin,), dtype)})
+            else:
+                fan = spec.k * spec.k * spec.cin
+                w = jax.random.normal(
+                    k, (spec.k, spec.k, spec.cin, spec.cout)) \
+                    * fan ** -0.5
+                params.append({"w": w.astype(dtype),
+                               "b": jnp.zeros((spec.cout,), dtype)})
+        return params
+
+    def apply(self, params: list[dict], x: Array,
+              use_rbe_int8: bool = False) -> Array:
+        """x: (B, H, W, 1). Returns the head output (B, out).
+
+        ``use_rbe_int8`` routes pointwise convs and the FC head through
+        the RBE-adapted int8 Pallas kernel (interpret mode on CPU) when
+        the dims are 128-aligned.
+
+        Layers named ``head.*`` are parallel heads over the trunk output
+        (DetNet's cls/box heads); their outputs are flattened and
+        concatenated.
+        """
+        heads: list[Array] = []
+        trunk: Array | None = None
+        for spec, p in zip(self.workload.layers, params):
+            if spec.name.startswith("head.") and spec.kind is not \
+                    LayerKind.FC:
+                if trunk is None:
+                    trunk = x
+                y = jax.lax.conv_general_dilated(
+                    trunk, p["w"], (spec.stride, spec.stride), "SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+                heads.append(y.reshape(y.shape[0], -1))
+                continue
+            if spec.kind is LayerKind.FC:
+                b = x.shape[0]
+                flat = x.reshape(b, -1)
+                x = flat @ p["w"] + p["b"]
+                continue
+            strides = (spec.stride, spec.stride)
+            if spec.kind is LayerKind.DEPTHWISE:
+                y = jax.lax.conv_general_dilated(
+                    x, p["w"], strides, "SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                    feature_group_count=spec.cin)
+            elif (spec.k == 1 and use_rbe_int8
+                    and spec.cin % 128 == 0 and spec.cout % 128 == 0):
+                from repro.kernels.rbe_matmul import rbe_matmul
+                b, h, w, c = x.shape
+                y = rbe_matmul(x.reshape(b * h * w, c),
+                               p["w"].reshape(c, spec.cout))
+                y = y.reshape(b, h, w, spec.cout).astype(x.dtype)
+            else:
+                y = jax.lax.conv_general_dilated(
+                    x, p["w"], strides, "SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jax.nn.relu(y + p["b"])
+        if heads:
+            return jnp.concatenate(heads, axis=-1)
+        return x
+
+    def traced_macs(self, batch: int = 1) -> int:
+        """MACs of the real traced model (validates the analytic table)."""
+        total = 0
+        area = self.input_hw[0] * self.input_hw[1]
+        for spec in self.workload.layers:
+            if spec.kind is LayerKind.FC:
+                total += spec.in_act_bytes * spec.out_act_bytes
+                continue
+            area = math.ceil(area / (spec.stride * spec.stride)) \
+                if spec.stride > 1 else area
+            if spec.kind is LayerKind.DEPTHWISE:
+                total += spec.k * spec.k * spec.cin * area
+            else:
+                total += spec.k * spec.k * spec.cin * spec.cout * area
+        return total * batch
+
+    def param_bytes(self) -> int:
+        return self.workload.total_weight_bytes

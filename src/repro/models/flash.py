@@ -1,0 +1,236 @@
+"""Flash attention with a recompute-based custom VJP (pure JAX).
+
+Without this, the backward of the blockwise-attention scan saves the full
+(S, S) attention probabilities per layer (~15 GB/device/layer at the
+train_4k cell) — exactly the memory wall flash attention exists to remove.
+The custom VJP saves only (o, lse) per row; the backward pass re-enumerates
+the same static block pairs and recomputes scores from q/k blocks.
+
+This is the lowering-path twin of the Pallas kernel in
+``repro.kernels.flash_attention`` (same tiling, same online-softmax
+algorithm): the Pallas kernel is the TPU-native implementation, this module
+is the SPMD-shardable stand-in the dry-run compiles.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .attention import _block_pairs, NEG_INF
+
+Array = jax.Array
+
+
+def _fwd_pass(q, k, v, pairs, *, causal, window, logit_softcap, q_block,
+              kv_block, scale, p_bf16=False):
+    """Returns (out (B,S,H,Dv), m (B,S,H), l (B,S,H)) — fp32 stats."""
+    b, sq, h, dh = q.shape
+    _, skv, kv_heads, dv = v.shape
+    g = h // kv_heads
+    n_q = sq // q_block
+    seq_offset = skv - sq
+
+    qb = q.reshape(b, n_q, q_block, kv_heads, g, dh)
+    kb = k.reshape(b, skv // kv_block, kv_block, kv_heads, dh)
+    vb = v.reshape(b, skv // kv_block, kv_block, kv_heads, dv)
+
+    o0 = jnp.zeros((b, n_q, q_block, kv_heads, g, dv), jnp.float32)
+    m0 = jnp.full((b, n_q, q_block, kv_heads, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_q, q_block, kv_heads, g), jnp.float32)
+
+    q_pos = jnp.arange(q_block)
+    k_pos = jnp.arange(kv_block)
+
+    def body(carry, pair):
+        o, m, l = carry
+        qi, kj = pair[0], pair[1]
+        qblk = jax.lax.dynamic_index_in_dim(qb, qi, 1, keepdims=False)
+        kblk = jax.lax.dynamic_index_in_dim(kb, kj, 1, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vb, kj, 1, keepdims=False)
+        s = jnp.einsum("bqkgd,btkd->bqkgt", qblk.astype(jnp.float32),
+                       kblk.astype(jnp.float32)) * scale
+        if logit_softcap:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        qp = qi * q_block + q_pos + seq_offset
+        kp = kj * kv_block + k_pos
+        mask = jnp.ones((q_block, kv_block), bool)
+        if causal:
+            mask &= kp[None, :] <= qp[:, None]
+        if window:
+            mask &= kp[None, :] > qp[:, None] - window
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_blk = jnp.max(s, axis=-1)
+        m_old = jax.lax.dynamic_index_in_dim(m, qi, 1, keepdims=False)
+        l_old = jax.lax.dynamic_index_in_dim(l, qi, 1, keepdims=False)
+        o_old = jax.lax.dynamic_index_in_dim(o, qi, 1, keepdims=False)
+        m_new = jnp.maximum(m_old, m_blk)
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        alpha = jnp.where(m_old <= NEG_INF / 2, 0.0,
+                          jnp.exp(m_old - m_safe))
+        l_new = l_old * alpha + jnp.sum(p, axis=-1)
+        if p_bf16:   # §Perf: halve the dominant HBM traffic of the p@v path
+            pv = jnp.einsum("bqkgt,btkd->bqkgd", p.astype(jnp.bfloat16),
+                            vblk.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        else:
+            pv = jnp.einsum("bqkgt,btkd->bqkgd", p,
+                            vblk.astype(jnp.float32))
+        o_new = o_old * alpha[..., None] + pv
+        o = jax.lax.dynamic_update_index_in_dim(o, o_new, qi, 1)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 1)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 1)
+        return (o, m, l), None
+
+    (o, m, l), _ = jax.lax.scan(body, (o0, m0, l0), pairs)
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    out = o.reshape(b, sq, h, dv).astype(q.dtype)
+    m = m.reshape(b, sq, kv_heads, g)
+    l = l.reshape(b, sq, kv_heads, g)
+    return out, m, l
+
+
+def _bwd_pass(q, k, v, out, m, l, dout, pairs, *, causal, window,
+              logit_softcap, q_block, kv_block, scale, p_bf16=False):
+    b, sq, h, dh = q.shape
+    _, skv, kv_heads, dv = v.shape
+    g = h // kv_heads
+    n_q = sq // q_block
+    n_kv = skv // kv_block
+    seq_offset = skv - sq
+
+    qb = q.reshape(b, n_q, q_block, kv_heads, g, dh).astype(jnp.float32)
+    kb = k.reshape(b, n_kv, kv_block, kv_heads, dh).astype(jnp.float32)
+    vb = v.reshape(b, n_kv, kv_block, kv_heads, dv).astype(jnp.float32)
+    do = dout.reshape(b, n_q, q_block, kv_heads, g, dv).astype(jnp.float32)
+    ob = out.reshape(b, n_q, q_block, kv_heads, g, dv).astype(jnp.float32)
+    mb = m.reshape(b, n_q, q_block, kv_heads, g)
+    lb = l.reshape(b, n_q, q_block, kv_heads, g)
+    # delta_i = sum_d do_i * o_i  (per row)
+    delta = jnp.sum(do * ob, axis=-1)
+
+    dq0 = jnp.zeros_like(qb)
+    dk0 = jnp.zeros_like(kb)
+    dv0 = jnp.zeros_like(vb)
+
+    q_pos = jnp.arange(q_block)
+    k_pos = jnp.arange(kv_block)
+
+    def body(carry, pair):
+        dq, dk, dv_ = carry
+        qi, kj = pair[0], pair[1]
+        qblk = jax.lax.dynamic_index_in_dim(qb, qi, 1, keepdims=False)
+        kblk = jax.lax.dynamic_index_in_dim(kb, kj, 1, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vb, kj, 1, keepdims=False)
+        doblk = jax.lax.dynamic_index_in_dim(do, qi, 1, keepdims=False)
+        mblk = jax.lax.dynamic_index_in_dim(mb, qi, 1, keepdims=False)
+        lblk = jax.lax.dynamic_index_in_dim(lb, qi, 1, keepdims=False)
+        dlt = jax.lax.dynamic_index_in_dim(delta, qi, 1, keepdims=False)
+        s_raw = jnp.einsum("bqkgd,btkd->bqkgt", qblk, kblk) * scale
+        if logit_softcap:
+            t = jnp.tanh(s_raw / logit_softcap)
+            s = logit_softcap * t
+        else:
+            s = s_raw
+        qp = qi * q_block + q_pos + seq_offset
+        kp = kj * kv_block + k_pos
+        mask = jnp.ones((q_block, kv_block), bool)
+        if causal:
+            mask &= kp[None, :] <= qp[:, None]
+        if window:
+            mask &= kp[None, :] > qp[:, None] - window
+        m_safe = jnp.where(mblk <= NEG_INF / 2, 0.0, mblk)
+        l_safe = jnp.maximum(lblk, 1e-30)
+        p = jnp.exp(s - m_safe[..., None]) / l_safe[..., None]
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        dp = jnp.einsum("bqkgd,btkd->bqkgt", doblk, vblk)
+        ds = p * (dp - dlt[..., None])
+        if logit_softcap:
+            ds = ds * (1.0 - jnp.square(t))
+        ds = ds * scale
+        if p_bf16:
+            f16 = jnp.bfloat16
+            dq_blk = jnp.einsum("bqkgt,btkd->bqkgd", ds.astype(f16),
+                                kblk.astype(f16),
+                                preferred_element_type=jnp.float32)
+            dk_blk = jnp.einsum("bqkgt,bqkgd->btkd", ds.astype(f16),
+                                qblk.astype(f16),
+                                preferred_element_type=jnp.float32)
+            dv_blk = jnp.einsum("bqkgt,bqkgd->btkd", p.astype(f16),
+                                doblk.astype(f16),
+                                preferred_element_type=jnp.float32)
+        else:
+            dq_blk = jnp.einsum("bqkgt,btkd->bqkgd", ds, kblk)
+            dk_blk = jnp.einsum("bqkgt,bqkgd->btkd", ds, qblk)
+            dv_blk = jnp.einsum("bqkgt,bqkgd->btkd", p, doblk)
+        dq = dq.at[:, qi].add(dq_blk)
+        dk = dk.at[:, kj].add(dk_blk)
+        dv_ = dv_.at[:, kj].add(dv_blk)
+        return (dq, dk, dv_), None
+
+    (dq, dk, dv_), _ = jax.lax.scan(body, (dq0, dk0, dv0), pairs)
+    dq = dq.reshape(b, sq, h, dh).astype(q.dtype)
+    dk = dk.reshape(b, skv, kv_heads, dh).astype(k.dtype)
+    dv_ = dv_.reshape(b, skv, kv_heads, dv).astype(v.dtype)
+    return dq, dk, dv_
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal: bool, window: int, logit_softcap: float,
+                q_block: int, kv_block: int, scale: float,
+                n_q: int, n_kv: int, seq_offset: int,
+                p_bf16: bool = False):
+    # NB: keep `pairs` as a host numpy array — a jnp constant created here
+    # would be cached across traces and leak tracers under jax.checkpoint.
+    import numpy as np
+    pairs = np.asarray(
+        _block_pairs(n_q, n_kv, q_block, kv_block, seq_offset, causal,
+                     window), np.int32)
+    kw = dict(causal=causal, window=window, logit_softcap=logit_softcap,
+              q_block=q_block, kv_block=kv_block, scale=scale,
+              p_bf16=p_bf16)
+
+    @jax.custom_vjp
+    def fa(q, k, v):
+        out, _, _ = _fwd_pass(q, k, v, jnp.asarray(pairs), **kw)
+        return out
+
+    def fa_fwd(q, k, v):
+        out, m, l = _fwd_pass(q, k, v, jnp.asarray(pairs), **kw)
+        return out, (q, k, v, out, m, l)
+
+    def fa_bwd(res, dout):
+        q, k, v, out, m, l = res
+        return _bwd_pass(q, k, v, out, m, l, dout, jnp.asarray(pairs),
+                         **kw)
+
+    fa.defvjp(fa_fwd, fa_bwd)
+    return fa
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int = 0, logit_softcap: float = 0.0,
+                    q_block: int = 512, kv_block: int = 512,
+                    scale: float | None = None,
+                    p_bf16: bool = False) -> Array:
+    """Memory-optimal attention: O(S) residuals instead of O(S^2).
+
+    Same signature/semantics as
+    :func:`repro.models.attention.blockwise_attention`.
+    """
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    assert sq % q_block == 0 and skv % kv_block == 0
+    scale = float(scale if scale is not None else dh ** -0.5)
+    fa = _make_flash(bool(causal), int(window), float(logit_softcap),
+                     int(q_block), int(kv_block), scale,
+                     sq // q_block, skv // kv_block, skv - sq,
+                     bool(p_bf16))
+    return fa(q, k, v)

@@ -1,0 +1,155 @@
+"""Elementary layers: norms, RoPE/M-RoPE, FFNs, embeddings, softcap."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+
+Array = jax.Array
+
+
+def compute_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int) -> dict:
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    """RMS norm with (1+scale) parameterization (Gemma/LLaMA style)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"])).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)           # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions3: Array, theta: float,
+                sections: Tuple[int, ...]) -> Array:
+    """Multimodal RoPE (Qwen2-VL): the half-dim frequency bands are split
+    into (temporal, height, width) sections, each rotated by its own
+    position stream.
+
+    x: (B, S, H, D); positions3: (3, B, S) int32.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_frequencies(x.shape[-1], theta)            # (half,)
+    # build a per-frequency position by selecting the t/h/w stream
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)),
+        jnp.asarray(sections),
+        total_repeat_length=half)                           # (half,)
+    pos = positions3.astype(jnp.float32)                    # (3, B, S)
+    pos_per_freq = jnp.take(pos, sec_id, axis=0)            # (half, B, S)
+    ang = jnp.einsum("fbs,f->bsf", pos_per_freq, freqs)     # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Softcap (Gemma-2)
+# ---------------------------------------------------------------------------
+
+
+def softcap(x: Array, cap: float) -> Array:
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFNs
+# ---------------------------------------------------------------------------
+
+
+def dense_ffn_init(key: Array, d: int, d_ff: int, kind: str,
+                   dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_out = d_ff ** -0.5
+    p = {
+        "w_up": (jax.random.normal(k2, (d, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d)) * s_out).astype(dtype),
+    }
+    if kind == "swiglu":
+        p["w_gate"] = (jax.random.normal(k1, (d, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def dense_ffn(params: dict, x: Array, kind: str) -> Array:
+    up = x @ params["w_up"]
+    if kind == "swiglu":
+        gate = jax.nn.silu(x @ params["w_gate"])
+        h = gate * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(key: Array, vocab: int, d: int, dtype) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d)) * d ** -0.5
+                      ).astype(dtype)}
+
+
+def embed(params: dict, tokens: Array, scale: bool, d: int) -> Array:
+    x = jnp.take(params["table"], tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(d ** 0.5, x.dtype)
+    return x
+
+
+def unembed_init(key: Array, vocab: int, d: int, dtype) -> dict:
+    return {"w": (jax.random.normal(key, (d, vocab)) * d ** -0.5
+                  ).astype(dtype)}
+
+
+def unembed(params: dict, x: Array, cap: float = 0.0,
+            tied_table: Optional[Array] = None) -> Array:
+    if tied_table is not None:
+        logits = x @ tied_table.T
+    else:
+        logits = x @ params["w"]
+    return softcap(logits, cap)

@@ -1,0 +1,192 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based dispatch.
+
+Dispatch is **scatter-based**, not one-hot-einsum-based: tokens are grouped,
+ranked within (group, expert) via a cumulative count, and scattered into a
+static ``(G, E, C, d)`` buffer.  This keeps compiled FLOPs equal to the
+*active-expert* FLOPs (x capacity factor) — a one-hot dispatch einsum would
+add O(T*E*C*d) fake FLOPs that poison the roofline analysis.
+
+Sharding: tokens/groups ride the batch ("data") axis, experts ride the
+"model" axis (expert parallelism).  The combine step's gather over the
+expert-sharded buffer induces one all-reduce over the model axis per MoE
+layer — the same collective a tensor-parallel dense FFN would need.
+
+Supports the assigned variants:
+* Arctic    — 128 experts top-2 **plus a dense residual FFN** in parallel;
+* DeepSeek  — 160 routed top-6 **plus 2 shared (always-on) experts**;
+* Jamba     — 16 experts top-2 on every 2nd layer.
+
+For single-token decode (S == 1) the whole batch forms one group so the
+capacity math stays tight and dropless-ish (see ``_group_tokens``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, MoEConfig
+from .layers import dense_ffn, dense_ffn_init
+from .sharding import BATCH, MODEL, constrain
+
+Array = jax.Array
+
+GROUP_SIZE = 512     # tokens per routing group (training/prefill)
+
+
+def moe_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.moe
+    assert m is not None
+    d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
+    ks = jax.random.split(key, 6)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * s_in
+                   ).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) * s_out).astype(dtype),
+    }
+    if m.num_shared_experts:
+        p["shared"] = dense_ffn_init(ks[4], d, f * m.num_shared_experts,
+                                     cfg.ffn_kind, dtype)
+    if m.dense_residual:
+        p["residual"] = dense_ffn_init(ks[5], d, cfg.d_ff, cfg.ffn_kind,
+                                       dtype)
+    return p
+
+
+def _group_tokens(x2d: Array, m: MoEConfig) -> tuple[Array, int]:
+    """Reshape (T, d) -> (G, gs, d) with a capacity-friendly group size."""
+    t = x2d.shape[0]
+    gs = min(GROUP_SIZE, t)
+    # groups must tile the token count
+    while t % gs:
+        gs //= 2
+    gs = max(gs, 1)
+    return x2d.reshape(t // gs, gs, x2d.shape[1]), gs
+
+
+def _capacity(gs: int, m: MoEConfig) -> int:
+    c = math.ceil(gs * m.top_k * m.capacity_factor / m.num_experts)
+    return max(1, min(c, gs))
+
+
+def moe_apply(cfg: ModelConfig, params: dict, x: Array,
+              train: bool = True) -> tuple[Array, Array]:
+    """x: (B, S, d). Returns (out (B, S, d), aux_loss ())."""
+    m = cfg.moe
+    assert m is not None
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    x2d = x.reshape(b * s, d)
+    xg, gs = _group_tokens(x2d, m)                    # (G, gs, d)
+    g = xg.shape[0]
+    cap = _capacity(gs, m)
+
+    # ---- routing (fp32) ----
+    logits = xg.astype(jnp.float32) @ params["router"]         # (G, gs, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # (G, gs, k)
+    top_p = top_p / jnp.maximum(
+        jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # ---- aux load-balancing loss (Switch-style) ----
+    me = jnp.mean(probs, axis=1)                               # (G, E)
+    one_hot_top1 = jax.nn.one_hot(top_e[..., 0], e)
+    ce = jnp.mean(one_hot_top1, axis=1)                        # (G, E)
+    aux = jnp.mean(jnp.sum(me * ce, axis=-1)) * e * m.aux_loss_weight
+
+    # ---- rank within (group, expert): position = #earlier picks of e ----
+    sel = jax.nn.one_hot(top_e, e, dtype=jnp.int32)            # (G, gs, k, E)
+    sel_flat = sel.reshape(g, gs * k, e)
+    pos_flat = jnp.cumsum(sel_flat, axis=1) - sel_flat         # exclusive
+    pos = jnp.sum(pos_flat.reshape(g, gs, k, e) * sel, axis=-1)  # (G, gs, k)
+    keep = pos < cap
+
+    # ---- scatter tokens into the (G, E, C, d) expert buffer ----
+    buf = jnp.zeros((g, e, cap, d), x.dtype)
+    gi = jnp.broadcast_to(jnp.arange(g)[:, None, None], (g, gs, k))
+    slot = jnp.where(keep, pos, cap - 1)
+    src = jnp.broadcast_to(xg[:, :, None, :], (g, gs, k, d))
+    src = jnp.where(keep[..., None], src, 0)
+    buf = buf.at[gi, top_e, slot].add(src, mode="drop")
+    buf = constrain(buf, BATCH, MODEL, None, None)
+
+    # ---- expert FFN: einsum over the expert-sharded buffer ----
+    if cfg.moe_partial_sum:
+        # §Perf "a2a-reshard" dispatch: scatter locally (G stays on the
+        # batch axes — cheap), then RESHARD the buffer so groups gather
+        # while d shards over "data" (a dim-swap all-to-all, buffer-sized
+        # traffic).  Expert weights are FSDP-sharded on their contraction
+        # dims (see launch/partitioning.py), so both expert einsums
+        # contract locally and weight *gradients* are complete per shard —
+        # no weight-sized all-gathers or fp32 grad all-reduces, which is
+        # what made the baseline collective-bound.
+        buf = constrain(buf, None, MODEL, None, "data")
+    up = jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    if cfg.moe_partial_sum:
+        up = constrain(up, None, MODEL, None, "data")   # reduce-scatter f
+    if cfg.ffn_kind == "swiglu":
+        gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf,
+                                      params["w_gate"]))
+        if cfg.moe_partial_sum:
+            gate = constrain(gate, None, MODEL, None, "data")
+        h = gate * up
+    else:
+        h = jax.nn.gelu(up)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    if cfg.moe_partial_sum:
+        out_buf = constrain(out_buf, None, MODEL, None, "data")
+    else:
+        out_buf = constrain(out_buf, BATCH, MODEL, None, None)
+
+    # ---- combine: gather each token's k slots, weight by router prob ----
+    gathered = out_buf[gi, top_e, slot]                        # (G, gs, k, d)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    yg = jnp.einsum("gskd,gsk->gsd", gathered,
+                    top_p.astype(gathered.dtype))
+    y = yg.reshape(b, s, d)
+    y = constrain(y, BATCH, None, None)
+
+    # ---- always-on branches ----
+    if "shared" in params:
+        y = y + dense_ffn(params["shared"], x, cfg.ffn_kind)
+    if "residual" in params:
+        y = y + dense_ffn(params["residual"], x, cfg.ffn_kind)
+    return y, aux.astype(jnp.float32)
+
+
+def moe_ref(cfg: ModelConfig, params: dict, x: Array) -> Array:
+    """Dense oracle: every token through its top-k experts, no capacity.
+
+    O(T * k * expert) compute via gathered per-token expert weights — only
+    usable at test sizes, but drop-free: used to validate ``moe_apply`` up
+    to capacity drops.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    logits = x2d.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+    wg = params["w_gate"][top_e]        # (T, k, d, f)
+    wu = params["w_up"][top_e]
+    wd = params["w_down"][top_e]
+    up = jnp.einsum("td,tkdf->tkf", x2d, wu)
+    if cfg.ffn_kind == "swiglu":
+        h = jax.nn.silu(jnp.einsum("td,tkdf->tkf", x2d, wg)) * up
+    else:
+        h = jax.nn.gelu(up)
+    yk = jnp.einsum("tkf,tkfd->tkd", h, wd)
+    y = jnp.einsum("tkd,tk->td", yk, top_p.astype(yk.dtype))
+    y = y.reshape(b, s, d)
+    if "shared" in params:
+        y = y + dense_ffn(params["shared"], x, cfg.ffn_kind)
+    if "residual" in params:
+        y = y + dense_ffn(params["residual"], x, cfg.ffn_kind)
+    return y

@@ -1,0 +1,56 @@
+"""Activation-sharding helpers usable inside model code.
+
+Model code calls :func:`constrain` with *logical* axes; if no mesh is active
+(CPU smoke tests) the call is a no-op, so the same model runs unsharded on
+one device and sharded under ``jax.set_mesh`` in the dry-run/launcher.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# logical axis names
+BATCH = "batch"      # maps to ("pod", "data") when a pod axis exists
+MODEL = "model"
+NONE = None
+
+
+def _current_axis_names() -> tuple[str, ...]:
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return ()
+    return tuple(mesh.axis_names)
+
+
+def resolve(axis: str | None):
+    """Map a logical axis to the current mesh's physical axes."""
+    names = _current_axis_names()
+    if not names or axis is None:
+        return None
+    if axis == BATCH:
+        batch_axes = tuple(n for n in ("pod", "data") if n in names)
+        return batch_axes if batch_axes else None
+    return axis if axis in names else None
+
+
+def constrain(x: jax.Array, *logical_axes) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without a mesh."""
+    names = _current_axis_names()
+    if not names:
+        return x
+    spec = P(*(resolve(a) for a in logical_axes))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def axis_size(axis: str) -> int:
+    """Size of a (logical) mesh axis; 1 if absent/no mesh."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return 1
+    if axis == BATCH:
+        return int(
+            __import__("math").prod(
+                mesh.shape[n] for n in ("pod", "data")
+                if n in mesh.axis_names))
+    return int(mesh.shape[axis]) if axis in mesh.axis_names else 1

@@ -1,0 +1,394 @@
+"""State-space / recurrent blocks: Mamba (Jamba) and xLSTM (sLSTM + mLSTM).
+
+Training paths:
+* **Mamba** — selective scan run as a sequential ``lax.scan`` over time with
+  an O(B*d_inner*N) carry.  (The chunked-parallel form is a §Perf candidate;
+  the sequential form keeps HLO compact and FLOP counts honest.)
+* **mLSTM** — the stabilized *parallel* (quadratic) form from the xLSTM
+  paper, implemented blockwise like flash attention so no (S, S) decay
+  matrix is materialized.
+* **sLSTM** — true recurrence (not parallelizable, per the paper);
+  sequential ``lax.scan``.
+
+Decode paths are all O(1)-state single-step updates — this is why the
+``long_500k`` cell runs on the SSM/hybrid architectures only.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+
+Array = jax.Array
+NEG_INF = -2.0e38
+
+
+# ===========================================================================
+# Mamba
+# ===========================================================================
+
+
+class MambaState(NamedTuple):
+    conv: Array   # (B, W-1, d_inner) — last W-1 post-in_proj inputs
+    ssm: Array    # (B, d_inner, N)
+
+
+def _mamba_dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    di = cfg.ssm_expand * cfg.d_model
+    return di, cfg.ssm_state_dim, cfg.ssm_conv_width, max(1, cfg.d_model // 16)
+
+
+def mamba_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di, n, w, dt_rank = _mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (w, di)) * w ** -0.5
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_bcdt": (jax.random.normal(ks[2], (di, 2 * n + dt_rank))
+                   * di ** -0.5).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (dt_rank, di))
+                    * dt_rank ** -0.5).astype(dtype),
+        "dt_bias": jnp.full((di,), math.log(math.e - 1), jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (di, d)) * di ** -0.5
+                     ).astype(dtype),
+    }
+
+
+def _mamba_conv_full(params: dict, xin: Array) -> Array:
+    """Causal depthwise conv over (B, S, di)."""
+    w = params["conv_w"].shape[0]
+    pad = jnp.pad(xin, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, params["conv_w"][:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=xin.shape[-1])
+    return out + params["conv_b"]
+
+
+def _mamba_ssm_inputs(cfg: ModelConfig, params: dict, xc: Array):
+    di, n, _, dt_rank = _mamba_dims(cfg)
+    bcdt = xc @ params["w_bcdt"]
+    b_mat = bcdt[..., :n].astype(jnp.float32)
+    c_mat = bcdt[..., n:2 * n].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        bcdt[..., 2 * n:].astype(jnp.float32) @ params["dt_proj"].astype(
+            jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])                   # (di, N)
+    return a, b_mat, c_mat, dt
+
+
+def mamba_forward(cfg: ModelConfig, params: dict, x: Array) -> Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    di, n, w, _ = _mamba_dims(cfg)
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_mamba_conv_full(params, xin))
+    a, b_mat, c_mat, dt = _mamba_ssm_inputs(cfg, params, xc)
+    x32 = xc.astype(jnp.float32)
+
+    def step(h, inputs):
+        xt, bt, ct, dtt = inputs            # (B,di) (B,N) (B,N) (B,di)
+        da = jnp.exp(dtt[..., None] * a)                    # (B, di, N)
+        dbx = (dtt * xt)[..., None] * bt[:, None, :]        # (B, di, N)
+        h = da * h + dbx
+        yt = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, yt
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    xs = (jnp.moveaxis(x32, 1, 0), jnp.moveaxis(b_mat, 1, 0),
+          jnp.moveaxis(c_mat, 1, 0), jnp.moveaxis(dt, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + params["D"] * x32          # (B, S, di)
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    return y @ params["out_proj"]
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype) -> MambaState:
+    di, n, w, _ = _mamba_dims(cfg)
+    return MambaState(conv=jnp.zeros((batch, w - 1, di), dtype),
+                      ssm=jnp.zeros((batch, di, n), jnp.float32))
+
+
+def mamba_decode(cfg: ModelConfig, params: dict, x: Array,
+                 state: MambaState) -> tuple[Array, MambaState]:
+    """x: (B, 1, d); O(1) single-step update."""
+    b = x.shape[0]
+    di, n, w, _ = _mamba_dims(cfg)
+    xz = x[:, 0] @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                       # (B, di)
+    window = jnp.concatenate([state.conv, xin[:, None]], axis=1)  # (B,W,di)
+    xc = jax.nn.silu(
+        jnp.einsum("bwd,wd->bd", window.astype(jnp.float32),
+                   params["conv_w"].astype(jnp.float32))
+        + params["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    a, b_mat, c_mat, dt = _mamba_ssm_inputs(cfg, params, xc[:, None])
+    bt, ct, dtt = b_mat[:, 0], c_mat[:, 0], dt[:, 0]
+    da = jnp.exp(dtt[..., None] * a)
+    dbx = (dtt * xc.astype(jnp.float32))[..., None] * bt[:, None, :]
+    h = da * state.ssm + dbx
+    yt = jnp.einsum("bdn,bn->bd", h, ct) + params["D"] * xc.astype(
+        jnp.float32)
+    y = (yt.astype(x.dtype) * jax.nn.silu(z)) @ params["out_proj"]
+    return y[:, None], MambaState(conv=window[:, 1:], ssm=h)
+
+
+# ===========================================================================
+# mLSTM (xLSTM) — parallel blockwise training form + recurrent decode
+# ===========================================================================
+
+
+class MLSTMState(NamedTuple):
+    c: Array    # (B, H, hd, hd) matrix memory
+    n: Array    # (B, H, hd)
+    m: Array    # (B, H) stabilizer
+
+
+def _mlstm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    di = 2 * cfg.d_model
+    h = cfg.num_heads
+    return di, h, di // h
+
+
+def mlstm_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di, h, hd = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    s, si = d ** -0.5, di ** -0.5
+    return {
+        "w_up": (jax.random.normal(ks[0], (d, 2 * di)) * s).astype(dtype),
+        "w_q": (jax.random.normal(ks[1], (di, di)) * si).astype(dtype),
+        "w_k": (jax.random.normal(ks[2], (di, di)) * si).astype(dtype),
+        "w_v": (jax.random.normal(ks[3], (di, di)) * si).astype(dtype),
+        "w_ig": (jax.random.normal(ks[4], (di, h)) * si).astype(jnp.float32),
+        "b_ig": jnp.zeros((h,), jnp.float32),
+        "w_fg": (jax.random.normal(ks[5], (di, h)) * si).astype(jnp.float32),
+        "b_fg": jnp.full((h,), 3.0, jnp.float32),   # open forget gates
+        "w_down": (jax.random.normal(ks[6], (di, d)) * si).astype(dtype),
+    }
+
+
+def mlstm_parallel(q: Array, k: Array, v: Array, log_i: Array,
+                   log_f: Array, q_block: int = 256,
+                   kv_block: int = 256) -> Array:
+    """Stabilized parallel mLSTM (xLSTM eq. 19-27), blockwise.
+
+    q/k/v: (B, S, H, hd); log_i/log_f: (B, S, H).
+    D_ij = exp(F_i - F_j + log_i_j) for j <= i, F_t = cumsum(log_f).
+    h_i = sum_j (q_i k_j / sqrt(hd)) D~_ij v_j / max(|den|, exp(-m_i)).
+    """
+    b, s, h, hd = q.shape
+    q_block = min(q_block, s)
+    kv_block = min(kv_block, s)
+    assert s % q_block == 0 and s % kv_block == 0
+    n_q, n_kv = s // q_block, s // kv_block
+    scale = hd ** -0.5
+
+    f_cum = jnp.cumsum(log_f.astype(jnp.float32), axis=1)     # (B, S, H)
+
+    pairs = jnp.asarray(
+        [(i, j) for i in range(n_q) for j in range(n_kv)
+         if j * kv_block <= (i + 1) * q_block - 1], jnp.int32)
+
+    qb = q.reshape(b, n_q, q_block, h, hd)
+    kb = k.reshape(b, n_kv, kv_block, h, hd)
+    vb = v.reshape(b, n_kv, kv_block, h, hd)
+    fq = f_cum.reshape(b, n_q, q_block, h)
+    fk = f_cum.reshape(b, n_kv, kv_block, h)
+    ik = log_i.astype(jnp.float32).reshape(b, n_kv, kv_block, h)
+
+    o0 = jnp.zeros((b, n_q, q_block, h, hd), jnp.float32)
+    l0 = jnp.zeros((b, n_q, q_block, h), jnp.float32)
+    m0 = jnp.full((b, n_q, q_block, h), NEG_INF, jnp.float32)
+
+    def body(carry, pair):
+        o, l, m = carry
+        qi, kj = pair[0], pair[1]
+        qblk = jax.lax.dynamic_index_in_dim(qb, qi, 1, keepdims=False)
+        kblk = jax.lax.dynamic_index_in_dim(kb, kj, 1, keepdims=False)
+        vblk = jax.lax.dynamic_index_in_dim(vb, kj, 1, keepdims=False)
+        fqb = jax.lax.dynamic_index_in_dim(fq, qi, 1, keepdims=False)
+        fkb = jax.lax.dynamic_index_in_dim(fk, kj, 1, keepdims=False)
+        ikb = jax.lax.dynamic_index_in_dim(ik, kj, 1, keepdims=False)
+        # decay logits (B, qb, kb, H)
+        logd = (fqb[:, :, None, :] - fkb[:, None, :, :]
+                + ikb[:, None, :, :])
+        qpos = qi * q_block + jnp.arange(q_block)
+        kpos = kj * kv_block + jnp.arange(kv_block)
+        mask = kpos[None, :] <= qpos[:, None]
+        logd = jnp.where(mask[None, :, :, None], logd, NEG_INF)
+        m_blk = jnp.max(logd, axis=2)                          # (B,qb,H)
+        m_old = jax.lax.dynamic_index_in_dim(m, qi, 1, keepdims=False)
+        l_old = jax.lax.dynamic_index_in_dim(l, qi, 1, keepdims=False)
+        o_old = jax.lax.dynamic_index_in_dim(o, qi, 1, keepdims=False)
+        m_new = jnp.maximum(m_old, m_blk)
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        dmat = jnp.exp(logd - m_safe[:, :, None, :])
+        s_qk = jnp.einsum("bqhd,bthd->bqth", qblk.astype(jnp.float32),
+                          kblk.astype(jnp.float32)) * scale
+        a = s_qk * dmat                                        # (B,qb,kb,H)
+        alpha = jnp.where(m_old <= NEG_INF / 2, 0.0,
+                          jnp.exp(m_old - m_safe))
+        l_new = l_old * alpha + jnp.sum(a, axis=2)
+        o_new = o_old * alpha[..., None] + jnp.einsum(
+            "bqth,bthd->bqhd", a, vblk.astype(jnp.float32))
+        o = jax.lax.dynamic_update_index_in_dim(o, o_new, qi, 1)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 1)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 1)
+        return (o, l, m), None
+
+    (o, l, m), _ = jax.lax.scan(body, (o0, l0, m0), pairs)
+    m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    den = jnp.maximum(jnp.abs(l), jnp.exp(-m_safe))[..., None]
+    out = o / den
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def mlstm_block_forward(cfg: ModelConfig, params: dict, x: Array) -> Array:
+    b, s, d = x.shape
+    di, h, hd = _mlstm_dims(cfg)
+    up = x @ params["w_up"]
+    xin, gate = jnp.split(up, 2, axis=-1)                     # (B,S,di)
+    q = (xin @ params["w_q"]).reshape(b, s, h, hd)
+    k = (xin @ params["w_k"]).reshape(b, s, h, hd)
+    v = (xin @ params["w_v"]).reshape(b, s, h, hd)
+    x32 = xin.astype(jnp.float32)
+    log_i = x32 @ params["w_ig"] + params["b_ig"]             # (B,S,H)
+    log_f = jax.nn.log_sigmoid(x32 @ params["w_fg"] + params["b_fg"])
+    ht = mlstm_parallel(q, k, v, log_i, log_f)
+    y = ht.reshape(b, s, di) * jax.nn.silu(gate)
+    return y @ params["w_down"]
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    _, h, hd = _mlstm_dims(cfg)
+    return MLSTMState(c=jnp.zeros((batch, h, hd, hd), jnp.float32),
+                      n=jnp.zeros((batch, h, hd), jnp.float32),
+                      m=jnp.full((batch, h), -1e30, jnp.float32))
+
+
+def mlstm_block_decode(cfg: ModelConfig, params: dict, x: Array,
+                       state: MLSTMState) -> tuple[Array, MLSTMState]:
+    """x: (B, 1, d). Recurrent stabilized update (xLSTM eq. 19-27)."""
+    b = x.shape[0]
+    di, h, hd = _mlstm_dims(cfg)
+    up = x[:, 0] @ params["w_up"]
+    xin, gate = jnp.split(up, 2, axis=-1)
+    q = (xin @ params["w_q"]).reshape(b, h, hd).astype(jnp.float32)
+    k = (xin @ params["w_k"]).reshape(b, h, hd).astype(jnp.float32)
+    v = (xin @ params["w_v"]).reshape(b, h, hd).astype(jnp.float32)
+    x32 = xin.astype(jnp.float32)
+    log_i = x32 @ params["w_ig"] + params["b_ig"]             # (B,H)
+    log_f = jax.nn.log_sigmoid(x32 @ params["w_fg"] + params["b_fg"])
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    f_sc = jnp.exp(log_f + state.m - m_new)
+    i_sc = jnp.exp(log_i - m_new)
+    c = f_sc[..., None, None] * state.c + \
+        i_sc[..., None, None] * v[..., :, None] * k[..., None, :]
+    n = f_sc[..., None] * state.n + i_sc[..., None] * k
+    q = q * hd ** -0.5
+    num = jnp.einsum("bhvk,bhk->bhv", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)),
+                      jnp.exp(-m_new))
+    ht = (num / den[..., None]).reshape(b, di).astype(x.dtype)
+    y = ht * jax.nn.silu(gate)
+    return (y @ params["w_down"])[:, None], MLSTMState(c, n, m_new)
+
+
+# ===========================================================================
+# sLSTM — sequential exponential-gated LSTM with per-head recurrence
+# ===========================================================================
+
+
+class SLSTMState(NamedTuple):
+    c: Array    # (B, H, hd)
+    n: Array    # (B, H, hd)
+    h: Array    # (B, H, hd)
+    m: Array    # (B, H, hd) stabilizer
+
+
+def _slstm_dims(cfg: ModelConfig) -> tuple[int, int]:
+    h = cfg.num_heads
+    return h, cfg.d_model // h
+
+
+def slstm_init(key: Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    h, hd = _slstm_dims(cfg)
+    ks = jax.random.split(key, 9)
+    s = d ** -0.5
+    p = {}
+    for idx, g in enumerate(("z", "i", "f", "o")):
+        p[f"w_{g}"] = (jax.random.normal(ks[idx], (d, d)) * s).astype(dtype)
+        p[f"r_{g}"] = (jax.random.normal(ks[idx + 4], (h, hd, hd))
+                       * hd ** -0.5).astype(dtype)
+        p[f"b_{g}"] = (jnp.full((d,), 1.0, jnp.float32) if g == "f"
+                       else jnp.zeros((d,), jnp.float32))
+    p["w_out"] = (jax.random.normal(ks[8], (d, d)) * s).astype(dtype)
+    return p
+
+
+def _slstm_step(params: dict, xt: Array, state: SLSTMState
+                ) -> tuple[Array, SLSTMState]:
+    """xt: (B, d). Exponential-gated update (xLSTM eqs. 8-18)."""
+    b = xt.shape[0]
+    h_heads, hd = state.h.shape[1], state.h.shape[2]
+    d = h_heads * hd
+
+    def gate(g):
+        wx = (xt @ params[f"w_{g}"]).reshape(b, h_heads, hd)
+        rh = jnp.einsum("bhk,hkj->bhj", state.h.astype(xt.dtype),
+                        params[f"r_{g}"])
+        bb = params[f"b_{g}"].reshape(h_heads, hd)
+        return (wx + rh).astype(jnp.float32) + bb
+
+    z = jnp.tanh(gate("z"))
+    log_i = gate("i")
+    log_f = jax.nn.log_sigmoid(gate("f"))
+    o = jax.nn.sigmoid(gate("o"))
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    i_sc = jnp.exp(log_i - m_new)
+    f_sc = jnp.exp(log_f + state.m - m_new)
+    c = f_sc * state.c + i_sc * z
+    n = f_sc * state.n + i_sc
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return h_new.reshape(b, d), SLSTMState(c, n, h_new, m_new)
+
+
+def slstm_block_forward(cfg: ModelConfig, params: dict, x: Array) -> Array:
+    b, s, d = x.shape
+    hh, hd = _slstm_dims(cfg)
+    state = slstm_init_state(cfg, b)
+
+    def step(st, xt):
+        y, st = _slstm_step(params, xt, st)
+        return st, y
+
+    _, ys = jax.lax.scan(step, state, jnp.moveaxis(x, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    return y @ params["w_out"]
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    hh, hd = _slstm_dims(cfg)
+    z = jnp.zeros((batch, hh, hd), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full_like(z, -1e30))
+
+
+def slstm_block_decode(cfg: ModelConfig, params: dict, x: Array,
+                       state: SLSTMState) -> tuple[Array, SLSTMState]:
+    y, state = _slstm_step(params, x[:, 0], state)
+    return (y.astype(x.dtype) @ params["w_out"])[:, None], state

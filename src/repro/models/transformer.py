@@ -1,0 +1,437 @@
+"""Transformer assembly: pattern-scanned heterogeneous layer stacks.
+
+The stack is organized as ``first_k_dense`` unscanned prologue layers (e.g.
+DeepSeek-V2's dense first layer) followed by ``R`` repeats of the config's
+``block_pattern``, scanned with ``lax.scan`` over stacked per-repeat params
+so the compiled HLO contains each distinct block body exactly once.
+
+Public API:
+    init_params(cfg, key)                   -> params pytree
+    forward(cfg, params, batch)             -> logits (B, S, V)
+    loss_fn(cfg, params, batch)             -> scalar loss (blockwise xent)
+    init_cache(cfg, batch, max_len, dtype)  -> decode cache pytree
+    decode_step(cfg, params, cache, tok, pos) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm
+from .common import ModelConfig
+from .layers import (compute_dtype, dense_ffn, dense_ffn_init, embed,
+                     embedding_init, rmsnorm, rmsnorm_init, softcap,
+                     unembed, unembed_init)
+from .sharding import BATCH, MODEL, constrain
+
+Array = jax.Array
+
+LOSS_CHUNK = 256     # sequence-chunked cross entropy (bounds logits memory)
+
+
+# ---------------------------------------------------------------------------
+# Batch container
+# ---------------------------------------------------------------------------
+
+
+class Batch(NamedTuple):
+    """Either token ids or precomputed frontend embeddings (modality stubs).
+
+    tokens:    (B, S) int32 — ignored when embeds is not None
+    embeds:    (B, S, d_model) or None — audio frames / vision patches
+    positions: (B, S) int32, or (3, B, S) for M-RoPE
+    labels:    (B, S) int32 next-token targets (training only)
+    """
+    tokens: Optional[Array] = None
+    embeds: Optional[Array] = None
+    positions: Optional[Array] = None
+    labels: Optional[Array] = None
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / forward / decode
+# ---------------------------------------------------------------------------
+
+
+def _block_init(cfg: ModelConfig, kind: str, use_moe: bool, key: Array,
+                dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict = {"norm1": rmsnorm_init(cfg.d_model)}
+    if kind.startswith("attn"):
+        p["mixer"] = (attn.mla_init(k1, cfg, dtype)
+                      if cfg.attention_kind == "mla"
+                      else attn.gqa_init(k1, cfg, dtype))
+    elif kind == "mamba":
+        p["mixer"] = ssm.mamba_init(k1, cfg, dtype)
+    elif kind == "mlstm":
+        p["mixer"] = ssm.mlstm_init(k1, cfg, dtype)
+    elif kind == "slstm":
+        p["mixer"] = ssm.slstm_init(k1, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    has_ffn = use_moe or (cfg.d_ff > 0 and kind not in ("mlstm", "slstm"))
+    if has_ffn:
+        p["norm2"] = rmsnorm_init(cfg.d_model)
+        p["ffn"] = (moe_mod.moe_init(k2, cfg, dtype) if use_moe
+                    else dense_ffn_init(k2, cfg.d_model, cfg.d_ff,
+                                        cfg.ffn_kind, dtype))
+    if cfg.post_block_norm:
+        p["post_norm1"] = rmsnorm_init(cfg.d_model)
+        if has_ffn:
+            p["post_norm2"] = rmsnorm_init(cfg.d_model)
+    return p
+
+
+def _mixer_forward(cfg: ModelConfig, kind: str, params: dict, x: Array,
+                   positions: Array) -> Array:
+    if kind.startswith("attn"):
+        window = cfg.sliding_window if kind == "attn_local" else 0
+        if cfg.attention_kind == "mla":
+            return attn.mla_forward(cfg, params, x, positions)
+        return attn.gqa_forward(cfg, params, x, positions, window=window)
+    if kind == "mamba":
+        return ssm.mamba_forward(cfg, params, x)
+    if kind == "mlstm":
+        return ssm.mlstm_block_forward(cfg, params, x)
+    if kind == "slstm":
+        return ssm.slstm_block_forward(cfg, params, x)
+    raise ValueError(kind)
+
+
+def _block_forward(cfg: ModelConfig, kind: str, use_moe: bool, params: dict,
+                   x: Array, positions: Array) -> tuple[Array, Array]:
+    """Returns (x, aux_loss).
+
+    With ``cfg.seq_parallel`` the residual stream is S-sharded over
+    "model" (Megatron SP): norms and the dense FFN run token-parallel;
+    the mixer (which needs the full sequence) gathers S on entry and
+    scatters on exit.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    sp = cfg.seq_parallel
+    res_spec = (BATCH, MODEL, None) if sp else (BATCH, None, None)
+    x = constrain(x, *res_spec)
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if sp:
+        h = constrain(h, BATCH, None, None)      # all-gather S for mixer
+    h = _mixer_forward(cfg, kind, params["mixer"], h, positions)
+    if cfg.post_block_norm:
+        h = rmsnorm(params["post_norm1"], h, cfg.norm_eps)
+    if sp:
+        h = constrain(h, BATCH, MODEL, None)     # reduce-scatter back
+    x = x + h
+    x = constrain(x, *res_spec)
+    if "ffn" in params:
+        h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if use_moe:
+            if sp:   # MoE routes over full token sets; gather S
+                h = constrain(h, BATCH, None, None)
+            h, aux = moe_mod.moe_apply(cfg, params["ffn"], h)
+            if sp:
+                h = constrain(h, BATCH, MODEL, None)
+        else:
+            h = dense_ffn(params["ffn"], h, cfg.ffn_kind)
+        if cfg.post_block_norm:
+            h = rmsnorm(params["post_norm2"], h, cfg.norm_eps)
+        x = x + h
+        x = constrain(x, *res_spec)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode-cache plumbing
+# ---------------------------------------------------------------------------
+
+
+def _block_init_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                      dtype) -> Any:
+    if kind.startswith("attn"):
+        if cfg.attention_kind == "mla":
+            return attn.mla_init_cache(cfg, batch, max_len, dtype)
+        return attn.gqa_init_cache(cfg, batch, max_len, dtype)
+    if kind == "mamba":
+        return ssm.mamba_init_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return ssm.mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return ssm.slstm_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def _block_decode(cfg: ModelConfig, kind: str, use_moe: bool, params: dict,
+                  x: Array, cache: Any, pos: Array,
+                  mla_absorb: bool) -> tuple[Array, Any]:
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if kind.startswith("attn"):
+        window = cfg.sliding_window if kind == "attn_local" else 0
+        if cfg.attention_kind == "mla":
+            h, cache = attn.mla_decode(cfg, params["mixer"], h, cache, pos,
+                                       absorb=mla_absorb)
+        else:
+            h, cache = attn.gqa_decode(cfg, params["mixer"], h, cache, pos,
+                                       window=window)
+    elif kind == "mamba":
+        h, cache = ssm.mamba_decode(cfg, params["mixer"], h, cache)
+    elif kind == "mlstm":
+        h, cache = ssm.mlstm_block_decode(cfg, params["mixer"], h, cache)
+    elif kind == "slstm":
+        h, cache = ssm.slstm_block_decode(cfg, params["mixer"], h, cache)
+    if cfg.post_block_norm:
+        h = rmsnorm(params["post_norm1"], h, cfg.norm_eps)
+    x = x + h
+    if "ffn" in params:
+        h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if use_moe:
+            h, _ = moe_mod.moe_apply(cfg, params["ffn"], h, train=False)
+        else:
+            h = dense_ffn(params["ffn"], h, cfg.ffn_kind)
+        if cfg.post_block_norm:
+            h = rmsnorm(params["post_norm2"], h, cfg.norm_eps)
+        x = x + h
+    return x, cache
+
+
+def _mixer_params_only(cfg, kind, use_moe, key, dtype):
+    return _block_init(cfg, kind, use_moe, key, dtype)
+
+
+def _pattern_moe_flags(cfg: ModelConfig) -> list[bool]:
+    """Whether each pattern position uses MoE (consistent across repeats)."""
+    flags = []
+    for i, _ in enumerate(cfg.block_pattern):
+        gidx = cfg.first_k_dense + i
+        flags.append(cfg.layer_uses_moe(gidx))
+    if cfg.moe is not None:
+        # consistency across repeats requires pattern_len % every_k == 0
+        assert len(cfg.block_pattern) % cfg.moe.every_k_layers == 0 or \
+            cfg.moe.every_k_layers % len(cfg.block_pattern) == 0
+    return flags
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: Array) -> dict:
+    dtype = compute_dtype(cfg)
+    keys = jax.random.split(key, 4 + cfg.first_k_dense)
+    params: dict = {
+        "embed": embedding_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = unembed_init(keys[1], cfg.vocab_size,
+                                         cfg.d_model, dtype)
+    # prologue (unscanned) dense layers
+    for i in range(cfg.first_k_dense):
+        kind = cfg.layer_kind(i)
+        params[f"pre_{i}"] = _block_init(cfg, kind, False, keys[3 + i],
+                                         dtype)
+    # pattern-scanned stack: per position, params stacked over repeats
+    r = cfg.num_pattern_repeats
+    moe_flags = _pattern_moe_flags(cfg)
+    blocks = []
+    pos_keys = jax.random.split(keys[2], len(cfg.block_pattern))
+    for i, kind in enumerate(cfg.block_pattern):
+        rep_keys = jax.random.split(pos_keys[i], r)
+        stacked = jax.vmap(
+            lambda kk, _kind=kind, _moe=moe_flags[i]: _block_init(
+                cfg, _kind, _moe, kk, dtype))(rep_keys)
+        blocks.append(stacked)
+    params["blocks"] = tuple(blocks)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _default_positions(cfg: ModelConfig, b: int, s: int) -> Array:
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+
+def _sinusoidal(positions: Array, d: int) -> Array:
+    """Absolute sinusoidal position embedding (B, S) -> (B, S, d)."""
+    half = d // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _inputs_to_x(cfg: ModelConfig, params: dict, batch: Batch
+                 ) -> tuple[Array, Array]:
+    if batch.embeds is not None:
+        x = batch.embeds.astype(compute_dtype(cfg))
+        b, s = x.shape[:2]
+    else:
+        x = embed(params["embed"], batch.tokens, cfg.scale_embeddings,
+                  cfg.d_model)
+        b, s = batch.tokens.shape
+    pos = batch.positions
+    if pos is None:
+        pos = _default_positions(cfg, b, s)
+    if not cfg.use_rope:
+        p2d = pos if pos.ndim == 2 else pos[0]
+        x = x + _sinusoidal(p2d, cfg.d_model).astype(x.dtype)
+    return constrain(x, BATCH, None, None), pos
+
+
+def hidden_states(cfg: ModelConfig, params: dict, batch: Batch,
+                  remat: bool = False) -> tuple[Array, Array]:
+    """Run the stack; returns (hidden (B,S,d) after final norm, aux_loss).
+
+    ``remat=True`` wraps each scanned super-block in ``jax.checkpoint`` with
+    a dots-saveable policy — the standard activation-checkpointing setup for
+    long-sequence training.
+    """
+    x, positions = _inputs_to_x(cfg, params, batch)
+    aux_total = jnp.zeros((), jnp.float32)
+    for i in range(cfg.first_k_dense):
+        kind = cfg.layer_kind(i)
+        x, aux = _block_forward(cfg, kind, False, params[f"pre_{i}"], x,
+                                positions)
+        aux_total += aux
+    moe_flags = _pattern_moe_flags(cfg)
+
+    def superblock(carry, rep_params):
+        x, aux_total = carry
+        for i, kind in enumerate(cfg.block_pattern):
+            x, aux = _block_forward(cfg, kind, moe_flags[i], rep_params[i],
+                                    x, positions)
+            aux_total += aux
+        return (x, aux_total), None
+
+    body = superblock
+    if remat:
+        body = jax.checkpoint(
+            superblock,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                     params["blocks"])
+    if cfg.seq_parallel:
+        x = constrain(x, BATCH, None, None)     # gather S for the head
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux_total
+
+
+def _logits(cfg: ModelConfig, params: dict, h: Array) -> Array:
+    tied = params["embed"]["table"] if cfg.tie_embeddings else None
+    return unembed(params.get("unembed"), h, cfg.final_logit_softcap, tied)
+
+
+def forward(cfg: ModelConfig, params: dict, batch: Batch) -> Array:
+    """Full logits — use for smoke tests / small vocab only."""
+    h, _ = hidden_states(cfg, params, batch)
+    return _logits(cfg, params, h)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: Batch,
+            remat: bool = False) -> Array:
+    """Sequence-chunked softmax cross entropy.
+
+    Avoids materializing (B, S, V) logits: scans over sequence chunks,
+    computing per-chunk logits + logsumexp.  Essential for the 200k-vocab
+    cells at 4k sequence length.
+    """
+    h, aux = hidden_states(cfg, params, batch, remat=remat)
+    labels = batch.labels
+    b, s, d = h.shape
+    chunk = min(LOSS_CHUNK, s)
+    while s % chunk:
+        chunk //= 2
+    chunk = max(chunk, 1)
+    n = s // chunk
+    hc = h.reshape(b, n, chunk, d).swapaxes(0, 1)         # (n, B, c, d)
+    lc = labels.reshape(b, n, chunk).swapaxes(0, 1)       # (n, B, c)
+
+    def chunk_loss(carry, xs):
+        hb, lb = xs
+        logits = _logits(cfg, params, hb).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None],
+                                   axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    if remat:   # recompute per-chunk logits in backward (saves B*c*V fp32)
+        chunk_loss = jax.checkpoint(chunk_loss)
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32),
+                            (hc, lc))
+    return total / (b * s) + aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> dict:
+    dtype = dtype or compute_dtype(cfg)
+    cache: dict = {}
+    for i in range(cfg.first_k_dense):
+        cache[f"pre_{i}"] = _block_init_cache(cfg, cfg.layer_kind(i),
+                                              batch, max_len, dtype)
+    r = cfg.num_pattern_repeats
+    blocks = []
+    for kind in cfg.block_pattern:
+        one = _block_init_cache(cfg, kind, batch, max_len, dtype)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (r,) + a.shape).copy(), one)
+        blocks.append(stacked)
+    cache["blocks"] = tuple(blocks)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                batch: Batch, pos: Array, *, mla_absorb: bool = False
+                ) -> tuple[Array, dict]:
+    """One-token step. batch.tokens: (B, 1) (or embeds (B, 1, d)).
+
+    ``pos`` is the cache position to write (== number of tokens already in
+    the cache).  Returns (logits (B, 1, V), new cache).
+    """
+    if batch.positions is None and not cfg.use_rope:
+        nb = (batch.tokens if batch.tokens is not None
+              else batch.embeds).shape[0]
+        batch = batch._replace(
+            positions=jnp.full((nb, 1), pos, jnp.int32))
+    x, _ = _inputs_to_x(cfg, params, batch)
+    new_cache: dict = {}
+    for i in range(cfg.first_k_dense):
+        kind = cfg.layer_kind(i)
+        x, c = _block_decode(cfg, kind, False, params[f"pre_{i}"], x,
+                             cache[f"pre_{i}"], pos, mla_absorb)
+        new_cache[f"pre_{i}"] = c
+    moe_flags = _pattern_moe_flags(cfg)
+
+    def superblock(x, xs):
+        rep_params, rep_cache = xs
+        new_rep_cache = []
+        for i, kind in enumerate(cfg.block_pattern):
+            x, c = _block_decode(cfg, kind, moe_flags[i], rep_params[i], x,
+                                 rep_cache[i], pos, mla_absorb)
+            new_rep_cache.append(c)
+        return x, tuple(new_rep_cache)
+
+    x, blocks_cache = jax.lax.scan(superblock, x,
+                                   (params["blocks"], cache["blocks"]))
+    new_cache["blocks"] = blocks_cache
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(cfg, params, x), new_cache

@@ -1,0 +1,4 @@
+"""Optimizers + distributed-optimization tricks (compression, schedules)."""
+
+from . import adamw  # noqa: F401
+from .adamw import AdamWConfig, AdamWState  # noqa: F401

@@ -1,0 +1,5 @@
+"""Distributed runtime: fault tolerance, straggler mitigation, elasticity."""
+
+from .elastic import MeshPlan, replan_mesh, rescale_batch  # noqa: F401
+from .fault_tolerance import (FaultToleranceController, FTConfig,  # noqa: F401
+                              WorkerState)

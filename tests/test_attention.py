@@ -1,0 +1,170 @@
+"""Correctness tests for attention paths: blockwise vs full-softmax oracle,
+windows, softcap, GQA grouping, MLA (incl. absorbed decode), M-RoPE."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models.common import ModelConfig
+from repro.models.layers import apply_mrope, apply_rope
+
+
+def _qkv(key, b, sq, skv, h, kv, dh, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, sq, h, dh), dtype)
+    k = jax.random.normal(k2, (b, skv, kv, dh), dtype)
+    v = jax.random.normal(k3, (b, skv, kv, dh), dtype)
+    return q, k, v
+
+
+class TestBlockwiseAttention:
+    @pytest.mark.parametrize("s,qb,kb", [(64, 16, 16), (64, 64, 64),
+                                         (128, 32, 64), (96, 32, 32)])
+    def test_matches_oracle_causal(self, s, qb, kb):
+        q, k, v = _qkv(jax.random.key(0), 2, s, s, 4, 2, 16)
+        got = A.blockwise_attention(q, k, v, causal=True, q_block=qb,
+                                    kv_block=kb)
+        want = A.full_attention_reference(q, k, v, causal=True)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("window", [8, 16, 40])
+    def test_matches_oracle_windowed(self, window):
+        q, k, v = _qkv(jax.random.key(1), 2, 64, 64, 4, 4, 16)
+        got = A.blockwise_attention(q, k, v, causal=True, window=window,
+                                    q_block=16, kv_block=16)
+        want = A.full_attention_reference(q, k, v, causal=True,
+                                          window=window)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+    def test_matches_oracle_softcap(self):
+        q, k, v = _qkv(jax.random.key(2), 1, 64, 64, 2, 1, 16)
+        got = A.blockwise_attention(q, k, v, causal=True, logit_softcap=50.0,
+                                    q_block=16, kv_block=16)
+        want = A.full_attention_reference(q, k, v, causal=True,
+                                          logit_softcap=50.0)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+    def test_block_pair_pruning_skips_out_of_window(self):
+        """Window pruning must reduce the statically enumerated pairs."""
+        full = len(A._block_pairs(8, 8, 16, 16, 0, causal=True, window=0))
+        pruned = len(A._block_pairs(8, 8, 16, 16, 0, causal=True,
+                                    window=16))
+        assert pruned < full
+        assert full == 8 * 9 // 2
+
+    def test_decode_attention_matches_last_row(self):
+        q, k, v = _qkv(jax.random.key(3), 2, 16, 16, 4, 2, 16)
+        want = A.full_attention_reference(q, k, v, causal=True)[:, -1:]
+        got = A.decode_attention(q[:, -1:], k, v, cache_len=16)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+    def test_decode_attention_respects_cache_len(self):
+        q, k, v = _qkv(jax.random.key(4), 1, 1, 32, 2, 2, 8)
+        # junk beyond cache_len must not affect the result
+        got_a = A.decode_attention(q, k, v, cache_len=10)
+        k2 = k.at[:, 10:].set(1e3)
+        v2 = v.at[:, 10:].set(-1e3)
+        got_b = A.decode_attention(q, k2, v2, cache_len=10)
+        np.testing.assert_allclose(got_a, got_b, atol=1e-6)
+
+
+def _mla_cfg():
+    return ModelConfig(
+        name="mla-test", family="moe", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=256,
+        attention_kind="mla", q_lora_rank=32, kv_lora_rank=16,
+        qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16, dtype="float32")
+
+
+class TestMLA:
+    def test_forward_shapes(self):
+        cfg = _mla_cfg()
+        params = A.mla_init(jax.random.key(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (2, 32, cfg.d_model))
+        pos = jnp.broadcast_to(jnp.arange(32), (2, 32))
+        y = A.mla_forward(cfg, params, x, pos, q_block=16, kv_block=16)
+        assert y.shape == x.shape
+
+    def test_decode_matches_prefill(self):
+        cfg = _mla_cfg()
+        params = A.mla_init(jax.random.key(0), cfg, jnp.float32)
+        s = 12
+        x = jax.random.normal(jax.random.key(1), (2, s, cfg.d_model)) * 0.3
+        pos = jnp.broadcast_to(jnp.arange(s), (2, s))
+        full = A.mla_forward(cfg, params, x, pos, q_block=4, kv_block=4)
+        cache = A.mla_init_cache(cfg, 2, s, jnp.float32)
+        for t in range(s):
+            y, cache = A.mla_decode(cfg, params, x[:, t:t + 1], cache,
+                                    jnp.int32(t), absorb=False)
+            np.testing.assert_allclose(y[:, 0], full[:, t], atol=1e-4,
+                                       rtol=1e-4)
+
+    def test_absorbed_equals_naive_decode(self):
+        """The §Perf optimization must be numerically equivalent."""
+        cfg = _mla_cfg()
+        params = A.mla_init(jax.random.key(0), cfg, jnp.float32)
+        s = 8
+        x = jax.random.normal(jax.random.key(2), (2, s, cfg.d_model)) * 0.3
+        c1 = A.mla_init_cache(cfg, 2, s, jnp.float32)
+        c2 = A.mla_init_cache(cfg, 2, s, jnp.float32)
+        for t in range(s):
+            y1, c1 = A.mla_decode(cfg, params, x[:, t:t + 1], c1,
+                                  jnp.int32(t), absorb=False)
+            y2, c2 = A.mla_decode(cfg, params, x[:, t:t + 1], c2,
+                                  jnp.int32(t), absorb=True)
+            np.testing.assert_allclose(y1, y2, atol=1e-4, rtol=1e-4)
+
+    def test_cache_is_compressed(self):
+        """MLA's point: the cache holds kv_lora + rope dims, not H*dh."""
+        cfg = _mla_cfg()
+        cache = A.mla_init_cache(cfg, 2, 16, jnp.float32)
+        assert cache.c_kv.shape == (2, 16, cfg.kv_lora_rank)
+        assert cache.k_pe.shape == (2, 16, cfg.qk_rope_dim)
+        full_kv_floats = 2 * 16 * cfg.num_heads * cfg.v_head_dim * 2
+        mla_floats = cache.c_kv.size + cache.k_pe.size
+        assert mla_floats < 0.25 * full_kv_floats
+
+
+class TestRoPE:
+    def test_rope_preserves_norm(self):
+        x = jax.random.normal(jax.random.key(0), (2, 8, 4, 32))
+        pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+        y = apply_rope(x, pos, 1e4)
+        np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                                   jnp.linalg.norm(x, axis=-1),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_rope_relative_property(self):
+        """<rope(q,i), rope(k,j)> depends only on i - j."""
+        q = jax.random.normal(jax.random.key(1), (1, 1, 1, 32))
+        k = jax.random.normal(jax.random.key(2), (1, 1, 1, 32))
+
+        def dot_at(i, j):
+            qi = apply_rope(q, jnp.full((1, 1), i), 1e4)
+            kj = apply_rope(k, jnp.full((1, 1), j), 1e4)
+            return float(jnp.sum(qi * kj))
+
+        assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), abs=1e-4)
+        assert dot_at(5, 3) != pytest.approx(dot_at(5, 4), abs=1e-3)
+
+    def test_mrope_matches_rope_for_text(self):
+        """With t=h=w positions, M-RoPE must equal plain RoPE."""
+        x = jax.random.normal(jax.random.key(3), (2, 8, 4, 32))
+        pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+        pos3 = jnp.broadcast_to(pos[None], (3, 2, 8))
+        y1 = apply_rope(x, pos, 1e4)
+        y2 = apply_mrope(x, pos3, 1e4, (4, 6, 6))
+        np.testing.assert_allclose(y1, y2, atol=1e-5)
+
+    def test_mrope_distinguishes_spatial_positions(self):
+        x = jax.random.normal(jax.random.key(4), (1, 4, 2, 32))
+        t = jnp.zeros((1, 4), jnp.int32)
+        h = jnp.arange(4)[None]
+        w = jnp.zeros((1, 4), jnp.int32)
+        y = apply_mrope(x, jnp.stack([t, h, w]), 1e4, (4, 6, 6))
+        y0 = apply_mrope(x, jnp.stack([t, w, w]), 1e4, (4, 6, 6))
+        assert float(jnp.max(jnp.abs(y - y0))) > 1e-3

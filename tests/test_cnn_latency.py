@@ -1,0 +1,87 @@
+"""Tests for the runnable hand-tracking CNNs and the latency model."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import latency
+from repro.core.handtracking import build_detnet, build_keynet
+from repro.models.cnn import HandCNN
+
+
+class TestHandCNN:
+    def test_detnet_geometry_matches_table(self):
+        """The executable model must have exactly the analytic MACs —
+        the link between the power model's counts and real compute."""
+        cnn = HandCNN.detnet()
+        assert cnn.traced_macs() == build_detnet().total_macs
+
+    def test_keynet_geometry_matches_table(self):
+        cnn = HandCNN.keynet()
+        assert cnn.traced_macs() == build_keynet().total_macs
+
+    def test_detnet_runs(self):
+        cnn = HandCNN.detnet()
+        params = cnn.init(jax.random.key(0))
+        x = jax.random.normal(jax.random.key(1), (1, 240, 320, 1)) * 0.5
+        out = cnn.apply(params, x)
+        # concatenated cls+box heads over the 20x15 anchor grid
+        assert out.shape == (1, 20 * 15 * (6 + 24))
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_keynet_runs_and_outputs_keypoints(self):
+        cnn = HandCNN.keynet()
+        params = cnn.init(jax.random.key(0))
+        x = jax.random.normal(jax.random.key(1), (2, 96, 96, 1)) * 0.5
+        out = cnn.apply(params, x)
+        assert out.shape == (2, 21 * 3)     # 21 keypoints x (x, y, z)
+
+    def test_rbe_int8_path_close_to_float(self):
+        """Routing pointwise convs + FC through the int8 kernel stays
+        within 8-bit quantization error of the float model."""
+        cnn = HandCNN.keynet()
+        params = cnn.init(jax.random.key(0))
+        x = jax.random.normal(jax.random.key(1), (1, 96, 96, 1)) * 0.5
+        ref = cnn.apply(params, x, use_rbe_int8=False)
+        got = cnn.apply(params, x, use_rbe_int8=True)
+        rel = float(jnp.linalg.norm(got - ref)
+                    / jnp.maximum(jnp.linalg.norm(ref), 1e-9))
+        assert rel < 0.15, rel
+
+    def test_param_count_matches_table(self):
+        cnn = HandCNN.detnet()
+        params = cnn.init(jax.random.key(0))
+        n_w = sum(p["w"].size for p in params)
+        assert n_w == build_detnet().total_weight_bytes  # 8-bit: 1 B/param
+
+
+class TestLatency:
+    def test_distributed_cuts_readout_latency(self):
+        """Paper claim (2): uTSV readout is ~200x faster than MIPI."""
+        c = latency.centralized_latency()
+        d = latency.distributed_latency()
+        assert d.t_readout < c.t_readout / 100
+
+    def test_distributed_total_latency_lower(self):
+        """Paper §1: latency benefits of the DOSC architecture."""
+        r = latency.latency_comparison()
+        assert r["distributed_ms"] < r["centralized_ms"]
+        assert r["_saving"] > 0
+
+    def test_latency_breakdown_sums(self):
+        c = latency.centralized_latency()
+        assert c.total == pytest.approx(
+            c.t_expose + c.t_readout + c.t_detnet + c.t_comm_roi
+            + c.t_queue + c.t_keynet)
+
+    def test_queue_is_the_structural_win(self):
+        """The aggregator queue shrinks from N x (det+key) to N x key."""
+        r = latency.latency_comparison()
+        assert r["_queue_saving_ms"] > r["_readout_saving_ms"]
+
+    def test_slower_sensor_node_still_latency_competitive(self):
+        d16 = latency.distributed_latency(sensor_node="16nm")
+        c = latency.centralized_latency()
+        # 16nm sensors are slower but the readout win keeps total below
+        # centralized + one frame period
+        assert d16.total < c.total + 1 / 30

@@ -1,0 +1,143 @@
+"""Unit tests for the faithful semi-analytical power model (Eqs. 1-11)."""
+
+import math
+
+import pytest
+
+from repro.core import energy as E
+from repro.core import system
+from repro.core.constants import (DPS_CAMERA, MIPI, NODE_7NM, NODE_16NM,
+                                  SRAM_16NM, MRAM_16NM, UTSV, T_SENSE_S)
+
+
+class TestEquations:
+    def test_eq5_comm_energy(self):
+        # Table 2: MIPI 100 pJ/B, uTSV 5 pJ/B
+        assert E.comm_energy(1e6, MIPI) == pytest.approx(1e6 * 100e-12)
+        assert E.comm_energy(1e6, UTSV) == pytest.approx(1e6 * 5e-12)
+
+    def test_eq6_comm_time(self):
+        # full VGA RAW10 frame over MIPI at 0.5 GB/s
+        assert E.comm_time(384000, MIPI) == pytest.approx(768e-6)
+        assert E.comm_time(384000, UTSV) == pytest.approx(3.84e-6)
+
+    def test_eq4_off_time_clamps(self):
+        assert E.camera_off_time(30.0, 5e-3, 1e-3) == pytest.approx(
+            1 / 30 - 6e-3)
+        assert E.camera_off_time(1000.0, 5e-3, 1e-3) == 0.0
+
+    def test_eq3_camera_energy_components(self):
+        t_comm = E.comm_time(384000, MIPI)
+        e = E.camera_energy(DPS_CAMERA, 30.0, T_SENSE_S, t_comm)
+        expected = (15e-3 * T_SENSE_S + 36e-3 * t_comm
+                    + 1.5e-3 * (1 / 30 - T_SENSE_S - t_comm))
+        assert e == pytest.approx(expected)
+
+    def test_eq3_utsv_reduces_camera_energy(self):
+        """The paper's claim (2): uTSV shortens the 36 mW readout window."""
+        t_mipi = E.comm_time(384000, MIPI)
+        t_utsv = E.comm_time(384000, UTSV)
+        e_mipi = E.camera_energy(DPS_CAMERA, 30.0, T_SENSE_S, t_mipi)
+        e_utsv = E.camera_energy(DPS_CAMERA, 30.0, T_SENSE_S, t_utsv)
+        assert e_utsv < e_mipi
+
+    def test_eq7_compute(self):
+        assert E.compute_energy(1e9, NODE_7NM.e_mac) == pytest.approx(
+            1e9 * NODE_7NM.e_mac)
+        assert NODE_16NM.e_mac > NODE_7NM.e_mac  # node scaling
+
+    def test_eq8_memory_access(self):
+        e = E.memory_access_energy(1000, 500, SRAM_16NM)
+        assert e == pytest.approx(1000 * SRAM_16NM.e_read
+                                  + 500 * SRAM_16NM.e_write)
+
+    def test_eq11_leakage_states(self):
+        cap = 1 << 20  # 1 MiB
+        # fully busy: only on-state leakage
+        e_busy = E.memory_leakage_energy(1 / 30, 30.0, cap, SRAM_16NM)
+        assert e_busy == pytest.approx(cap * SRAM_16NM.leak_on / 30)
+        # fully idle: only retention leakage
+        e_idle = E.memory_leakage_energy(0.0, 30.0, cap, SRAM_16NM)
+        assert e_idle == pytest.approx(cap * SRAM_16NM.leak_ret / 30)
+        # MRAM retains with zero leakage
+        assert E.memory_leakage_energy(0.0, 30.0, cap, MRAM_16NM) == 0.0
+
+    def test_eq1_eq2_aggregation(self):
+        mods = [E.ModuleEnergy("a", "g1", 1e-3, 30.0),
+                E.ModuleEnergy("b", "g2", 2e-3, 10.0)]
+        assert E.total_energy_per_frame(mods) == pytest.approx(3e-3)
+        assert E.average_power(mods) == pytest.approx(30e-3 + 20e-3)
+        bd = E.power_breakdown(mods)
+        assert bd["g1"] == pytest.approx(30e-3)
+        assert bd["g2"] == pytest.approx(20e-3)
+
+
+class TestPaperHeadlines:
+    """The three quantitative claims of Fig. 5 (reproduction targets)."""
+
+    def test_fig5a_distributed_7nm_saves_24pct(self):
+        r = system.fig5a_comparison()
+        assert r["_saving_7nm"] == pytest.approx(0.24, abs=0.02)
+
+    def test_fig5a_distributed_16nm_saves_16pct(self):
+        r = system.fig5a_comparison()
+        assert r["_saving_16nm"] == pytest.approx(0.16, abs=0.02)
+
+    def test_fig5b_hybrid_mram_saves_39pct(self):
+        r = system.fig5b_comparison()
+        assert r["_saving"] == pytest.approx(0.39, abs=0.02)
+
+    def test_cameras_and_mipi_dominate_centralized(self):
+        """Paper: 'the cameras and MIPIs dominate the power dissipation of
+        the centralized compute system.'"""
+        cen = system.build_centralized("7nm")
+        bd = cen.breakdown()
+        cam_mipi = bd["camera"] + bd["mipi"]
+        assert cam_mipi / cen.avg_power > 0.5
+
+    def test_memory_increases_slightly_when_distributed(self):
+        """Paper: 'the total memory energy consumption slightly increases in
+        the distributed computing system due to the duplication of the
+        weight storage memory in each sensor.'"""
+        cen = system.build_centralized("7nm")
+        dis = system.build_distributed("7nm", "7nm")
+        mem_c = cen.group_power("agg.memory")
+        mem_d = dis.group_power("agg.memory") + dis.group_power(
+            "sensor0.memory", "sensor1.memory", "sensor2.memory",
+            "sensor3.memory")
+        assert mem_d > mem_c                       # increases...
+        assert (mem_d - mem_c) < 0.10 * cen.avg_power  # ...slightly
+
+    def test_mipi_power_collapses_when_distributed(self):
+        """The power gain is 'mainly due to the decreased usage of the
+        energy-hungry serial interface (MIPI)'."""
+        cen = system.build_centralized("7nm")
+        dis = system.build_distributed("7nm", "7nm")
+        mipi_c = cen.group_power("mipi")
+        mipi_d = dis.group_power("mipi")
+        assert mipi_d < 0.1 * mipi_c
+
+    def test_distributed_beats_centralized_even_at_16nm(self):
+        """Conclusion: 'a significant reduction in the system power remains
+        when the on-sensor processor is implemented in an older technology
+        node.'"""
+        cen = system.build_centralized("7nm")
+        dis = system.build_distributed("7nm", "16nm")
+        assert dis.avg_power < cen.avg_power
+
+
+class TestSystemStructure:
+    def test_mram_unavailable_at_7nm(self):
+        with pytest.raises(ValueError):
+            system.build_distributed("7nm", "7nm", sensor_weight_mem="mram")
+
+    def test_power_scales_with_cameras(self):
+        p2 = system.build_centralized("7nm", num_cameras=2).avg_power
+        p4 = system.build_centralized("7nm", num_cameras=4).avg_power
+        assert p4 > p2
+
+    def test_detnet_fps_knob(self):
+        """DetNet rate is the paper's extra optimization knob."""
+        lo = system.build_distributed("7nm", "7nm", detnet_fps=5.0).avg_power
+        hi = system.build_distributed("7nm", "7nm", detnet_fps=30.0).avg_power
+        assert lo < hi

@@ -1,0 +1,139 @@
+"""Tests for the HLO collective parser + roofline assembly + DOSC advisor."""
+
+import pytest
+
+from repro.core import dosc, hlo_analysis as H, roofline, tpu_energy
+from repro.core.constants import TPU_V5E
+
+SAMPLE_HLO = """
+HloModule jit_step, entry_computation_layout={...}
+
+ENTRY %main (p0: bf16[256,4096]) -> bf16[256,4096] {
+  %p0 = bf16[256,4096]{1,0} parameter(0)
+  %all-reduce.1 = bf16[256,4096]{1,0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %all-gather.2 = f32[1024,128]{1,0} all-gather(%ag_in), replica_groups=[16,32]<=[512], dimensions={0}
+  %rs = f32[64,128]{1,0} reduce-scatter(%x), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %a2a = bf16[8,64]{1,0} all-to-all(%y), replica_groups={{0,1}}, dimensions={0}
+  %cp = u8[1024]{0} collective-permute(%z), source_target_pairs={{0,1},{1,0}}
+  %fusion.3 = bf16[256,4096]{1,0} fusion(%all-reduce.1), kind=kLoop
+  ROOT %done = bf16[256,4096]{1,0} copy(%fusion.3)
+}
+"""
+
+
+class TestHLOParse:
+    def test_finds_all_collectives(self):
+        s = H.parse_collectives(SAMPLE_HLO)
+        codes = sorted(o.opcode for o in s.ops)
+        assert codes == ["all-gather", "all-reduce", "all-to-all",
+                         "collective-permute", "reduce-scatter"]
+
+    def test_payload_bytes(self):
+        s = H.parse_collectives(SAMPLE_HLO)
+        by = s.by_opcode()
+        assert by["all-reduce"]["payload_bytes"] == 256 * 4096 * 2
+        assert by["all-gather"]["payload_bytes"] == 1024 * 128 * 4
+        assert by["collective-permute"]["payload_bytes"] == 1024
+
+    def test_group_sizes(self):
+        s = H.parse_collectives(SAMPLE_HLO)
+        sizes = {o.opcode: o.group_size for o in s.ops}
+        assert sizes["all-reduce"] == 4
+        assert sizes["all-gather"] == 32      # iota [16,32]<=[512]
+        assert sizes["reduce-scatter"] == 8
+        assert sizes["all-to-all"] == 2
+
+    def test_wire_bytes_ring_formulas(self):
+        s = H.parse_collectives(SAMPLE_HLO)
+        ar = next(o for o in s.ops if o.opcode == "all-reduce")
+        assert ar.wire_bytes == pytest.approx(2 * 3 / 4 * ar.payload_bytes)
+        ag = next(o for o in s.ops if o.opcode == "all-gather")
+        assert ag.wire_bytes == pytest.approx(31 / 32 * ag.payload_bytes)
+
+    def test_ignores_non_collectives(self):
+        s = H.parse_collectives(SAMPLE_HLO)
+        assert all(o.opcode in H.COLLECTIVE_OPS for o in s.ops)
+
+    def test_count_op(self):
+        assert H.count_op(SAMPLE_HLO, "fusion") == 1
+        assert H.count_op(SAMPLE_HLO, "all-reduce") == 1
+
+    def test_empty_text(self):
+        s = H.parse_collectives("")
+        assert s.total_payload_bytes == 0
+        assert s.total_wire_bytes == 0.0
+
+
+class TestRoofline:
+    def _terms(self):
+        s = H.parse_collectives(SAMPLE_HLO)
+        cost = {"flops": 1e12, "bytes accessed": 1e9}
+        return roofline.build_terms("testarch", "train_4k", "16x16", 256,
+                                    cost, s, model_flops_global=200e12)
+
+    def test_terms_seconds(self):
+        t = self._terms()
+        assert t.t_compute == pytest.approx(1e12 / TPU_V5E.peak_flops_bf16)
+        assert t.t_memory == pytest.approx(1e9 / TPU_V5E.hbm_bandwidth)
+        assert t.t_collective > 0
+
+    def test_dominant_and_bounds(self):
+        t = self._terms()
+        assert t.dominant in ("compute", "memory", "collective")
+        assert t.t_bound == max(t.t_compute, t.t_memory, t.t_collective)
+        assert t.t_serial >= t.t_bound
+
+    def test_useful_ratio(self):
+        t = self._terms()
+        assert t.useful_flops_ratio == pytest.approx(
+            200e12 / (1e12 * 256))
+
+    def test_table_formatting(self):
+        tbl = roofline.format_table([self._terms()])
+        assert "testarch" in tbl and "dominant" in tbl
+
+
+class TestTPUEnergy:
+    def test_tier_split(self):
+        s = H.parse_collectives(SAMPLE_HLO)
+        ici, dcn = tpu_energy.split_tiers(s, intra_pod_chips=16)
+        # the 32-wide all-gather spans pods; everything else fits in 16
+        assert dcn == pytest.approx(
+            next(o for o in s.ops if o.group_size == 32).wire_bytes)
+        assert ici > 0
+
+    def test_step_energy_positive_and_decomposes(self):
+        s = H.parse_collectives(SAMPLE_HLO)
+        cost = {"flops": 1e12, "bytes accessed": 1e9}
+        t = roofline.build_terms("a", "s", "m", 256, cost, s, 2e14)
+        e = tpu_energy.step_energy(t, s, intra_pod_chips=256)
+        assert e.total == pytest.approx(sum(e.breakdown().values()))
+        assert e.avg_power_w > 0
+
+
+class TestDOSCAdvisor:
+    def test_hierarchical_beats_flat_across_pods(self):
+        """The paper's insight: route bulk traffic over the cheap tier."""
+        ranked = dosc.advise(grad_elems_per_chip=50e6, pods=2,
+                             intra_pod_chips=256, objective="time")
+        flat = next(c for c in ranked if c.plan.name == "flat-ar-f32")
+        hier = next(c for c in ranked if c.plan.name == "hier-f32")
+        assert hier.t_comm_s < flat.t_comm_s
+
+    def test_compression_reduces_dcn_bytes(self):
+        ranked = dosc.advise(grad_elems_per_chip=50e6, pods=2,
+                             intra_pod_chips=256)
+        f32 = next(c for c in ranked if c.plan.name == "hier-f32")
+        int8 = next(c for c in ranked if c.plan.name == "hier-int8-ef")
+        assert int8.dcn_bytes == pytest.approx(f32.dcn_bytes / 4)
+
+    def test_single_pod_has_no_dcn(self):
+        ranked = dosc.advise(grad_elems_per_chip=50e6, pods=1,
+                             intra_pod_chips=256)
+        assert all(c.dcn_bytes == 0 for c in ranked
+                   if c.plan.hierarchical)
+
+    def test_energy_objective_prefers_compressed(self):
+        ranked = dosc.advise(grad_elems_per_chip=50e6, pods=2,
+                             intra_pod_chips=256, objective="energy")
+        assert ranked[0].plan.dcn_dtype_bytes <= 2

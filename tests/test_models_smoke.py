@@ -1,0 +1,188 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each of the 10 assigned architectures: instantiate a REDUCED config of
+the same family, run one forward and one train step (loss + grads) on CPU,
+assert output shapes and absence of NaNs.  Full configs are exercised only
+via the dry-run (ShapeDtypeStruct, no allocation).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced_config
+from repro.models import transformer as T
+from repro.models.transformer import Batch
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.frontend_stub:
+        emb = jax.random.normal(key, (B, S, cfg.d_model),
+                                jnp.float32) * 0.1
+        return Batch(embeds=emb.astype(jnp.bfloat16), labels=toks)
+    return Batch(tokens=toks, labels=toks)
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.key(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_shape_and_finite(self, arch, key):
+        cfg = get_reduced_config(arch)
+        params = T.init_params(cfg, key)
+        batch = _batch(cfg, key)
+        logits = T.forward(cfg, params, batch)
+        assert logits.shape == (B, S, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    def test_train_step_loss_and_grads_finite(self, arch, key):
+        cfg = get_reduced_config(arch)
+        params = T.init_params(cfg, key)
+        batch = _batch(cfg, key)
+        loss, grads = jax.value_and_grad(
+            lambda p: T.loss_fn(cfg, p, batch))(params)
+        assert bool(jnp.isfinite(loss))
+        for leaf in jax.tree.leaves(grads):
+            assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+    def test_decode_step_shapes(self, arch, key):
+        cfg = get_reduced_config(arch)
+        params = T.init_params(cfg, key)
+        cache = T.init_cache(cfg, B, S)
+        if cfg.frontend_stub:
+            b1 = Batch(embeds=jnp.zeros((B, 1, cfg.d_model), jnp.bfloat16))
+        else:
+            b1 = Batch(tokens=jnp.zeros((B, 1), jnp.int32))
+        logits, cache2 = T.decode_step(cfg, params, cache, b1, jnp.int32(0))
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+        assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+    def test_full_config_matches_assignment(self, arch, key):
+        """The exact published numbers from the assignment table."""
+        cfg = get_config(arch)
+        expected = {
+            "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+            "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+            "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+            "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+            "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+            "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102400),
+            "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+            "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+            "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+            "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+        }[arch]
+        got = (cfg.num_layers, cfg.d_model, cfg.num_heads,
+               cfg.num_kv_heads, cfg.d_ff, cfg.vocab_size)
+        assert got == expected
+
+
+class TestArchSpecifics:
+    def test_moe_configs(self):
+        arctic = get_config("arctic-480b")
+        assert (arctic.moe.num_experts, arctic.moe.top_k) == (128, 2)
+        assert arctic.moe.dense_residual
+        ds = get_config("deepseek-v2-236b")
+        assert (ds.moe.num_experts, ds.moe.top_k) == (160, 6)
+        assert ds.moe.num_shared_experts == 2
+        assert ds.attention_kind == "mla" and ds.kv_lora_rank == 512
+        jm = get_config("jamba-v0.1-52b")
+        assert (jm.moe.num_experts, jm.moe.top_k) == (16, 2)
+        assert jm.moe.every_k_layers == 2
+
+    def test_jamba_1_7_interleave(self):
+        jm = get_config("jamba-v0.1-52b")
+        kinds = [jm.layer_kind(i) for i in range(jm.num_layers)]
+        assert kinds.count("attn") == 4            # 1:7 over 32 layers
+        assert all(kinds[i] == "attn" for i in (4, 12, 20, 28))
+
+    def test_gemma2_local_global_alternation(self):
+        g = get_config("gemma2-2b")
+        kinds = [g.layer_kind(i) for i in range(g.num_layers)]
+        assert kinds[::2] == ["attn_local"] * 13
+        assert kinds[1::2] == ["attn_global"] * 13
+        assert g.attn_logit_softcap == 50.0
+        assert g.final_logit_softcap == 30.0
+
+    def test_xlstm_mixed_blocks(self):
+        x = get_config("xlstm-350m")
+        kinds = {x.layer_kind(i) for i in range(x.num_layers)}
+        assert kinds == {"mlstm", "slstm"}
+
+    def test_param_counts_roughly_match_names(self):
+        """Analytic count should land near the billed model size."""
+        expectations = {
+            "phi4-mini-3.8b": (3.0e9, 5.0e9),
+            "qwen2-0.5b": (0.3e9, 0.7e9),
+            "codeqwen1.5-7b": (6.0e9, 8.5e9),
+            "gemma2-2b": (2.0e9, 3.5e9),
+            "arctic-480b": (400e9, 560e9),
+            "deepseek-v2-236b": (180e9, 280e9),
+            "jamba-v0.1-52b": (40e9, 65e9),
+        }
+        for arch, (lo, hi) in expectations.items():
+            n = get_config(arch).param_count()
+            assert lo < n < hi, f"{arch}: {n/1e9:.1f}B outside [{lo/1e9}," \
+                                f"{hi/1e9}]B"
+
+    def test_moe_active_params_much_smaller(self):
+        for arch in ("arctic-480b", "deepseek-v2-236b", "jamba-v0.1-52b"):
+            cfg = get_config(arch)
+            assert cfg.param_count(active_only=True) \
+                < 0.35 * cfg.param_count()
+
+
+class TestDecodeConsistency:
+    """Token-by-token decode must reproduce the full forward pass."""
+
+    @pytest.mark.parametrize("arch", [
+        "phi4-mini-3.8b", "gemma2-2b", "xlstm-350m", "musicgen-large",
+        "qwen2-vl-2b",
+    ])
+    def test_decode_matches_forward(self, arch, key):
+        cfg = dataclasses.replace(get_reduced_config(arch), dtype="float32")
+        params = T.init_params(cfg, key)
+        s = 12
+        toks = jax.random.randint(key, (B, s), 0, cfg.vocab_size)
+        if cfg.frontend_stub:
+            emb = jax.random.normal(key, (B, s, cfg.d_model),
+                                    jnp.float32) * 0.1
+            batch = Batch(embeds=emb)
+        else:
+            batch = Batch(tokens=toks)
+        full = T.forward(cfg, params, batch)
+        cache = T.init_cache(cfg, B, s)
+        for t in range(s):
+            b1 = (Batch(embeds=batch.embeds[:, t:t + 1])
+                  if cfg.frontend_stub else Batch(tokens=toks[:, t:t + 1]))
+            lg, cache = T.decode_step(cfg, params, cache, b1, jnp.int32(t))
+            assert float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))) < 1e-3
+
+    @pytest.mark.parametrize("arch", [
+        "arctic-480b", "deepseek-v2-236b", "jamba-v0.1-52b",
+    ])
+    def test_moe_decode_matches_forward_dropless(self, arch, key):
+        """With dropless capacity the MoE paths agree exactly; with finite
+        capacity they may differ only via documented drops."""
+        cfg = get_reduced_config(arch)
+        moe = dataclasses.replace(cfg.moe, capacity_factor=64.0)
+        cfg = dataclasses.replace(cfg, dtype="float32", moe=moe)
+        params = T.init_params(cfg, key)
+        s = 8
+        toks = jax.random.randint(key, (B, s), 0, cfg.vocab_size)
+        full = T.forward(cfg, params, Batch(tokens=toks))
+        cache = T.init_cache(cfg, B, s)
+        for t in range(s):
+            lg, cache = T.decode_step(cfg, params, cache,
+                                      Batch(tokens=toks[:, t:t + 1]),
+                                      jnp.int32(t))
+            assert float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))) < 1e-3

@@ -1,0 +1,91 @@
+"""Tests for the partition optimizer and the RBE roofline model (Fig. 2/4)."""
+
+import pytest
+
+from repro.core import partition, rbe
+from repro.core.constants import RBE
+from repro.core.handtracking import build_detnet, build_keynet
+from repro.core.workloads import LayerKind, conv2d, depthwise, pointwise
+
+
+class TestRBERoofline:
+    """Fig. 4: 'layer performance is almost completely bounded by the weight
+    streaming'; conv near peak > pointwise > depthwise."""
+
+    def test_kind_ordering_at_same_shape(self):
+        c = conv2d("c", 40, 30, 96, 96, k=3)
+        p = pointwise("p", 40, 30, 96, 96)
+        d = depthwise("d", 40, 30, 96)
+        mc = rbe.mac_per_cycle(c, RBE)
+        mp = rbe.mac_per_cycle(p, RBE)
+        md = rbe.mac_per_cycle(d, RBE)
+        assert mc > mp > md
+
+    def test_conv_near_peak(self):
+        c = conv2d("c", 40, 30, 96, 96, k=3)
+        assert rbe.mac_per_cycle(c, RBE) > 0.85 * RBE.peak_mac_per_cycle
+
+    def test_never_exceeds_peak(self):
+        for layer in build_detnet().layers + build_keynet().layers:
+            assert rbe.mac_per_cycle(layer, RBE) <= RBE.peak_mac_per_cycle
+
+    def test_quarter_scale_on_sensor(self):
+        c = conv2d("c", 40, 30, 96, 96, k=3)
+        full = rbe.mac_per_cycle(c, RBE, scale=1.0)
+        quarter = rbe.mac_per_cycle(c, RBE, scale=0.25)
+        assert quarter == pytest.approx(full * 0.25, rel=1e-6)
+
+    def test_weight_stream_bound_layers_exist(self):
+        """Some layers of the real workload must sit on the bandwidth roof
+        (the paper's observation: 'several layers are memory-bounded by
+        weight streaming')."""
+        pts = (rbe.roofline_points(build_detnet())
+               + rbe.roofline_points(build_keynet()))
+        assert any(p.bound == "weight-stream" for p in pts)
+
+    def test_processing_time_positive_and_sane(self):
+        from repro.core.constants import NODE_16NM
+        t = rbe.processing_time_s(build_detnet(), NODE_16NM, scale=0.25)
+        # a sensor-class engine should take milliseconds, not seconds
+        assert 1e-3 < t < 0.1
+
+
+class TestPartition:
+    def test_paper_split_saves_about_24pct(self):
+        pts = partition.sweep_partitions()
+        n_det = len(build_detnet().layers)
+        saving = 1 - pts[n_det].avg_power / pts[0].avg_power
+        assert saving == pytest.approx(0.24, abs=0.02)
+
+    def test_paper_split_beats_centralized_and_full_onsensor(self):
+        pts = partition.sweep_partitions()
+        n_det = len(build_detnet().layers)
+        paper = pts[n_det].avg_power
+        assert paper < pts[0].avg_power      # beats centralized
+        assert paper < pts[-1].avg_power     # beats everything-on-sensor
+
+    def test_sweep_optimum_at_least_paper_split(self):
+        """Layer-level sweep may beat the model-boundary split (a
+        beyond-paper finding), but can never be worse."""
+        pts = partition.sweep_partitions()
+        n_det = len(build_detnet().layers)
+        best = min(pts, key=lambda p: p.avg_power)
+        assert best.avg_power <= pts[n_det].avg_power
+
+    def test_mipi_traffic_monotone_through_boundary(self):
+        """Crossing into the pipeline sharply cuts MIPI traffic vs
+        centralized."""
+        pts = partition.sweep_partitions()
+        n_det = len(build_detnet().layers)
+        assert pts[n_det].mipi_bytes_per_s < 0.05 * pts[0].mipi_bytes_per_s
+
+    def test_optimal_partition_helper(self):
+        best = partition.optimal_partition()
+        pts = partition.sweep_partitions()
+        assert best.avg_power == min(p.avg_power for p in pts)
+
+    def test_centralized_cut_matches_system_builder(self):
+        from repro.core import system
+        cut0 = partition.evaluate_cut(0).avg_power
+        cen = system.build_centralized("7nm").avg_power
+        assert cut0 == pytest.approx(cen, rel=0.02)

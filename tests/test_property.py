@@ -1,0 +1,159 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import energy as E
+from repro.core import hlo_analysis as H
+from repro.core import rbe
+from repro.core.constants import (DPS_CAMERA, MIPI, RBE, SRAM_16NM, UTSV)
+from repro.core.workloads import LayerKind, LayerSpec
+from repro.kernels.rbe_matmul import quantize_rowwise
+
+MAX_EX = 25
+
+
+class TestEnergyInvariants:
+    @given(bytes_=st.floats(1, 1e9), fps=st.floats(1, 120))
+    @settings(max_examples=MAX_EX, deadline=None)
+    def test_comm_energy_linear_in_bytes(self, bytes_, fps):
+        assert E.comm_energy(2 * bytes_, MIPI) == pytest.approx(
+            2 * E.comm_energy(bytes_, MIPI))
+        # uTSV is always cheaper per byte than MIPI (Table 2)
+        assert E.comm_energy(bytes_, UTSV) < E.comm_energy(bytes_, MIPI)
+
+    @given(fps=st.floats(1, 120), t_sense=st.floats(1e-4, 8e-3),
+           t_comm=st.floats(1e-7, 2e-3))
+    @settings(max_examples=MAX_EX, deadline=None)
+    def test_camera_energy_positive_and_monotone_in_readout(
+            self, fps, t_sense, t_comm):
+        e1 = E.camera_energy(DPS_CAMERA, fps, t_sense, t_comm)
+        e2 = E.camera_energy(DPS_CAMERA, fps, t_sense, t_comm * 2)
+        assert e1 > 0
+        # longer readout window always costs energy (P_rd > P_off)
+        if 1 / fps >= t_sense + 2 * t_comm:
+            assert e2 >= e1
+
+    @given(fps=st.floats(1, 120), cap=st.integers(1024, 1 << 24),
+           duty=st.floats(0, 1))
+    @settings(max_examples=MAX_EX, deadline=None)
+    def test_leakage_bounded_by_always_on(self, fps, cap, duty):
+        """Eq. 11 leakage is bounded by the always-on leakage."""
+        t_proc = duty / fps
+        e = E.memory_leakage_energy(t_proc, fps, cap, SRAM_16NM)
+        e_on = cap * SRAM_16NM.leak_on / fps
+        e_ret = cap * SRAM_16NM.leak_ret / fps
+        assert e_ret - 1e-18 <= e <= e_on + 1e-18
+
+    @given(macs=st.integers(1, 10**10))
+    @settings(max_examples=MAX_EX, deadline=None)
+    def test_compute_energy_linear(self, macs):
+        from repro.core.constants import NODE_7NM
+        assert E.compute_energy(macs, NODE_7NM.e_mac) == pytest.approx(
+            macs * NODE_7NM.e_mac)
+
+
+class TestRBEInvariants:
+    layer_st = st.builds(
+        LayerSpec,
+        name=st.just("l"),
+        kind=st.sampled_from(list(LayerKind)),
+        macs=st.integers(10**3, 10**9),
+        weight_bytes=st.integers(16, 10**7),
+        in_act_bytes=st.integers(16, 10**7),
+        out_act_bytes=st.integers(16, 10**7),
+    )
+
+    @given(layer=layer_st, scale=st.floats(0.05, 1.0))
+    @settings(max_examples=MAX_EX, deadline=None)
+    def test_throughput_never_exceeds_scaled_peak(self, layer, scale):
+        eff = rbe.mac_per_cycle(layer, RBE, scale=scale)
+        assert 0 < eff <= RBE.peak_mac_per_cycle * scale + 1e-9
+
+    @given(layer=layer_st)
+    @settings(max_examples=MAX_EX, deadline=None)
+    def test_weight_stream_at_least_once(self, layer):
+        """Weights are fetched at least once per inference."""
+        assert rbe.weight_stream_bytes(layer) >= layer.weight_bytes
+
+
+class TestQuantizationInvariants:
+    @given(rows=st.integers(1, 16), cols=st.integers(2, 64),
+           scale=st.floats(0.01, 100.0), seed=st.integers(0, 2**30))
+    @settings(max_examples=MAX_EX, deadline=None)
+    def test_int8_roundtrip_error_bound(self, rows, cols, scale, seed):
+        x = np.asarray(jax.random.normal(
+            jax.random.key(seed), (rows, cols))) * scale
+        q, s = quantize_rowwise(jnp.asarray(x), axis=-1)
+        back = np.asarray(q, np.float32) * np.asarray(s)[:, None]
+        # error per element bounded by half a quantization step
+        amax = np.abs(x).max(axis=-1)
+        bound = amax / 127 * 0.5 + 1e-6
+        assert (np.abs(back - x).max(axis=-1) <= bound + 1e-5).all()
+
+    @given(rows=st.integers(1, 8), cols=st.integers(2, 32),
+           seed=st.integers(0, 2**30))
+    @settings(max_examples=MAX_EX, deadline=None)
+    def test_int8_range(self, rows, cols, seed):
+        x = jax.random.normal(jax.random.key(seed), (rows, cols)) * 1e3
+        q, _ = quantize_rowwise(x, axis=-1)
+        assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= 127
+
+
+class TestAttentionInvariants:
+    @given(seed=st.integers(0, 2**30), s=st.sampled_from([32, 64]),
+           h=st.sampled_from([2, 4]))
+    @settings(max_examples=10, deadline=None)
+    def test_output_in_value_hull(self, seed, s, h):
+        """Attention outputs are convex combinations of value rows."""
+        from repro.models.attention import blockwise_attention
+        ks = jax.random.split(jax.random.key(seed), 3)
+        q = jax.random.normal(ks[0], (1, s, h, 16))
+        k = jax.random.normal(ks[1], (1, s, h, 16))
+        v = jax.random.normal(ks[2], (1, s, h, 16))
+        out = blockwise_attention(q, k, v, causal=True, q_block=16,
+                                  kv_block=16)
+        vmin = jnp.min(v, axis=1, keepdims=True) - 1e-4
+        vmax = jnp.max(v, axis=1, keepdims=True) + 1e-4
+        assert bool(jnp.all(out >= vmin) and jnp.all(out <= vmax))
+
+    @given(seed=st.integers(0, 2**30))
+    @settings(max_examples=10, deadline=None)
+    def test_causality(self, seed):
+        """Perturbing future tokens never changes past outputs."""
+        from repro.models.attention import blockwise_attention
+        ks = jax.random.split(jax.random.key(seed), 3)
+        q = jax.random.normal(ks[0], (1, 64, 2, 16))
+        k = jax.random.normal(ks[1], (1, 64, 2, 16))
+        v = jax.random.normal(ks[2], (1, 64, 2, 16))
+        o1 = blockwise_attention(q, k, v, causal=True, q_block=16,
+                                 kv_block=16)
+        k2 = k.at[:, 40:].set(9.0)
+        v2 = v.at[:, 40:].set(-9.0)
+        o2 = blockwise_attention(q, k2, v2, causal=True, q_block=16,
+                                 kv_block=16)
+        np.testing.assert_allclose(o1[:, :40], o2[:, :40], atol=1e-5)
+
+
+class TestHLOParserInvariants:
+    @given(dims=st.lists(st.integers(1, 64), min_size=0, max_size=4),
+           dtype=st.sampled_from(["f32", "bf16", "s8", "u32"]),
+           op=st.sampled_from(sorted(H.COLLECTIVE_OPS)),
+           group=st.integers(2, 64))
+    @settings(max_examples=MAX_EX, deadline=None)
+    def test_synthetic_collective_lines(self, dims, dtype, op, group):
+        shape = f"{dtype}[{','.join(map(str, dims))}]"
+        groups = "{{" + ",".join(map(str, range(group))) + "}}"
+        line = (f"  %x.1 = {shape} {op}(%y), "
+                f"replica_groups={groups}, dimensions={{0}}\n")
+        s = H.parse_collectives(line)
+        assert len(s.ops) == 1
+        o = s.ops[0]
+        nbytes = int(np.prod(dims)) if dims else 1
+        per = {"f32": 4, "bf16": 2, "s8": 1, "u32": 4}[dtype]
+        assert o.payload_bytes == nbytes * per
+        assert o.group_size == group
+        assert o.wire_bytes <= 2 * o.payload_bytes

@@ -1,0 +1,131 @@
+"""Calibrate unpublished silicon constants to the paper's headline results.
+
+The paper gives Table 1 (camera) and Table 2 (links) but only *describes* the
+MAC/memory constants ("post-synthesis simulations and memory compilers").
+This script searches literature-plausible ranges for those constants so the
+model reproduces:
+
+    Fig. 5a: 24% saving (dist 7nm), 16% saving (dist 16nm on-sensor)
+    Fig. 5b: 39% on-sensor saving (hybrid MRAM vs SRAM, 16nm, 10 fps)
+
+subject to qualitative constraints the paper states:
+    * cameras + MIPI dominate the centralized system power;
+    * total memory power increases only slightly under distribution.
+
+Run:  PYTHONPATH=src python tools/calibrate_constants.py
+The winning parameters are printed and then baked into
+src/repro/core/constants.py by hand (with provenance comments).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import sys
+
+import numpy as np
+
+from repro.core import system
+from repro.core.constants import (MRAM_16NM, NODE_16NM, NODE_7NM, MemorySpec,
+                                  TechNode)
+
+MIB = float(1 << 20)
+
+rng = np.random.default_rng(0)
+
+TARGETS = dict(s7=0.24, s16=0.16, fb=0.39)
+
+
+def make_nodes(p):
+    sram16 = MemorySpec("SRAM-16nm", e_read=0.80e-12, e_write=1.00e-12,
+                        leak_on=p["lk16"] / MIB,
+                        leak_ret=p["lk16"] * p["rret"] / MIB)
+    sram7 = MemorySpec("SRAM-7nm", e_read=0.50e-12, e_write=0.65e-12,
+                       leak_on=p["lk16"] * p["r7"] / MIB,
+                       leak_ret=p["lk16"] * p["r7"] * p["rret"] / MIB)
+    mram16 = dataclasses.replace(MRAM_16NM,
+                                 leak_on=p["lk16"] * 0.03 / MIB, leak_ret=0.0)
+    n16 = TechNode("16nm", e_mac=p["em7"] * p["emr"], f_clk=500e6,
+                   sram=sram16, mram=mram16)
+    n7 = TechNode("7nm", e_mac=p["em7"], f_clk=700e6, sram=sram7, mram=None)
+    return n7, n16
+
+
+def evaluate(p):
+    n7, n16 = make_nodes(p)
+    ts = p["tsense"]
+    cen = system.build_centralized(n7, t_sense=ts)
+    d77 = system.build_distributed(n7, n7, t_sense=ts)
+    d716 = system.build_distributed(n7, n16, t_sense=ts)
+    base = cen.avg_power
+    s7 = 1 - d77.avg_power / base
+    s16 = 1 - d716.avg_power / base
+
+    def onsensor(mem):
+        rep = system.build_distributed(n7, n16, sensor_weight_mem=mem,
+                                       detnet_fps=10.0, t_sense=ts)
+        return rep.group_power("sensor")
+
+    fb = 1 - onsensor("mram") / onsensor("sram")
+
+    # qualitative constraints
+    bd = cen.breakdown()
+    cam_mipi = bd.get("camera", 0) + bd.get("mipi", 0)
+    dom = cam_mipi / base  # should be > 0.5 ("cameras and MIPIs dominate")
+    mem_c = cen.group_power("agg.memory")
+    mem_d = (d77.group_power("agg.memory")
+             + d77.group_power("sensor0.memory") * 4)
+    dmem = (mem_d - mem_c) / base  # small positive ("slightly increases")
+
+    loss = ((s7 - TARGETS["s7"]) ** 2 + (s16 - TARGETS["s16"]) ** 2
+            + (fb - TARGETS["fb"]) ** 2)
+    if dom < 0.55:
+        loss += (0.55 - dom) ** 2 * 10
+    if dmem < 0.0:
+        loss += dmem ** 2 * 10
+    if dmem > 0.08:
+        loss += (dmem - 0.08) ** 2 * 10
+    return loss, dict(s7=s7, s16=s16, fb=fb, dom=dom, dmem=dmem,
+                      base_mw=base * 1e3)
+
+
+BOUNDS = {
+    "tsense": (1.0e-3, 7e-3),    # exposure+ADC window
+    "lk16": (0.5e-3, 6.0e-3),    # 16nm SRAM active leakage, W/MiB
+    "rret": (0.20, 0.70),        # retention:active leakage ratio
+    "r7": (0.55, 1.0),           # 7nm:16nm SRAM leakage ratio
+    "em7": (0.10e-12, 0.55e-12),   # 7nm J/MAC
+    "emr": (1.5, 2.2),             # 16nm:7nm MAC energy ratio (node scaling)
+}
+
+
+def sample():
+    p = {k: rng.uniform(*v) for k, v in BOUNDS.items()}
+    return p
+
+
+def main(n_random=4000, n_refine=60):
+    best, bp, bm = np.inf, None, None
+    for _ in range(n_random):
+        p = sample()
+        loss, m = evaluate(p)
+        if loss < best:
+            best, bp, bm = loss, p, m
+    # coordinate refinement
+    for _ in range(n_refine):
+        for k in BOUNDS:
+            lo, hi = BOUNDS[k]
+            for mult in (0.9, 0.95, 1.05, 1.1):
+                q = dict(bp)
+                q[k] = float(np.clip(bp[k] * mult, lo, hi))
+                loss, m = evaluate(q)
+                if loss < best:
+                    best, bp, bm = loss, q, m
+    print("loss:", best)
+    for k, v in bp.items():
+        print(f"  {k:8s} = {v:.6e}")
+    for k, v in bm.items():
+        print(f"  {k:8s} : {v:.4f}")
+
+
+if __name__ == "__main__":
+    main()

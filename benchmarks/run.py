@@ -8,6 +8,8 @@ Emits ``name,value,derived`` CSV rows:
   * tpu_roofline  — the 40-cell (arch x shape) TPU roofline + energy table
   * kernel_bench  — Pallas kernel validation/timing + VMEM budgets
   * dosc_advisor  — the two-tier (ICI/DCN) communication-plan table
+  * sweep_bench   — scalar vs vectorized design-space engine throughput
+                    (also snapshots BENCH_sweep.json for the perf trail)
 """
 
 from __future__ import annotations
@@ -35,7 +37,7 @@ def dosc_advisor_rows():
 
 
 SUITES = ["power_tables", "rbe_roofline", "tpu_roofline", "kernel_bench",
-          "dosc_advisor"]
+          "dosc_advisor", "sweep_bench"]
 
 
 def main() -> None:

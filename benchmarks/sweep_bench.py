@@ -1,0 +1,115 @@
+"""Design-space sweep throughput: scalar loop vs vectorized grid engine.
+
+    PYTHONPATH=src python -m benchmarks.sweep_bench
+
+Times the same Eq. 1-11 evaluation through both paths on a >=10,000
+configuration grid (cut x agg node x sensor node x weight mem x DetNet fps
+x KeyNet fps x cameras x MIPI energy scale).  The vectorized number is
+post-jit (compile time is reported separately, not counted).  Emits
+``name,value,derived`` rows via :func:`rows` and snapshots the result to
+``BENCH_sweep.json`` at the repo root so future PRs have a perf
+trajectory.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_sweep.json"
+
+# The benchmark grid: 34 cuts x 2 x 2 x 2 x 5 x 2 x 2 x 2 = 10,880 configs.
+GRID = dict(
+    agg_nodes=("7nm", "16nm"),
+    sensor_nodes=("7nm", "16nm"),
+    weight_mems=("sram", "mram"),
+    detnet_fps=(5.0, 10.0, 15.0, 20.0, 30.0),
+    keynet_fps=(15.0, 30.0),
+    num_cameras=(2, 4),
+    mipi_energy_scale=(1.0, 2.0),
+)
+SCALAR_SAMPLES = 128   # scalar configs timed (then extrapolated)
+VECTOR_REPS = 5        # post-jit timed repetitions of the full grid
+
+
+def _scalar_configs_per_s(n_cuts: int) -> float:
+    """Throughput of the scalar dataclass loop over a grid sample."""
+    from repro.core import partition
+
+    rng = np.random.default_rng(0)
+    axes = GRID
+    picks = []
+    for _ in range(SCALAR_SAMPLES):
+        picks.append(dict(
+            cut=int(rng.integers(0, n_cuts)),
+            agg_node=axes["agg_nodes"][rng.integers(2)],
+            sensor_node=axes["sensor_nodes"][rng.integers(2)],
+            sensor_weight_mem="sram",   # always-valid corner
+            detnet_fps=axes["detnet_fps"][rng.integers(5)],
+            keynet_fps=axes["keynet_fps"][rng.integers(2)],
+            num_cameras=axes["num_cameras"][rng.integers(2)],
+            mipi_energy_scale=axes["mipi_energy_scale"][rng.integers(2)],
+        ))
+    partition.evaluate_cut(0)           # warm the workload caches
+    t0 = time.perf_counter()
+    for kw in picks:
+        partition.evaluate_cut(**kw)
+    dt = time.perf_counter() - t0
+    return SCALAR_SAMPLES / dt
+
+
+def rows():
+    from repro.core import sweep
+    from repro.core.arrays import model_arrays
+
+    n_cuts = model_arrays().n_cuts
+    scalar_cps = _scalar_configs_per_s(n_cuts)
+
+    # --- vectorized engine: compile once, then time the steady state ---
+    t0 = time.perf_counter()
+    res = sweep.evaluate_grid(**GRID)
+    compile_s = time.perf_counter() - t0
+    n = res.n_configs
+    assert n >= 10_000, n
+    t0 = time.perf_counter()
+    for _ in range(VECTOR_REPS):
+        res = sweep.evaluate_grid(**GRID)
+    vector_cps = VECTOR_REPS * n / (time.perf_counter() - t0)
+    speedup = vector_cps / scalar_cps
+
+    best = res.argmin()
+    snapshot = {
+        "grid_configs": n,
+        "scalar_configs_per_s": round(scalar_cps, 1),
+        "vector_configs_per_s": round(vector_cps, 1),
+        "speedup": round(speedup, 1),
+        "compile_s": round(compile_s, 3),
+        "best_config": {k: (int(v) if isinstance(v, (int, np.integer))
+                            else float(v) if isinstance(v, (float,
+                                                            np.floating))
+                            else v) for k, v in best.items()},
+    }
+    BENCH_JSON.write_text(json.dumps(snapshot, indent=2) + "\n")
+
+    return [
+        ("sweep.grid_configs", float(n), "cartesian design-space grid"),
+        ("sweep.scalar_configs_per_s", scalar_cps,
+         f"dataclass loop over {SCALAR_SAMPLES} sampled configs"),
+        ("sweep.vector_configs_per_s", vector_cps,
+         f"jit/vmap evaluate_grid post-compile (compile {compile_s:.2f}s)"),
+        ("sweep.speedup", speedup, "vector over scalar configs/sec"),
+        ("sweep.best_power_mw", best["avg_power"] * 1e3,
+         f"cut={best['cut']} sensor={best['sensor_node']}"
+         f"/{best['weight_mem']} detfps={best['detnet_fps']:g}"),
+    ]
+
+
+if __name__ == "__main__":
+    print("name,value,derived")
+    for name, val, derived in rows():
+        print(f"{name},{val:.6g},{derived}")
+    print(f"(snapshot written to {BENCH_JSON})")

@@ -2,69 +2,84 @@
 
     PYTHONPATH=src python examples/partition_study.py
 
-Explores the design space the simulation framework was built for:
+Explores the design space the simulation framework was built for, driving
+the vectorized grid engine (`repro.core.sweep.evaluate_grid`) — every
+section below is one batched device call instead of a scalar Python loop:
+
 * partition point x on-sensor technology node,
 * DetNet frame rate (the paper's 'ROI reuse' knob),
 * SRAM vs hybrid MRAM on-sensor weight memory,
-* sensitivity of the optimal cut to MIPI energy/byte.
+* sensitivity of the optimal cut to MIPI energy/byte (a first-class grid
+  axis now — no more monkey-patching the link constants).
+
+The scalar path (`partition.evaluate_cut`) renders the fully-annotated
+report for the single winning configuration at the end.
 """
 
-import dataclasses
+import numpy as np
 
-from repro.core import partition, system
-from repro.core.constants import MIPI, NUM_CAMERAS
+from repro.core import partition, sweep
+from repro.core.constants import MIPI
+from repro.core.handtracking import build_detnet, build_keynet
+
+N_DET = len(build_detnet().layers)
+N_ALL = N_DET + len(build_keynet().layers)
 
 
 def sweep_tech_nodes():
     print("== partition x on-sensor node ==")
+    res = sweep.evaluate_grid(sensor_nodes=("7nm", "16nm"))
+    power = res.avg_power.reshape(N_ALL + 1, 2)     # (cut, sensor_node)
     print(f"{'cut':>4s} {'7nm sensor (mW)':>16s} {'16nm sensor (mW)':>17s}")
-    pts7 = partition.sweep_partitions(sensor_node="7nm")
-    pts16 = partition.sweep_partitions(sensor_node="16nm")
-    for i in range(0, len(pts7), 4):
-        print(f"{i:4d} {pts7[i].avg_power*1e3:16.3f} "
-              f"{pts16[i].avg_power*1e3:17.3f}")
-    b7 = min(pts7, key=lambda p: p.avg_power)
-    b16 = min(pts16, key=lambda p: p.avg_power)
-    print(f"best: cut {b7.cut} @7nm ({b7.avg_power*1e3:.3f} mW), "
-          f"cut {b16.cut} @16nm ({b16.avg_power*1e3:.3f} mW)")
+    for i in range(0, N_ALL + 1, 4):
+        print(f"{i:4d} {power[i, 0]*1e3:16.3f} {power[i, 1]*1e3:17.3f}")
+    b7, b16 = np.argmin(power[:, 0]), np.argmin(power[:, 1])
+    print(f"best: cut {b7} @7nm ({power[b7, 0]*1e3:.3f} mW), "
+          f"cut {b16} @16nm ({power[b16, 1]*1e3:.3f} mW)")
 
 
 def sweep_detnet_fps():
     print("\n== DetNet rate (ROI reuse) — paper section 3 ==")
-    for fps in (5.0, 10.0, 15.0, 30.0):
-        rep = system.build_distributed("7nm", "7nm", detnet_fps=fps)
-        print(f"  DetNet @{fps:4.0f} fps: {rep.avg_power*1e3:7.3f} mW")
+    rates = (5.0, 10.0, 15.0, 30.0)
+    res = sweep.evaluate_grid(cuts=(N_DET,), detnet_fps=rates)
+    for fps, p in zip(rates, res.avg_power.ravel()):
+        print(f"  DetNet @{fps:4.0f} fps: {p*1e3:7.3f} mW")
 
 
 def sweep_memory_tech():
     print("\n== on-sensor weight memory tech (16nm sensors) ==")
-    for mem in ("sram", "mram"):
-        rep = system.build_distributed("7nm", "16nm",
-                                       sensor_weight_mem=mem)
-        onsensor = rep.group_power("sensor")
-        print(f"  {mem:5s}: system {rep.avg_power*1e3:7.3f} mW, "
-              f"on-sensor subsystem {onsensor*1e3:7.3f} mW")
+    res = sweep.evaluate_grid(cuts=(N_DET,), sensor_nodes=("16nm",),
+                              weight_mems=("sram", "mram"))
+    onsensor = (res.data["sensor_compute"]
+                + res.data["sensor_memory"]).ravel()
+    for mem, total, sub in zip(("sram", "mram"), res.avg_power.ravel(),
+                               onsensor):
+        print(f"  {mem:5s}: system {total*1e3:7.3f} mW, "
+              f"on-sensor subsystem {sub*1e3:7.3f} mW")
 
 
 def sweep_mipi_energy():
     print("\n== sensitivity: optimal cut vs MIPI energy/byte ==")
-    for pj in (25.0, 50.0, 100.0, 200.0):
-        # rebuild the sweep with a modified link (Eq. 5's E_byte)
-        import repro.core.system as S
-        import repro.core.partition as P
-        orig = S.MIPI
-        link = dataclasses.replace(orig, energy_per_byte=pj * 1e-12)
-        S.MIPI = link
-        P.MIPI = link
-        try:
-            pts = partition.sweep_partitions()
-            best = min(pts, key=lambda p: p.avg_power)
-            print(f"  MIPI {pj:5.0f} pJ/B: best cut {best.cut:2d}, "
-                  f"{best.avg_power*1e3:7.3f} mW "
-                  f"(centralized {pts[0].avg_power*1e3:7.3f} mW)")
-        finally:
-            S.MIPI = orig
-            P.MIPI = orig
+    # Eq. 5's E_byte as a grid axis: one call covers cuts x scales.
+    pjs = (25.0, 50.0, 100.0, 200.0)
+    scales = tuple(pj * 1e-12 / MIPI.energy_per_byte for pj in pjs)
+    res = sweep.evaluate_grid(mipi_energy_scale=scales)
+    power = res.avg_power.reshape(N_ALL + 1, len(scales))
+    for k, pj in enumerate(pjs):
+        best = int(np.argmin(power[:, k]))
+        print(f"  MIPI {pj:5.0f} pJ/B: best cut {best:2d}, "
+              f"{power[best, k]*1e3:7.3f} mW "
+              f"(centralized {power[0, k]*1e3:7.3f} mW)")
+
+
+def report_winner():
+    print("\n== full module report of the optimal configuration ==")
+    best = partition.optimal_partition()      # array engine + scalar report
+    print(f"  {best.label}: {best.avg_power*1e3:.3f} mW, "
+          f"MIPI {best.mipi_bytes_per_s/1e6:.2f} MB/s, "
+          f"on-sensor {best.sensor_macs_per_s/1e9:.2f} GMAC/s")
+    for group, p in sorted(best.report.breakdown().items()):
+        print(f"    {group:18s} {p*1e3:8.4f} mW")
 
 
 if __name__ == "__main__":
@@ -72,3 +87,4 @@ if __name__ == "__main__":
     sweep_detnet_fps()
     sweep_memory_tech()
     sweep_mipi_energy()
+    report_winner()

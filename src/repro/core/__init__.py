@@ -1,4 +1,5 @@
 """Core: the paper's semi-analytical DOSC power model + TPU adaptation."""
 
-from . import (constants, dosc, energy, handtracking, hlo_analysis,  # noqa: F401
-               partition, rbe, roofline, system, tpu_energy, workloads)
+from . import (arrays, constants, dosc, energy, handtracking,  # noqa: F401
+               hlo_analysis, partition, rbe, roofline, sweep, system,
+               tpu_energy, workloads)

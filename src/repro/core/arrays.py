@@ -1,0 +1,273 @@
+"""Struct-of-arrays lowering of the semi-analytical model (Eqs. 1-11).
+
+The scalar path (:mod:`repro.core.system` / :mod:`repro.core.partition`)
+walks Python dataclasses layer by layer for every configuration.  That is
+the right shape for a single, fully-annotated report, but a design-space
+sweep evaluates the same per-layer reductions thousands of times with only
+a handful of scalar knobs changing.  This module lowers everything that is
+*configuration independent* into dense ``float64`` arrays once:
+
+* :class:`WorkloadArrays` — per-network prefix sums over the concatenated
+  layer tables: MACs, weight bytes, streamed-weight bytes (the DORY-style
+  re-fetch of :func:`repro.core.rbe.weight_stream_bytes`), activation
+  traffic, RBE cycles at the on-sensor (1/4) and aggregator (1x) scales,
+  and prefix/suffix peaks of the activation footprint.  A partition cut
+  then becomes two gathers (prefix = sensor side, suffix = aggregator
+  side) instead of a rebuild of ``NNWorkload`` objects.
+* :class:`ModelArrays` — the above for DetNet/KeyNet plus stacked tech-node
+  and memory-technology tables (``TechNode``/``MemorySpec``), link
+  constants (``LinkSpec``), and per-cut MIPI payload tables derived from
+  :func:`mipi_payloads` (the single source of truth for what crosses MIPI
+  at each cut, shared with the scalar path).
+
+:mod:`repro.core.sweep` consumes a :class:`ModelArrays` inside a
+``jax.jit``/``jax.vmap`` kernel; the scalar API consumes the same payload
+plan through :func:`mipi_payloads`, so the two paths cannot drift.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import numpy as np
+
+from . import rbe
+from .constants import (AGG_L1_BYTES, BOX_COORDS_BYTES, DPS_CAMERA,
+                        L1_ENERGY_SCALE, MIPI, ON_SENSOR_SCALE, RBE,
+                        SENSOR_L1_BYTES, T_SENSE_S, TECH_NODES, UTSV,
+                        MemorySpec, TechNode)
+from .handtracking import (FULL_FRAME_BYTES, ROI_BYTES, build_detnet,
+                           build_keynet)
+from .workloads import NNWorkload
+
+# Rate tags for MIPI payloads: each payload crosses the link at one of the
+# three system rates (Eq. 2 multiplies by the rate of the producing module).
+RATE_CAMERA = "camera"
+RATE_DETNET = "detnet"
+RATE_KEYNET = "keynet"
+
+# Weight-memory kinds, in table order (axis 1 of the ``wm_*`` tables).
+WEIGHT_MEM_KINDS = ("sram", "mram")
+
+
+def mipi_payloads(cut: int, detnet: NNWorkload,
+                  keynet: NNWorkload) -> list[tuple[float, str]]:
+    """What crosses MIPI for partition cut ``cut``: ``[(bytes, rate_tag)]``.
+
+    This is the single source of truth for the cut semantics described in
+    :mod:`repro.core.partition` — the scalar ``evaluate_cut`` maps the rate
+    tags onto fps values, and :func:`model_arrays` folds the same plan into
+    per-cut byte tables for the vectorized engine.
+    """
+    n_det = len(detnet.layers)
+    n_all = n_det + len(keynet.layers)
+    if not 0 <= cut <= n_all:
+        raise ValueError(f"cut {cut} outside [0, {n_all}]")
+    if cut == 0:
+        # Fully centralized: the raw frame crosses at camera rate.
+        return [(FULL_FRAME_BYTES, RATE_CAMERA)]
+    if cut < n_det:
+        # DetNet split: the cut activation crosses at DetNet rate, boxes
+        # return sensor-ward, and the ROI crop still has to cross at
+        # KeyNet rate (the raw frame only exists on-sensor).
+        act = detnet.layers[cut - 1].out_act_bytes
+        return [(act, RATE_DETNET), (BOX_COORDS_BYTES, RATE_DETNET),
+                (ROI_BYTES, RATE_KEYNET)]
+    if cut == n_det:
+        # The paper's split: ROI (KeyNet rate) + DetNet outputs (tiny).
+        return [(detnet.output_bytes, RATE_DETNET), (ROI_BYTES, RATE_KEYNET)]
+    # KeyNet split: the KeyNet cut activation crosses at KeyNet rate.
+    act = keynet.layers[cut - n_det - 1].out_act_bytes
+    return [(act, RATE_KEYNET), (detnet.output_bytes, RATE_DETNET)]
+
+
+# ---------------------------------------------------------------------------
+# Per-workload arrays
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class WorkloadArrays:
+    """Prefix-sum tables over one network's layer list (all ``float64``).
+
+    Every ``c_*`` array has length ``n_layers + 1`` with ``c[k]`` = the
+    reduction over layers ``[0, k)`` — so for a cut that keeps ``k`` layers
+    on-sensor, the sensor side reads ``c[k]`` and the aggregator side reads
+    ``c[n_layers] - c[k]``.  ``peak_prefix[k]`` / ``peak_suffix[k]`` are the
+    running max of the activation footprint over the same ranges.
+    """
+
+    name: str
+    n_layers: int
+    input_bytes: float
+    output_bytes: float
+    c_macs: np.ndarray            # cumulative MACs per inference
+    c_weight_bytes: np.ndarray    # cumulative weight footprint (L2-W capacity)
+    c_weight_stream: np.ndarray   # cumulative streamed weight bytes (Eq. 8)
+    c_act_traffic: np.ndarray     # cumulative in+out activation bytes (Eq. 8)
+    c_cycles_sensor: np.ndarray   # cumulative RBE cycles at ON_SENSOR_SCALE
+    c_cycles_agg: np.ndarray      # cumulative RBE cycles at scale 1.0
+    peak_prefix: np.ndarray       # max activation footprint, layers [0, k)
+    peak_suffix: np.ndarray       # max activation footprint, layers [k, n)
+    out_act_bytes: np.ndarray     # per-layer output activation bytes (n,)
+
+
+def _cumsum0(values: list[float]) -> np.ndarray:
+    """Length n+1 prefix sums starting at 0, in float64."""
+    return np.concatenate(([0.0], np.cumsum(np.asarray(values, np.float64))))
+
+
+@functools.lru_cache(maxsize=64)
+def workload_arrays(wl: NNWorkload) -> WorkloadArrays:
+    """Lower one :class:`NNWorkload` layer table into prefix-sum arrays."""
+    layers = wl.layers
+    n = len(layers)
+    peaks = [float(max(l.in_act_bytes, l.out_act_bytes)) for l in layers]
+    peak_prefix = np.zeros(n + 1, np.float64)
+    peak_suffix = np.zeros(n + 1, np.float64)
+    for k in range(n):
+        peak_prefix[k + 1] = max(peak_prefix[k], peaks[k])
+        peak_suffix[n - 1 - k] = max(peak_suffix[n - k], peaks[n - 1 - k])
+    return WorkloadArrays(
+        name=wl.name,
+        n_layers=n,
+        input_bytes=float(wl.input_bytes),
+        output_bytes=float(wl.output_bytes),
+        c_macs=_cumsum0([float(l.macs) for l in layers]),
+        c_weight_bytes=_cumsum0([float(l.weight_bytes) for l in layers]),
+        c_weight_stream=_cumsum0([float(rbe.weight_stream_bytes(l))
+                                  for l in layers]),
+        c_act_traffic=_cumsum0([float(l.in_act_bytes + l.out_act_bytes)
+                                for l in layers]),
+        c_cycles_sensor=_cumsum0(
+            [l.macs / rbe.mac_per_cycle(l, RBE, ON_SENSOR_SCALE)
+             for l in layers]),
+        c_cycles_agg=_cumsum0([l.macs / rbe.mac_per_cycle(l, RBE, 1.0)
+                               for l in layers]),
+        peak_prefix=peak_prefix,
+        peak_suffix=peak_suffix,
+        out_act_bytes=np.asarray([float(l.out_act_bytes) for l in layers],
+                                 np.float64),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Technology tables
+# ---------------------------------------------------------------------------
+
+
+def _mem_fields(mem: Optional[MemorySpec]) -> tuple[float, float, float,
+                                                    float]:
+    if mem is None:
+        return (np.nan, np.nan, np.nan, np.nan)
+    return (mem.e_read, mem.e_write, mem.leak_on, mem.leak_ret)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ModelArrays:
+    """Everything the jit/vmap kernel needs, as dense constant arrays."""
+
+    det: WorkloadArrays
+    key: WorkloadArrays
+    node_names: tuple[str, ...]
+
+    # Logic-node tables, shape (n_nodes,)
+    e_mac: np.ndarray
+    f_clk: np.ndarray
+    # Activation-SRAM tables, shape (n_nodes,)
+    sram_e_read: np.ndarray
+    sram_e_write: np.ndarray
+    sram_leak_on: np.ndarray
+    sram_leak_ret: np.ndarray
+    # Weight-memory tables, shape (n_nodes, len(WEIGHT_MEM_KINDS)); NaN
+    # where the (node, kind) pair has no test vehicle — NaN propagation
+    # through these fields is what marks invalid grid corners.
+    wm_e_read: np.ndarray
+    wm_leak_on: np.ndarray
+    wm_leak_ret: np.ndarray
+
+    # Per-cut MIPI payload tables, shape (n_cuts,) = n_det + n_key + 1.
+    pay_cam_rate: np.ndarray      # bytes crossing at camera rate
+    pay_det_rate: np.ndarray      # bytes crossing at DetNet rate
+    pay_key_rate: np.ndarray      # bytes crossing at KeyNet rate
+    pay_max: np.ndarray           # largest single payload (agg input buffer)
+
+    @property
+    def n_cuts(self) -> int:
+        return self.det.n_layers + self.key.n_layers + 1
+
+    def node_index(self, node: str | TechNode) -> int:
+        name = node if isinstance(node, str) else node.name
+        try:
+            return self.node_names.index(name)
+        except ValueError:
+            raise KeyError(f"unknown tech node {name!r}; "
+                           f"have {self.node_names}") from None
+
+
+@functools.lru_cache(maxsize=16)
+def model_arrays(detnet: NNWorkload | None = None,
+                 keynet: NNWorkload | None = None) -> ModelArrays:
+    """Build (and cache) the full constant table set for one workload pair.
+
+    ``None`` selects the canonical MEgATrack reconstruction from
+    :mod:`repro.core.handtracking`; custom workloads are hashable frozen
+    dataclasses, so each distinct pair gets its own cached lowering.
+    """
+    detnet = detnet or build_detnet()
+    keynet = keynet or build_keynet()
+    det = workload_arrays(detnet)
+    key = workload_arrays(keynet)
+    names = tuple(TECH_NODES)
+    nodes = [TECH_NODES[n] for n in names]
+
+    wm_rows = []
+    for node in nodes:
+        wm_rows.append([_mem_fields(node.sram), _mem_fields(node.mram)])
+    wm = np.asarray(wm_rows, np.float64)          # (n_nodes, 2, 4)
+
+    n_cuts = det.n_layers + key.n_layers + 1
+    pay_cam = np.zeros(n_cuts, np.float64)
+    pay_det = np.zeros(n_cuts, np.float64)
+    pay_key = np.zeros(n_cuts, np.float64)
+    pay_max = np.zeros(n_cuts, np.float64)
+    rate_acc = {RATE_CAMERA: pay_cam, RATE_DETNET: pay_det,
+                RATE_KEYNET: pay_key}
+    for cut in range(n_cuts):
+        plan = mipi_payloads(cut, detnet, keynet)
+        for nbytes, rate in plan:
+            rate_acc[rate][cut] += nbytes
+        pay_max[cut] = max(b for b, _ in plan)
+
+    return ModelArrays(
+        det=det, key=key, node_names=names,
+        e_mac=np.asarray([n.e_mac for n in nodes], np.float64),
+        f_clk=np.asarray([n.f_clk for n in nodes], np.float64),
+        sram_e_read=np.asarray([n.sram.e_read for n in nodes], np.float64),
+        sram_e_write=np.asarray([n.sram.e_write for n in nodes], np.float64),
+        sram_leak_on=np.asarray([n.sram.leak_on for n in nodes], np.float64),
+        sram_leak_ret=np.asarray([n.sram.leak_ret for n in nodes],
+                                 np.float64),
+        wm_e_read=wm[:, :, 0],
+        wm_leak_on=wm[:, :, 2],
+        wm_leak_ret=wm[:, :, 3],
+        pay_cam_rate=pay_cam,
+        pay_det_rate=pay_det,
+        pay_key_rate=pay_key,
+        pay_max=pay_max,
+    )
+
+
+# Link / camera scalars the kernel closes over (kept here so sweep.py has a
+# single import site for every physical constant it consumes).
+CAMERA_SENSE_W = DPS_CAMERA.sense
+CAMERA_READ_W = DPS_CAMERA.read
+CAMERA_IDLE_W = DPS_CAMERA.idle
+T_SENSE = T_SENSE_S
+MIPI_E_PER_BYTE = MIPI.energy_per_byte
+MIPI_BW = MIPI.bandwidth
+UTSV_E_PER_BYTE = UTSV.energy_per_byte
+UTSV_BW = UTSV.bandwidth
+FULL_FRAME = float(FULL_FRAME_BYTES)

@@ -183,6 +183,14 @@ RBE = RBESpec()
 # corresponding memory size to be one fourth of the aggregator's."
 ON_SENSOR_SCALE = 0.25
 
+# L1 scratchpad sizes of the two processor-site classes, and the L1's
+# access-energy discount vs L2 SRAM (ProcessorSite.l1_spec).  Shared by the
+# scalar builders and the vectorized kernel — a single source of truth so
+# the two evaluation paths cannot drift.
+SENSOR_L1_BYTES = 16 * 1024
+AGG_L1_BYTES = 64 * 1024
+L1_ENERGY_SCALE = 0.4
+
 
 # ---------------------------------------------------------------------------
 # Hand-tracking system parameters (MEgATrack [8])
@@ -199,6 +207,7 @@ ROI_W, ROI_H = 96, 96           # KeyNet crop
 CAMERA_FPS = 30.0               # frame delivery rate
 KEYNET_FPS = 30.0               # KeyNet runs every frame
 DETNET_FPS = 10.0               # DetNet re-runs every 3rd frame (ROI reuse [8])
+BOX_COORDS_BYTES = 64           # detection boxes returned sensor-ward (per frame)
 
 
 # ---------------------------------------------------------------------------

@@ -15,12 +15,15 @@ Magnitudes are in the range the paper implies (DetNet a few hundred MMAC —
 
 from __future__ import annotations
 
+import functools
+
 from .constants import (BYTES_PER_PIXEL_RAW, DETNET_INPUT_H, DETNET_INPUT_W,
                         IMAGE_H, IMAGE_W, ROI_H, ROI_W)
 from .workloads import (LayerSpec, NNWorkload, conv2d, dw_separable, fc,
                         pointwise)
 
 
+@functools.lru_cache(maxsize=None)
 def build_detnet() -> NNWorkload:
     """Hand detector over the downscaled 320x240 monochrome frame."""
     h, w = DETNET_INPUT_H, DETNET_INPUT_W  # 240 x 320
@@ -50,6 +53,7 @@ def build_detnet() -> NNWorkload:
     )
 
 
+@functools.lru_cache(maxsize=None)
 def build_keynet() -> NNWorkload:
     """Keypoint regressor over the 96x96 ROI crop."""
     h = w = ROI_H  # 96

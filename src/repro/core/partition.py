@@ -18,9 +18,18 @@ concatenated layer list (DetNet ++ KeyNet):
 * ``k > len(DetNet)``         — KeyNet is split: the KeyNet cut activation
   crosses at KeyNet rate; ROI stays on-sensor.
 
-The optimizer evaluates Eq. 1/2 for every cut and returns the sweep — the
-reproduction target is that the minimum lands exactly on the paper's
-DetNet/KeyNet boundary.
+**Two evaluation paths share these semantics.**  This module is the
+*scalar* path: :func:`evaluate_cut` assembles the full, named
+``ModuleEnergy`` list for one configuration (the per-module report behind
+the Fig. 5 stacked bars) and is the single-config convenience/validation
+wrapper of the model.  Grid-scale exploration belongs to the *array* path,
+:func:`repro.core.sweep.evaluate_grid`, which evaluates the identical
+Eqs. 1-11 for an arbitrary (cut × node × memory × rate × ...) cartesian
+product in one jit/vmap device call.  Both paths derive what crosses MIPI
+at each cut from :func:`repro.core.arrays.mipi_payloads`, so they cannot
+drift; ``tests/test_sweep.py`` pins them to ≤1e-6 relative parity.
+:func:`optimal_partition` uses the array engine to locate the minimum and
+the scalar path to render its report.
 """
 
 from __future__ import annotations
@@ -29,15 +38,16 @@ import dataclasses
 from typing import Sequence
 
 from . import energy as E
-from .constants import (CAMERA_FPS, DETNET_FPS, KEYNET_FPS, MIPI, NUM_CAMERAS,
-                        ON_SENSOR_SCALE, T_SENSE_S, UTSV, TechNode)
-from .handtracking import (FULL_FRAME_BYTES, ROI_BYTES, build_detnet,
-                           build_keynet)
+from .arrays import RATE_CAMERA, RATE_DETNET, RATE_KEYNET, mipi_payloads
+from .constants import (CAMERA_FPS, DETNET_FPS, KEYNET_FPS, MIPI,
+                        NUM_CAMERAS, ON_SENSOR_SCALE, SENSOR_L1_BYTES,
+                        T_SENSE_S, TECH_NODES, UTSV, TechNode)
+from .constants import BOX_COORDS_BYTES  # noqa: F401  (re-export)
+from .handtracking import FULL_FRAME_BYTES, build_detnet, build_keynet
 from .system import (Deployment, ProcessorSite, SystemReport,
-                     _camera_modules, _link_modules, _resolve_node, MemKind)
+                     _camera_modules, _link_modules, _resolve_node,
+                     replicate_site_modules, MemKind)
 from .workloads import NNWorkload
-
-BOX_COORDS_BYTES = 64   # detection boxes returned sensor-ward (per frame)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,45 +79,46 @@ def evaluate_cut(cut: int,
                  num_cameras: int = NUM_CAMERAS,
                  camera_fps: float = CAMERA_FPS,
                  detnet_fps: float = DETNET_FPS,
-                 keynet_fps: float = KEYNET_FPS) -> PartitionPoint:
-    """Build the full Eq.1/2 module list for one partition point."""
+                 keynet_fps: float = KEYNET_FPS,
+                 mipi_energy_scale: float = 1.0) -> PartitionPoint:
+    """Build the full Eq.1/2 module list for one partition point.
+
+    This is the scalar, fully-annotated single-config path; for sweeps use
+    :func:`repro.core.sweep.evaluate_grid`.  ``mipi_energy_scale``
+    multiplies the MIPI energy/byte (the Eq. 5 sensitivity knob) without
+    touching the link bandwidth.
+    """
     detnet = detnet or build_detnet()
     keynet = keynet or build_keynet()
     agg_n = _resolve_node(agg_node)
     sen_n = _resolve_node(sensor_node)
     n_det = len(detnet.layers)
     n_all = n_det + len(keynet.layers)
-    assert 0 <= cut <= n_all
+    if not 0 <= cut <= n_all:
+        raise ValueError(f"cut {cut} outside [0, {n_all}]")
+    if num_cameras < 1:
+        raise ValueError("num_cameras must be >= 1")
+    mipi = MIPI if mipi_energy_scale == 1.0 else dataclasses.replace(
+        MIPI, energy_per_byte=MIPI.energy_per_byte * mipi_energy_scale)
 
     mods: list[E.ModuleEnergy] = []
     centralized = cut == 0
-    cam_link = MIPI if centralized else UTSV
+    cam_link = mipi if centralized else UTSV
     mods += _camera_modules(num_cameras, readout_link=cam_link,
                             fps=camera_fps, t_sense=T_SENSE_S)
     if not centralized:
         mods += _link_modules(num_cameras, UTSV, FULL_FRAME_BYTES,
                               camera_fps, tag="utsv")
 
-    # ---- what crosses MIPI ----
-    mipi_payloads: list[tuple[float, float]] = []   # (bytes, rate)
-    if centralized:
-        mipi_payloads.append((FULL_FRAME_BYTES, camera_fps))
-    elif cut < n_det:
-        act = detnet.layers[cut - 1].out_act_bytes if cut > 0 else 0
-        mipi_payloads.append((act, detnet_fps))
-        mipi_payloads.append((BOX_COORDS_BYTES, detnet_fps))  # boxes back
-        mipi_payloads.append((ROI_BYTES, keynet_fps))         # crop forward
-    elif cut == n_det:
-        mipi_payloads.append((detnet.output_bytes, detnet_fps))
-        mipi_payloads.append((ROI_BYTES, keynet_fps))
-    else:
-        act = keynet.layers[cut - n_det - 1].out_act_bytes
-        mipi_payloads.append((act, keynet_fps))
-        mipi_payloads.append((detnet.output_bytes, detnet_fps))
-    for i, (b, r) in enumerate(mipi_payloads):
-        mods += _link_modules(num_cameras, MIPI, b, r, tag=f"mipi.{i}")
+    # ---- what crosses MIPI (shared plan with the array engine) ----
+    rate_of = {RATE_CAMERA: camera_fps, RATE_DETNET: detnet_fps,
+               RATE_KEYNET: keynet_fps}
+    payload_plan = mipi_payloads(cut, detnet, keynet)
+    mipi_payload_rates = [(b, rate_of[tag]) for b, tag in payload_plan]
+    for i, (b, r) in enumerate(mipi_payload_rates):
+        mods += _link_modules(num_cameras, mipi, b, r, tag=f"mipi.{i}")
 
-    # ---- sensor-side deployment ----
+    # ---- sensor-side deployment (identical per camera: build once) ----
     sensor_wls: list[tuple[NNWorkload, float]] = []
     det_s = _sub_workload(detnet, 0, min(cut, n_det), "DetNet.sensor")
     if det_s:
@@ -116,15 +127,15 @@ def evaluate_cut(cut: int,
     if key_s:
         sensor_wls.append((key_s, keynet_fps))
     if not centralized:
-        for i in range(num_cameras):
-            mods += Deployment(
-                site=ProcessorSite(name=f"sensor{i}", node=sen_n,
-                                   scale=ON_SENSOR_SCALE,
-                                   weight_mem=sensor_weight_mem,
-                                   l1_bytes=16 * 1024),
-                workloads=[(w, f) for w, f in sensor_wls],
-                extra_buffer_bytes=detnet.input_bytes,
-            ).modules()
+        sensor0 = Deployment(
+            site=ProcessorSite(name="sensor0", node=sen_n,
+                               scale=ON_SENSOR_SCALE,
+                               weight_mem=sensor_weight_mem,
+                               l1_bytes=SENSOR_L1_BYTES),
+            workloads=list(sensor_wls),
+            extra_buffer_bytes=detnet.input_bytes,
+        ).modules()
+        mods += replicate_site_modules(sensor0, "sensor0", num_cameras)
 
     # ---- aggregator-side deployment ----
     agg_wls: list[tuple[NNWorkload, float]] = []
@@ -135,8 +146,7 @@ def evaluate_cut(cut: int,
                           "KeyNet.agg")
     if key_a:
         agg_wls.append((key_a, keynet_fps * num_cameras))
-    in_buf = (FULL_FRAME_BYTES if centralized else
-              max(b for b, _ in mipi_payloads)) * num_cameras
+    in_buf = max(b for b, _ in mipi_payload_rates) * num_cameras
     if agg_wls:
         mods += Deployment(
             site=ProcessorSite(name="agg", node=agg_n, scale=1.0),
@@ -148,7 +158,7 @@ def evaluate_cut(cut: int,
              "paper-split(DetNet|KeyNet)" if cut == n_det else
              f"cut@{cut}")
     rep = SystemReport(name=f"partition[{label}]", modules=mods)
-    mipi_rate = sum(b * r for b, r in mipi_payloads) * num_cameras
+    mipi_rate = sum(b * r for b, r in mipi_payload_rates) * num_cameras
     sensor_macs = sum(w.total_macs * f for w, f in sensor_wls) * num_cameras
     return PartitionPoint(cut=cut, label=label, avg_power=rep.avg_power,
                           mipi_bytes_per_s=mipi_rate,
@@ -156,6 +166,12 @@ def evaluate_cut(cut: int,
 
 
 def sweep_partitions(**kw) -> list[PartitionPoint]:
+    """Scalar sweep over every cut, with full per-module reports.
+
+    For grids beyond a single axis (or when reports are not needed) use
+    :func:`repro.core.sweep.evaluate_grid`, which is orders of magnitude
+    faster per configuration.
+    """
     detnet = kw.get("detnet") or build_detnet()
     keynet = kw.get("keynet") or build_keynet()
     kw["detnet"], kw["keynet"] = detnet, keynet
@@ -163,6 +179,35 @@ def sweep_partitions(**kw) -> list[PartitionPoint]:
     return [evaluate_cut(c, **kw) for c in range(n_all + 1)]
 
 
-def optimal_partition(**kw) -> PartitionPoint:
-    """The paper's claim: the optimum sits at the DetNet/KeyNet boundary."""
+def _registry_name(node: str | TechNode) -> str | None:
+    """Registry key for a node, or None if it isn't the registered object."""
+    if isinstance(node, str):
+        return node if node in TECH_NODES else None
+    return node.name if TECH_NODES.get(node.name) is node else None
+
+
+def optimal_partition(engine: str = "array", **kw) -> PartitionPoint:
+    """Minimum-power partition point (the paper's Fig. 2 sweep).
+
+    With ``engine="array"`` (default) the cut axis is evaluated by the
+    vectorized grid engine and only the winner is rendered through the
+    scalar path; ``engine="scalar"`` forces the full scalar sweep.  Custom
+    ``TechNode`` objects outside the registry fall back to the scalar
+    engine automatically.
+    """
+    agg = _registry_name(kw.get("agg_node", "7nm"))
+    sen = _registry_name(kw.get("sensor_node", "7nm"))
+    # Keep the engines interchangeable: the scalar sweep raises for an
+    # MRAM request on a node with no test vehicle (every cut > 0 is
+    # invalid), so the array path must not quietly return the one valid
+    # centralized point instead.
+    if (kw.get("sensor_weight_mem", "sram") == "mram"
+            and _resolve_node(kw.get("sensor_node", "7nm")).mram is None):
+        raise ValueError(
+            f"no MRAM test vehicle at "
+            f"{_resolve_node(kw.get('sensor_node', '7nm')).name}")
+    if engine == "array" and agg is not None and sen is not None:
+        from . import sweep as _sweep
+        res = _sweep.evaluate_grid(**_sweep.scalar_axes(kw))
+        return evaluate_cut(res.argmin()["cut"], **kw)
     return min(sweep_partitions(**kw), key=lambda p: p.avg_power)

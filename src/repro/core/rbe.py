@@ -20,6 +20,7 @@ size), and ``util`` is the engine's structural efficiency for the layer kind
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Sequence
 
@@ -40,12 +41,22 @@ def _util(kind: LayerKind, spec: RBESpec) -> float:
     }[kind]
 
 
+@functools.lru_cache(maxsize=65536)
 def weight_stream_bytes(layer: LayerSpec,
                         l1_tile_bytes: int = L1_TILE_BYTES) -> int:
     """Total weight bytes streamed from L2-weight for one inference of the
     layer: weights are re-fetched once per output tile."""
     n_tiles = max(1, math.ceil(layer.out_act_bytes / l1_tile_bytes))
     return layer.weight_bytes * n_tiles
+
+
+@functools.lru_cache(maxsize=4096)
+def total_weight_stream_bytes(workload: NNWorkload,
+                              l1_tile_bytes: int = L1_TILE_BYTES) -> int:
+    """Streamed weight bytes for one inference of the whole network
+    (the per-layer reduction Eq. 8 consumes on every evaluation)."""
+    return sum(weight_stream_bytes(l, l1_tile_bytes)
+               for l in workload.layers)
 
 
 def streamed_intensity(layer: LayerSpec,

@@ -1,0 +1,359 @@
+"""Vectorized design-space engine: Eqs. 1-11 as one jit/vmap kernel.
+
+The repo now has **two evaluation paths** over the same analytical model:
+
+* **Scalar path** (:mod:`repro.core.system`, :mod:`repro.core.partition`) —
+  builds an explicit, named ``ModuleEnergy`` list for one configuration.
+  Use it when you want the full per-module report (the Fig. 5 stacked
+  bars, per-sensor groups, labels).
+* **Array path** (this module) — consumes the struct-of-arrays lowering
+  of :mod:`repro.core.arrays` and evaluates an arbitrary cartesian grid
+  over the paper's design knobs in a single ``jax.jit``-compiled,
+  ``jax.vmap``-batched device call.  Use it for sweeps: dense sensitivity
+  heatmaps, Pareto fronts, partition × node × memory × rate grids.
+
+The two paths are kept numerically interchangeable (``tests/test_sweep.py``
+asserts ≤1e-6 relative parity across a sampled grid); the payload plan per
+partition cut comes from the shared :func:`repro.core.arrays.mipi_payloads`
+so the cut semantics cannot drift.
+
+Grid axes of :func:`evaluate_grid` (cartesian product, in order)::
+
+    cut               partition index over DetNet ++ KeyNet layer list
+    agg_node          aggregator tech node        ("7nm" | "16nm" | TechNode)
+    sensor_node       on-sensor tech node
+    weight_mem        on-sensor weight memory     ("sram" | "mram")
+    detnet_fps        DetNet rate (the ROI-reuse knob)
+    keynet_fps        KeyNet rate
+    num_cameras       camera count
+    mipi_energy_scale multiplier on MIPI pJ/B (Eq. 5 sensitivity axis)
+    camera_fps        frame delivery rate
+
+Configurations that are physically invalid (MRAM weight memory on a node
+with no MRAM test vehicle, with an on-sensor deployment present) evaluate
+to NaN rather than raising, so a dense grid can mix valid and invalid
+corners.  All arithmetic runs in float64 (scoped ``enable_x64`` — the
+global JAX config is left untouched).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import OrderedDict
+from typing import Iterable, Mapping, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from . import arrays as A
+from .constants import (CAMERA_FPS, DETNET_FPS, KEYNET_FPS, NUM_CAMERAS,
+                        TechNode)
+from .workloads import NNWorkload
+
+AXIS_NAMES = ("cut", "agg_node", "sensor_node", "weight_mem", "detnet_fps",
+              "keynet_fps", "num_cameras", "mipi_energy_scale", "camera_fps")
+
+#: Output fields of the kernel (each becomes one grid-shaped array).
+FIELDS = ("avg_power", "camera", "utsv", "mipi", "sensor_compute",
+          "sensor_memory", "agg_compute", "agg_memory", "mipi_bytes_per_s",
+          "sensor_macs_per_s")
+
+
+# ---------------------------------------------------------------------------
+# The per-configuration kernel (vmapped over flat config arrays)
+# ---------------------------------------------------------------------------
+
+
+def _site_power(macs_per_s, w_read_per_s, act_per_s, cycles_per_s, f_clk,
+                e_mac, wm_e_read, wm_leak_on, wm_leak_ret, sram_e_read,
+                sram_e_write, sram_leak_on, sram_leak_ret, cap_w, cap_a,
+                l1_bytes):
+    """Eqs. 7-11 for one processor site, per-second accounting.
+
+    Mirrors ``system.Deployment.modules()``: compute (Eq. 7), L2-weight /
+    L2-activation / L1 access energy (Eq. 8), and On/Retention leakage for
+    the three memory instances (Eqs. 9-11 with a 1 s window).
+    """
+    p_compute = macs_per_s * e_mac
+
+    act_read = act_per_s / 2
+    act_write = act_per_s / 2
+    # L1 sees every streamed byte once more (L2 -> L1 -> engine).
+    l1_traffic = w_read_per_s + act_read + act_write
+    p_l2w = w_read_per_s * wm_e_read
+    p_l2a = act_read * sram_e_read + act_write * sram_e_write
+    p_l1 = (l1_traffic / 2 * (A.L1_ENERGY_SCALE * sram_e_read)
+            + l1_traffic / 2 * (A.L1_ENERGY_SCALE * sram_e_write))
+
+    t_proc = jnp.minimum(1.0, cycles_per_s / f_clk)
+    t_idle = jnp.maximum(0.0, 1.0 - t_proc)
+    p_leak = (cap_w * (wm_leak_on * t_proc + wm_leak_ret * t_idle)
+              + cap_a * (sram_leak_on * t_proc + sram_leak_ret * t_idle)
+              + l1_bytes * (sram_leak_on * t_proc + sram_leak_ret * t_idle))
+    return p_compute, p_l2w + p_l2a + p_l1 + p_leak
+
+
+def _make_config_fn(M: A.ModelArrays):
+    """Close the Eq. 1-11 kernel over one model's constant tables."""
+    det, key = M.det, M.key
+    n_det, n_key = det.n_layers, key.n_layers
+    n_all = n_det + n_key
+    j = jnp.asarray  # constants fold into the jaxpr at trace time
+
+    def config_fn(cut, agg_i, sen_i, wm_i, det_fps, key_fps, ncam,
+                  mipi_scale, cam_fps):
+        cd = jnp.clip(cut, 0, n_det)          # DetNet layers on-sensor
+        ck = jnp.clip(cut - n_det, 0, n_key)  # KeyNet layers on-sensor
+        has_sensor = cut > 0
+        has_agg = cut < n_all
+
+        # ---- Eq. 3/4: cameras (readout window set by camera-side link) ----
+        t_comm_cam = A.FULL_FRAME / jnp.where(has_sensor, A.UTSV_BW,
+                                              A.MIPI_BW)
+        t_off = jnp.maximum(0.0, 1.0 / cam_fps - A.T_SENSE - t_comm_cam)
+        e_cam = (A.CAMERA_SENSE_W * A.T_SENSE + A.CAMERA_READ_W * t_comm_cam
+                 + A.CAMERA_IDLE_W * t_off)
+        p_camera = e_cam * cam_fps * ncam
+
+        # ---- Eq. 5: uTSV readout link (distributed only) ----
+        p_utsv = jnp.where(
+            has_sensor, A.FULL_FRAME * A.UTSV_E_PER_BYTE * cam_fps * ncam,
+            0.0)
+
+        # ---- Eq. 5: MIPI payload plan for this cut ----
+        bps_per_cam = (j(M.pay_cam_rate)[cut] * cam_fps
+                       + j(M.pay_det_rate)[cut] * det_fps
+                       + j(M.pay_key_rate)[cut] * key_fps)
+        p_mipi = bps_per_cam * (A.MIPI_E_PER_BYTE * mipi_scale) * ncam
+        mipi_bps = bps_per_cam * ncam
+
+        # ---- on-sensor site (x ncam replicas) ----
+        macs_s = (j(det.c_macs)[cd] * det_fps + j(key.c_macs)[ck] * key_fps)
+        w_read_s = (j(det.c_weight_stream)[cd] * det_fps
+                    + j(key.c_weight_stream)[ck] * key_fps)
+        act_s = (j(det.c_act_traffic)[cd] * det_fps
+                 + j(key.c_act_traffic)[ck] * key_fps)
+        cyc_s = (j(det.c_cycles_sensor)[cd] * det_fps
+                 + j(key.c_cycles_sensor)[ck] * key_fps)
+        cap_w_s = j(det.c_weight_bytes)[cd] + j(key.c_weight_bytes)[ck]
+        cap_a_s = (jnp.maximum(j(det.peak_prefix)[cd], j(key.peak_prefix)[ck])
+                   + det.input_bytes)
+        p_comp_s, p_mem_s = _site_power(
+            macs_s, w_read_s, act_s, cyc_s,
+            j(M.f_clk)[sen_i], j(M.e_mac)[sen_i],
+            j(M.wm_e_read)[sen_i, wm_i], j(M.wm_leak_on)[sen_i, wm_i],
+            j(M.wm_leak_ret)[sen_i, wm_i],
+            j(M.sram_e_read)[sen_i], j(M.sram_e_write)[sen_i],
+            j(M.sram_leak_on)[sen_i], j(M.sram_leak_ret)[sen_i],
+            cap_w_s, cap_a_s, A.SENSOR_L1_BYTES)
+        p_sensor_compute = jnp.where(has_sensor, p_comp_s * ncam, 0.0)
+        p_sensor_memory = jnp.where(has_sensor, p_mem_s * ncam, 0.0)
+
+        # ---- aggregator site (suffix of each network, rate x ncam) ----
+        macs_a = ((j(det.c_macs)[n_det] - j(det.c_macs)[cd])
+                  * (det_fps * ncam)
+                  + (j(key.c_macs)[n_key] - j(key.c_macs)[ck])
+                  * (key_fps * ncam))
+        w_read_a = ((j(det.c_weight_stream)[n_det]
+                     - j(det.c_weight_stream)[cd]) * (det_fps * ncam)
+                    + (j(key.c_weight_stream)[n_key]
+                       - j(key.c_weight_stream)[ck]) * (key_fps * ncam))
+        act_a = ((j(det.c_act_traffic)[n_det] - j(det.c_act_traffic)[cd])
+                 * (det_fps * ncam)
+                 + (j(key.c_act_traffic)[n_key] - j(key.c_act_traffic)[ck])
+                 * (key_fps * ncam))
+        cyc_a = ((j(det.c_cycles_agg)[n_det] - j(det.c_cycles_agg)[cd])
+                 * (det_fps * ncam)
+                 + (j(key.c_cycles_agg)[n_key] - j(key.c_cycles_agg)[ck])
+                 * (key_fps * ncam))
+        cap_w_a = ((j(det.c_weight_bytes)[n_det] - j(det.c_weight_bytes)[cd])
+                   + (j(key.c_weight_bytes)[n_key]
+                      - j(key.c_weight_bytes)[ck]))
+        cap_a_a = (jnp.maximum(j(det.peak_suffix)[cd], j(key.peak_suffix)[ck])
+                   + j(M.pay_max)[cut] * ncam)
+        p_comp_a, p_mem_a = _site_power(
+            macs_a, w_read_a, act_a, cyc_a,
+            j(M.f_clk)[agg_i], j(M.e_mac)[agg_i],
+            # the aggregator's weight memory is always its node SRAM
+            j(M.sram_e_read)[agg_i], j(M.sram_leak_on)[agg_i],
+            j(M.sram_leak_ret)[agg_i],
+            j(M.sram_e_read)[agg_i], j(M.sram_e_write)[agg_i],
+            j(M.sram_leak_on)[agg_i], j(M.sram_leak_ret)[agg_i],
+            cap_w_a, cap_a_a, A.AGG_L1_BYTES)
+        p_agg_compute = jnp.where(has_agg, p_comp_a, 0.0)
+        p_agg_memory = jnp.where(has_agg, p_mem_a, 0.0)
+
+        total = (p_camera + p_utsv + p_mipi + p_sensor_compute
+                 + p_sensor_memory + p_agg_compute + p_agg_memory)
+        return {
+            "avg_power": total,
+            "camera": p_camera,
+            "utsv": p_utsv,
+            "mipi": p_mipi,
+            "sensor_compute": p_sensor_compute,
+            "sensor_memory": p_sensor_memory,
+            "agg_compute": p_agg_compute,
+            "agg_memory": p_agg_memory,
+            "mipi_bytes_per_s": mipi_bps,
+            "sensor_macs_per_s": jnp.where(has_sensor, macs_s * ncam, 0.0),
+        }
+
+    return config_fn
+
+
+@functools.lru_cache(maxsize=16)
+def _compiled_kernel(M: A.ModelArrays):
+    """One jit(vmap(kernel)) per model lowering (cached by identity)."""
+    return jax.jit(jax.vmap(_make_config_fn(M)))
+
+
+# ---------------------------------------------------------------------------
+# Grid evaluation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Dense grid of Eq. 1/2 evaluations.
+
+    ``axes`` maps axis name -> the axis values (in grid order); every array
+    in ``data`` has shape ``tuple(len(v) for v in axes.values())``.
+    """
+
+    axes: "OrderedDict[str, tuple]"
+    data: Mapping[str, np.ndarray]
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(len(v) for v in self.axes.values())
+
+    @property
+    def n_configs(self) -> int:
+        return int(np.prod(self.shape))
+
+    @property
+    def avg_power(self) -> np.ndarray:
+        return self.data["avg_power"]
+
+    def config_at(self, flat_index: int) -> dict:
+        """Axis values of one flat grid index."""
+        idx = np.unravel_index(flat_index, self.shape)
+        return {name: vals[i]
+                for (name, vals), i in zip(self.axes.items(), idx)}
+
+    def argmin(self, field: str = "avg_power") -> dict:
+        """Best (lowest-``field``) configuration; NaN entries ignored."""
+        arr = self.data[field]
+        if np.isnan(arr).all():
+            raise ValueError(
+                "every grid corner is invalid (all-NaN) — check the "
+                "weight_mem / sensor_node combinations against the "
+                "available memory test vehicles")
+        flat = int(np.nanargmin(arr))
+        out = self.config_at(flat)
+        out[field] = float(self.data[field].ravel()[flat])
+        return out
+
+    def breakdown_at(self, flat_index: int) -> dict[str, float]:
+        return {f: float(self.data[f].ravel()[flat_index]) for f in FIELDS}
+
+
+def _node_axis(M: A.ModelArrays,
+               nodes: Sequence[str | TechNode]) -> tuple[np.ndarray, tuple]:
+    idx = np.asarray([M.node_index(n) for n in nodes], np.int32)
+    labels = tuple(n if isinstance(n, str) else n.name for n in nodes)
+    return idx, labels
+
+
+def evaluate_grid(cuts: Optional[Iterable[int]] = None,
+                  agg_nodes: Sequence[str | TechNode] = ("7nm",),
+                  sensor_nodes: Sequence[str | TechNode] = ("7nm",),
+                  weight_mems: Sequence[str] = ("sram",),
+                  detnet_fps: Sequence[float] = (DETNET_FPS,),
+                  keynet_fps: Sequence[float] = (KEYNET_FPS,),
+                  num_cameras: Sequence[float] = (NUM_CAMERAS,),
+                  mipi_energy_scale: Sequence[float] = (1.0,),
+                  camera_fps: Sequence[float] = (CAMERA_FPS,),
+                  detnet: NNWorkload | None = None,
+                  keynet: NNWorkload | None = None,
+                  model: A.ModelArrays | None = None) -> SweepResult:
+    """Evaluate Eqs. 1-11 over the cartesian product of the given axes.
+
+    One compiled device call for the whole grid (post first-call jit
+    compile, which is cached per workload pair).  ``cuts=None`` selects
+    every legal partition point.  Returns a :class:`SweepResult` whose
+    arrays are indexed ``[cut, agg, sensor, wmem, dfps, kfps, ncam,
+    mipi_scale, cam_fps]``.
+    """
+    M = model if model is not None else A.model_arrays(detnet, keynet)
+
+    if cuts is None:
+        cut_ax = np.arange(M.n_cuts, dtype=np.int32)
+    else:
+        cut_ax = np.asarray(list(cuts), np.int32)
+        if cut_ax.size and (cut_ax.min() < 0 or cut_ax.max() >= M.n_cuts):
+            raise ValueError(f"cuts outside [0, {M.n_cuts - 1}]")
+    agg_idx, agg_labels = _node_axis(M, agg_nodes)
+    sen_idx, sen_labels = _node_axis(M, sensor_nodes)
+    for m in weight_mems:
+        if m not in A.WEIGHT_MEM_KINDS:
+            raise ValueError(f"unknown weight_mem {m!r}; "
+                             f"have {A.WEIGHT_MEM_KINDS}")
+    wm_idx = np.asarray([A.WEIGHT_MEM_KINDS.index(m) for m in weight_mems],
+                        np.int32)
+    f64 = functools.partial(np.asarray, dtype=np.float64)
+    float_axes = [f64(list(detnet_fps)), f64(list(keynet_fps)),
+                  f64(list(num_cameras)), f64(list(mipi_energy_scale)),
+                  f64(list(camera_fps))]
+    if float_axes[2].size and (float_axes[2].min() < 1
+                               or (float_axes[2] % 1 != 0).any()):
+        raise ValueError(  # matches the scalar evaluate_cut semantics
+            "num_cameras must be integers >= 1")
+
+    axis_arrays = [cut_ax, agg_idx, sen_idx, wm_idx, *float_axes]
+    shape = tuple(a.size for a in axis_arrays)
+    if 0 in shape:
+        raise ValueError("every grid axis needs at least one value")
+    grids = np.meshgrid(*axis_arrays, indexing="ij")
+    flat = [g.ravel() for g in grids]
+
+    with enable_x64():
+        out = _compiled_kernel(M)(*map(jnp.asarray, flat))
+        data = {k: np.asarray(v).reshape(shape) for k, v in out.items()}
+
+    axes = OrderedDict(zip(AXIS_NAMES, (
+        tuple(int(c) for c in cut_ax), agg_labels, sen_labels,
+        tuple(weight_mems), tuple(float_axes[0]), tuple(float_axes[1]),
+        tuple(float_axes[2]), tuple(float_axes[3]), tuple(float_axes[4]))))
+    return SweepResult(axes=axes, data=data)
+
+
+def scalar_axes(kw: Mapping) -> dict:
+    """Map ``partition.evaluate_cut``-style scalar kwargs onto singleton
+    grid axes — the one place the kwarg↔axis correspondence is written
+    down (shared by :func:`evaluate_one` and
+    ``partition.optimal_partition``)."""
+    return dict(
+        agg_nodes=(kw.get("agg_node", "7nm"),),
+        sensor_nodes=(kw.get("sensor_node", "7nm"),),
+        weight_mems=(kw.get("sensor_weight_mem", "sram"),),
+        detnet_fps=(kw.get("detnet_fps", DETNET_FPS),),
+        keynet_fps=(kw.get("keynet_fps", KEYNET_FPS),),
+        num_cameras=(kw.get("num_cameras", NUM_CAMERAS),),
+        mipi_energy_scale=(kw.get("mipi_energy_scale", 1.0),),
+        camera_fps=(kw.get("camera_fps", CAMERA_FPS),),
+        detnet=kw.get("detnet"), keynet=kw.get("keynet"))
+
+
+def evaluate_one(cut: int, **kw) -> dict[str, float]:
+    """Single-configuration convenience wrapper over :func:`evaluate_grid`.
+
+    Scalar keyword arguments match ``partition.evaluate_cut`` (``agg_node``,
+    ``sensor_node``, ``sensor_weight_mem``, fps knobs, ...); returns the
+    kernel's field dict for that one point.
+    """
+    return evaluate_grid(cuts=(cut,), **scalar_axes(kw)).breakdown_at(0)

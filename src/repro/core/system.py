@@ -13,8 +13,9 @@ from typing import Literal, Sequence
 
 from . import energy as E
 from . import rbe
-from .constants import (CAMERA_FPS, DETNET_FPS, DPS_CAMERA, KEYNET_FPS, MIPI,
-                        NUM_CAMERAS, ON_SENSOR_SCALE, RBE, T_SENSE_S,
+from .constants import (AGG_L1_BYTES, CAMERA_FPS, DETNET_FPS, DPS_CAMERA,
+                        KEYNET_FPS, L1_ENERGY_SCALE, MIPI, NUM_CAMERAS,
+                        ON_SENSOR_SCALE, RBE, SENSOR_L1_BYTES, T_SENSE_S,
                         TECH_NODES, UTSV, CameraPower, LinkSpec, MemorySpec,
                         TechNode)
 from .handtracking import (FULL_FRAME_BYTES, ROI_BYTES, build_detnet,
@@ -32,7 +33,7 @@ class ProcessorSite:
     node: TechNode
     scale: float                      # compute capability vs full RBE
     weight_mem: MemKind = "sram"
-    l1_bytes: int = 64 * 1024
+    l1_bytes: int = AGG_L1_BYTES
 
     def weight_mem_spec(self) -> MemorySpec:
         if self.weight_mem == "mram":
@@ -43,10 +44,11 @@ class ProcessorSite:
 
     def l1_spec(self) -> MemorySpec:
         # L1 is a small, faster SRAM: cheaper per-byte access than L2.
-        return dataclasses.replace(self.node.sram,
-                                   name=f"L1-{self.node.name}",
-                                   e_read=self.node.sram.e_read * 0.4,
-                                   e_write=self.node.sram.e_write * 0.4)
+        return dataclasses.replace(
+            self.node.sram,
+            name=f"L1-{self.node.name}",
+            e_read=self.node.sram.e_read * L1_ENERGY_SCALE,
+            e_write=self.node.sram.e_write * L1_ENERGY_SCALE)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,7 +101,7 @@ class Deployment:
         # --- Eq. 8: memory accesses (per second) ---
         w_read = act_read = act_write = 0.0
         for wl, fps in self.workloads:
-            w_read += sum(rbe.weight_stream_bytes(l) for l in wl.layers) * fps
+            w_read += rbe.total_weight_stream_bytes(wl) * fps
             act_read += wl.total_act_traffic_bytes / 2 * fps
             act_write += wl.total_act_traffic_bytes / 2 * fps
         # L1 sees every streamed byte once more (L2 -> L1 -> engine).
@@ -179,6 +181,30 @@ def _resolve_node(node: str | TechNode) -> TechNode:
     return TECH_NODES[node] if isinstance(node, str) else node
 
 
+def replicate_site_modules(base: list[E.ModuleEnergy], base_site: str,
+                           count: int) -> list[E.ModuleEnergy]:
+    """Replicate one site's module list across ``count`` identical sites.
+
+    The per-camera sensor deployments are identical except for the site
+    name, so the (layer-reduction-heavy) module list is built once and
+    copies are relabelled — ``base_site`` ("sensor0") becomes "sensor1",
+    "sensor2", ... in both the module name and its breakdown group.
+    """
+    if not base_site.endswith("0"):
+        raise ValueError(f"base_site {base_site!r} must name replica 0 "
+                         "(end in '0') so siblings can be derived")
+    if count <= 0:
+        return []
+    out = list(base)
+    for i in range(1, count):
+        site = base_site[:-1] + str(i)
+        out += [dataclasses.replace(m,
+                                    name=m.name.replace(base_site, site, 1),
+                                    group=m.group.replace(base_site, site, 1))
+                for m in base]
+    return out
+
+
 def build_centralized(agg_node: str | TechNode = "7nm",
                       detnet: NNWorkload | None = None,
                       keynet: NNWorkload | None = None,
@@ -241,16 +267,16 @@ def build_distributed(agg_node: str | TechNode = "7nm",
                           tag="mipi")
     mods += _link_modules(num_cameras, MIPI, detnet.output_bytes, detnet_fps,
                           tag="mipi-det")
-    for i in range(num_cameras):
-        sensor = Deployment(
-            site=ProcessorSite(name=f"sensor{i}", node=sen,
-                               scale=ON_SENSOR_SCALE,
-                               weight_mem=sensor_weight_mem,
-                               l1_bytes=16 * 1024),
-            workloads=[(detnet, detnet_fps)],
-            extra_buffer_bytes=detnet.input_bytes,
-        )
-        mods += sensor.modules()
+    # The per-camera sensor deployments are identical: build once, relabel.
+    sensor0 = Deployment(
+        site=ProcessorSite(name="sensor0", node=sen,
+                           scale=ON_SENSOR_SCALE,
+                           weight_mem=sensor_weight_mem,
+                           l1_bytes=SENSOR_L1_BYTES),
+        workloads=[(detnet, detnet_fps)],
+        extra_buffer_bytes=detnet.input_bytes,
+    ).modules()
+    mods += replicate_site_modules(sensor0, "sensor0", num_cameras)
     aggd = Deployment(
         site=ProcessorSite(name="agg", node=agg, scale=1.0),
         workloads=[(keynet, keynet_fps * num_cameras)],

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import functools
 import math
 from typing import Iterable, List, Sequence, Tuple
 
@@ -60,20 +61,22 @@ class NNWorkload:
     input_bytes: int      # bytes entering the network (image / ROI / tokens)
     output_bytes: int     # bytes leaving the network (ROI coords, keypoints..)
 
-    @property
+    # The reductions below are consumed on every Eq. 7-11 evaluation; they
+    # are memoized (the dataclass is frozen, so they can never go stale).
+    @functools.cached_property
     def total_macs(self) -> int:
         return sum(l.macs for l in self.layers)
 
-    @property
+    @functools.cached_property
     def total_weight_bytes(self) -> int:
         return sum(l.weight_bytes for l in self.layers)
 
-    @property
+    @functools.cached_property
     def peak_act_bytes(self) -> int:
         return max((max(l.in_act_bytes, l.out_act_bytes) for l in self.layers),
                    default=0)
 
-    @property
+    @functools.cached_property
     def total_act_traffic_bytes(self) -> int:
         """Total activation bytes read+written across the network."""
         return sum(l.in_act_bytes + l.out_act_bytes for l in self.layers)

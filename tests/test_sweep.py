@@ -1,0 +1,228 @@
+"""Scalar <-> vectorized parity for the design-space engine.
+
+The array path (``repro.core.sweep.evaluate_grid``) must reproduce the
+scalar dataclass path (``partition.evaluate_cut`` / ``system.build_*``)
+to <=1e-6 relative error across a sampled grid — same equations, two
+execution strategies.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import partition, sweep, system
+from repro.core.arrays import model_arrays
+from repro.core.handtracking import build_detnet, build_keynet
+
+REL_TOL = 1e-6
+
+N_DET = len(build_detnet().layers)
+N_ALL = N_DET + len(build_keynet().layers)
+
+# A sampled grid covering every cut regime and every knob — every kernel
+# axis takes at least two values so no rate/term mixup can hide behind a
+# default.
+CUTS = (0, 1, 5, N_DET, N_DET + 3, N_ALL)
+NODES = ("7nm", "16nm")
+WMEMS = ("sram", "mram")
+DET_FPS = (10.0, 30.0)
+KEY_FPS = (15.0, 30.0)
+NCAMS = (1, 4)
+MIPI_SCALES = (1.0, 2.0)
+CAM_FPS = (30.0, 60.0)
+
+
+def scalar_groups(report: system.SystemReport) -> dict[str, float]:
+    """Map the scalar per-module breakdown onto the kernel's field names."""
+    bd = report.breakdown()
+
+    def g(pred):
+        return sum(v for k, v in bd.items() if pred(k))
+
+    return {
+        "camera": g(lambda k: k == "camera"),
+        "utsv": g(lambda k: k.startswith("utsv")),
+        "mipi": g(lambda k: k.startswith("mipi")),
+        "sensor_compute": g(lambda k: k.startswith("sensor")
+                            and k.endswith("compute")),
+        "sensor_memory": g(lambda k: k.startswith("sensor")
+                           and k.endswith("memory")),
+        "agg_compute": g(lambda k: k == "agg.compute"),
+        "agg_memory": g(lambda k: k == "agg.memory"),
+    }
+
+
+def assert_rel(a: float, b: float, what: str):
+    denom = max(abs(a), abs(b), 1e-30)
+    assert abs(a - b) / denom <= REL_TOL, f"{what}: scalar={a} vec={b}"
+
+
+class TestGridScalarParity:
+    @pytest.fixture(scope="class")
+    def grid(self):
+        return sweep.evaluate_grid(
+            cuts=CUTS, agg_nodes=NODES, sensor_nodes=NODES,
+            weight_mems=WMEMS, detnet_fps=DET_FPS, keynet_fps=KEY_FPS,
+            num_cameras=NCAMS, mipi_energy_scale=MIPI_SCALES,
+            camera_fps=CAM_FPS)
+
+    def test_full_sampled_grid_parity(self, grid):
+        """Every grid cell matches the scalar path (or is NaN exactly when
+        the scalar path would refuse the configuration)."""
+        checked = invalid = 0
+        for idx in np.ndindex(grid.shape):
+            cfg = {name: vals[i]
+                   for (name, vals), i in zip(grid.axes.items(), idx)}
+            flat = int(np.ravel_multi_index(idx, grid.shape))
+            vec_power = float(grid.avg_power.ravel()[flat])
+            mram_invalid = (cfg["weight_mem"] == "mram"
+                            and cfg["sensor_node"] == "7nm"
+                            and cfg["cut"] > 0)
+            if mram_invalid:
+                assert np.isnan(vec_power), cfg
+                with pytest.raises(ValueError):
+                    partition.evaluate_cut(
+                        cfg["cut"], agg_node=cfg["agg_node"],
+                        sensor_node=cfg["sensor_node"],
+                        sensor_weight_mem=cfg["weight_mem"],
+                        detnet_fps=cfg["detnet_fps"],
+                        keynet_fps=cfg["keynet_fps"],
+                        num_cameras=int(cfg["num_cameras"]),
+                        camera_fps=cfg["camera_fps"],
+                        mipi_energy_scale=cfg["mipi_energy_scale"])
+                invalid += 1
+                continue
+            pt = partition.evaluate_cut(
+                cfg["cut"], agg_node=cfg["agg_node"],
+                sensor_node=cfg["sensor_node"],
+                sensor_weight_mem=cfg["weight_mem"],
+                detnet_fps=cfg["detnet_fps"],
+                keynet_fps=cfg["keynet_fps"],
+                num_cameras=int(cfg["num_cameras"]),
+                camera_fps=cfg["camera_fps"],
+                mipi_energy_scale=cfg["mipi_energy_scale"])
+            assert_rel(pt.avg_power, vec_power, f"avg_power @ {cfg}")
+            assert_rel(pt.mipi_bytes_per_s,
+                       float(grid.data["mipi_bytes_per_s"].ravel()[flat]),
+                       f"mipi_bytes_per_s @ {cfg}")
+            assert_rel(pt.sensor_macs_per_s,
+                       float(grid.data["sensor_macs_per_s"].ravel()[flat]),
+                       f"sensor_macs_per_s @ {cfg}")
+            checked += 1
+        assert checked > 100 and invalid > 0  # both regimes exercised
+
+    def test_group_breakdown_parity_at_key_cuts(self):
+        """Per-group powers match module-list groups at the three regimes
+        the paper discusses (centralized, paper split, full on-sensor)."""
+        for cut in (0, N_DET, N_ALL):
+            pt = partition.evaluate_cut(cut, sensor_node="16nm")
+            vec = sweep.evaluate_one(cut, sensor_node="16nm")
+            for field, scalar_val in scalar_groups(pt.report).items():
+                assert_rel(scalar_val, vec[field], f"{field} @ cut {cut}")
+
+    def test_breakdown_fields_sum_to_total(self, grid):
+        parts = sum(grid.data[f] for f in
+                    ("camera", "utsv", "mipi", "sensor_compute",
+                     "sensor_memory", "agg_compute", "agg_memory"))
+        valid = ~np.isnan(grid.avg_power)
+        np.testing.assert_allclose(parts[valid], grid.avg_power[valid],
+                                   rtol=1e-12)
+
+
+class TestBuilderParity:
+    def test_matches_build_centralized(self):
+        for node in NODES:
+            rep = system.build_centralized(node)
+            vec = sweep.evaluate_one(0, agg_node=node)
+            assert_rel(rep.avg_power, vec["avg_power"],
+                       f"centralized[{node}]")
+
+    def test_matches_build_distributed(self):
+        for agg in NODES:
+            for sen in NODES:
+                for mem in ("sram",) if sen == "7nm" else WMEMS:
+                    rep = system.build_distributed(
+                        agg, sen, sensor_weight_mem=mem)
+                    vec = sweep.evaluate_one(
+                        N_DET, agg_node=agg, sensor_node=sen,
+                        sensor_weight_mem=mem)
+                    assert_rel(rep.avg_power, vec["avg_power"],
+                               f"distributed[{agg},{sen},{mem}]")
+                    assert_rel(rep.group_power("sensor"),
+                               vec["sensor_compute"] + vec["sensor_memory"],
+                               f"on-sensor subsystem [{agg},{sen},{mem}]")
+
+
+class TestOptimizer:
+    def test_engines_agree_on_optimal_cut(self):
+        """Array-engine argmin lands on the same cut as the scalar sweep,
+        and `optimal_partition` (array-backed by default) returns it."""
+        pts = partition.sweep_partitions()
+        scalar_best = min(pts, key=lambda p: p.avg_power)
+        grid = sweep.evaluate_grid()          # all cuts, defaults
+        assert grid.argmin()["cut"] == scalar_best.cut
+        best = partition.optimal_partition()
+        assert best.cut == scalar_best.cut
+        assert best.avg_power == min(p.avg_power for p in pts)
+
+    def test_paper_boundary_beats_centralized_and_full_onsensor(self):
+        """The paper's DetNet/KeyNet boundary remains a local optimum of
+        the grid: cheaper than both extremes (the layer-level sweep may
+        do even better — a beyond-paper finding the seed already pins)."""
+        power = sweep.evaluate_grid().avg_power.ravel()
+        assert power[N_DET] < power[0]
+        assert power[N_DET] < power[N_ALL]
+        best = partition.optimal_partition()
+        assert best.avg_power <= power[N_DET] * (1 + 1e-12)
+
+    def test_both_engines_reject_mram_without_test_vehicle(self):
+        """The array engine must not quietly return the one valid
+        centralized point when every cut > 0 is invalid — it raises like
+        the scalar sweep does."""
+        for engine in ("array", "scalar"):
+            with pytest.raises(ValueError, match="MRAM"):
+                partition.optimal_partition(engine=engine,
+                                            sensor_node="7nm",
+                                            sensor_weight_mem="mram")
+
+    def test_invalid_mram_cut0_is_valid(self):
+        """Centralized configs never build a sensor site, so MRAM on a
+        node without a test vehicle is only invalid for cut > 0."""
+        grid = sweep.evaluate_grid(cuts=(0, 1), sensor_nodes=("7nm",),
+                                   weight_mems=("mram",))
+        power = grid.avg_power.ravel()
+        assert np.isfinite(power[0]) and np.isnan(power[1])
+
+
+class TestEngineMechanics:
+    def test_grid_shape_and_axes(self):
+        grid = sweep.evaluate_grid(cuts=(0, N_DET), agg_nodes=NODES,
+                                   detnet_fps=(5.0, 10.0, 15.0))
+        assert grid.shape == (2, 2, 1, 1, 3, 1, 1, 1, 1)
+        assert grid.n_configs == 12
+        assert grid.axes["detnet_fps"] == (5.0, 10.0, 15.0)
+        for f in sweep.FIELDS:
+            assert grid.data[f].shape == grid.shape
+
+    def test_x64_scoping_leaves_global_config_untouched(self):
+        import jax.numpy as jnp
+        sweep.evaluate_grid(cuts=(0,))
+        assert jnp.asarray(1.0).dtype == jnp.float32
+
+    def test_model_arrays_cached(self):
+        assert model_arrays() is model_arrays()
+
+    def test_rejects_bad_axes(self):
+        with pytest.raises(ValueError):
+            sweep.evaluate_grid(cuts=(N_ALL + 1,))
+        with pytest.raises(ValueError):
+            sweep.evaluate_grid(weight_mems=("flash",))
+        with pytest.raises(KeyError):
+            sweep.evaluate_grid(agg_nodes=("3nm",))
+        with pytest.raises(ValueError, match="num_cameras"):
+            sweep.evaluate_grid(num_cameras=(0,))
+
+    def test_argmin_on_all_nan_grid_is_informative(self):
+        grid = sweep.evaluate_grid(cuts=(1, 2), sensor_nodes=("7nm",),
+                                   weight_mems=("mram",))
+        with pytest.raises(ValueError, match="invalid"):
+            grid.argmin()

@@ -1,0 +1,106 @@
+"""Pareto-front extraction + gradient knob-search throughput.
+
+    PYTHONPATH=src python -m benchmarks.pareto_bench
+
+Runs the multi-objective layer on the same 10,880-configuration grid as
+``sweep_bench`` (so the perf trajectory has a shared reference point):
+
+* front extraction over the three headline objectives (power, latency,
+  MIPI traffic) — chunked O(n^2) dominance, configs/s;
+* hypervolume + knee of the extracted front;
+* the projected-Adam knob search of ``repro.core.optimize`` — steps/s
+  post-jit (compile reported separately, not counted).
+
+Emits ``name,value,derived`` rows via :func:`rows` and snapshots
+``BENCH_pareto.json`` at the repo root for the perf trail.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.sweep_bench import GRID
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_pareto.json"
+
+FRONT_REPS = 5     # timed repetitions of the full front extraction
+OPT_STEPS = 150    # projected-Adam steps in the timed search
+OPT_BOUNDS = {"detnet_fps": (5.0, 30.0), "camera_fps": (20.0, 60.0)}
+OPT_OBJECTIVE = {"avg_power": 1.0, "latency": 10.0}
+
+
+def rows():
+    from repro.core import optimize, pareto, sweep
+    from repro.core.handtracking import build_detnet
+
+    n_det = len(build_detnet().layers)
+
+    # --- the grid itself is sweep_bench's; its eval time is not ours ---
+    res = sweep.evaluate_grid(**GRID)
+    n = res.n_configs
+    assert n >= 10_000, n
+
+    t0 = time.perf_counter()
+    for _ in range(FRONT_REPS):
+        front = pareto.pareto_front(res)
+    front_cps = FRONT_REPS * n / (time.perf_counter() - t0)
+
+    t0 = time.perf_counter()
+    hv = front.hypervolume()
+    hv_s = time.perf_counter() - t0
+    knee = front.knee()
+
+    # --- gradient search: compile once, then time the steady state ---
+    opt_kw = dict(cut=n_det, sensor_node="16nm", steps=OPT_STEPS)
+    t0 = time.perf_counter()
+    optimize.optimize_knobs(OPT_BOUNDS, OPT_OBJECTIVE, **opt_kw)
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    opt = optimize.optimize_knobs(OPT_BOUNDS, OPT_OBJECTIVE, **opt_kw)
+    opt_sps = OPT_STEPS / (time.perf_counter() - t0)
+
+    snapshot = {
+        "grid_configs": n,
+        "front_size": front.size,
+        "front_configs_per_s": round(front_cps, 1),
+        "hypervolume": hv,
+        "hypervolume_s": round(hv_s, 4),
+        "knee": {k: (int(v) if isinstance(v, (int, np.integer))
+                     else float(v) if isinstance(v, (float, np.floating))
+                     else v) for k, v in knee.items()},
+        "opt_steps_per_s": round(opt_sps, 1),
+        "opt_compile_s": round(compile_s, 3),
+        "opt_knobs": {k: round(float(v), 4) for k, v in opt.knobs.items()},
+        "opt_objective": opt.objective,
+    }
+    BENCH_JSON.write_text(json.dumps(snapshot, indent=2) + "\n")
+
+    return [
+        ("pareto.grid_configs", float(n), "shared sweep_bench grid"),
+        ("pareto.front_size", float(front.size),
+         f"objectives={','.join(front.objectives)}"),
+        ("pareto.front_configs_per_s", front_cps,
+         f"lexsort + running-front cull x{FRONT_REPS}"),
+        ("pareto.hypervolume", hv,
+         f"grid-nadir ref, {hv_s*1e3:.1f} ms"),
+        ("pareto.knee_power_mw", knee["avg_power"] * 1e3,
+         f"cut={knee['cut']} lat={knee['latency']*1e3:.2f}ms "
+         f"mipi={knee['mipi_bytes_per_s']/1e6:.2f}MB/s"),
+        ("optimize.steps_per_s", opt_sps,
+         f"projected Adam, {len(OPT_BOUNDS)} knobs "
+         f"(compile {compile_s:.2f}s)"),
+        ("optimize.best_objective_mw", opt.objective * 1e3,
+         " ".join(f"{k}={v:.2f}" for k, v in opt.knobs.items())),
+    ]
+
+
+if __name__ == "__main__":
+    print("name,value,derived")
+    for name, val, derived in rows():
+        print(f"{name},{val:.6g},{derived}")
+    print(f"(snapshot written to {BENCH_JSON})")

@@ -10,6 +10,8 @@ Emits ``name,value,derived`` CSV rows:
   * dosc_advisor  — the two-tier (ICI/DCN) communication-plan table
   * sweep_bench   — scalar vs vectorized design-space engine throughput
                     (also snapshots BENCH_sweep.json for the perf trail)
+  * pareto_bench  — Pareto-front extraction + gradient knob-search
+                    throughput (snapshots BENCH_pareto.json)
 """
 
 from __future__ import annotations
@@ -37,7 +39,7 @@ def dosc_advisor_rows():
 
 
 SUITES = ["power_tables", "rbe_roofline", "tpu_roofline", "kernel_bench",
-          "dosc_advisor", "sweep_bench"]
+          "dosc_advisor", "sweep_bench", "pareto_bench"]
 
 
 def main() -> None:

@@ -10,7 +10,11 @@ section below is one batched device call instead of a scalar Python loop:
 * DetNet frame rate (the paper's 'ROI reuse' knob),
 * SRAM vs hybrid MRAM on-sensor weight memory,
 * sensitivity of the optimal cut to MIPI energy/byte (a first-class grid
-  axis now — no more monkey-patching the link constants).
+  axis now — no more monkey-patching the link constants),
+* the Pareto front over (power, latency, MIPI traffic) — the paper's
+  three headline claims as one multi-objective picture,
+* gradient knob search: projected Adam driving jax.grad through the
+  Eq. 1-11 kernel, cross-checked against a dense grid.
 
 The scalar path (`partition.evaluate_cut`) renders the fully-annotated
 report for the single winning configuration at the end.
@@ -18,7 +22,7 @@ report for the single winning configuration at the end.
 
 import numpy as np
 
-from repro.core import partition, sweep
+from repro.core import optimize, pareto, partition, sweep
 from repro.core.constants import MIPI
 from repro.core.handtracking import build_detnet, build_keynet
 
@@ -72,6 +76,43 @@ def sweep_mipi_energy():
               f"(centralized {power[0, k]*1e3:7.3f} mW)")
 
 
+def pareto_study():
+    print("\n== Pareto front: power x latency x MIPI traffic ==")
+    res = sweep.evaluate_grid(sensor_nodes=("7nm", "16nm"),
+                              weight_mems=("sram", "mram"),
+                              detnet_fps=(5.0, 10.0, 15.0, 30.0))
+    front = pareto.pareto_front(res)   # NaN MRAM corners masked
+    print(f"  {front.size} non-dominated of {res.n_configs} configs "
+          f"(hypervolume {front.hypervolume():.3g})")
+    print(f"  {'cut':>4s} {'sensor':>7s} {'wmem':>5s} {'dfps':>5s} "
+          f"{'power mW':>9s} {'lat ms':>7s} {'MIPI MB/s':>10s}")
+    knee = front.knee()
+    for cfg in front.configs():
+        mark = "  <- knee" if cfg == knee else ""
+        print(f"  {cfg['cut']:4d} {cfg['sensor_node']:>7s} "
+              f"{cfg['weight_mem']:>5s} {cfg['detnet_fps']:5.0f} "
+              f"{cfg['avg_power']*1e3:9.3f} {cfg['latency']*1e3:7.3f} "
+              f"{cfg['mipi_bytes_per_s']/1e6:10.3f}{mark}")
+
+
+def knob_search():
+    print("\n== gradient knob search (jax.grad through Eqs. 1-11) ==")
+    bounds = {"detnet_fps": (5.0, 30.0), "camera_fps": (20.0, 60.0)}
+    objective = {"avg_power": 1.0, "latency": 10.0}   # 1 mW ~ 0.1 ms
+    res = optimize.optimize_knobs(bounds, objective, cut=N_DET,
+                                  sensor_node="16nm", steps=200)
+    gk, gv = optimize.grid_argmin(bounds, objective, cut=N_DET,
+                                  sensor_node="16nm", n=41)
+    print(f"  projected Adam : " + ", ".join(
+        f"{k}={v:.2f}" for k, v in res.knobs.items())
+        + f" -> objective {res.objective*1e3:.4f}")
+    print(f"  41x41 grid     : " + ", ".join(
+        f"{k}={v:.2f}" for k, v in gk.items())
+        + f" -> objective {gv*1e3:.4f}")
+    print(f"  at the optimum : {res.fields['avg_power']*1e3:.3f} mW, "
+          f"{res.fields['latency']*1e3:.3f} ms")
+
+
 def report_winner():
     print("\n== full module report of the optimal configuration ==")
     best = partition.optimal_partition()      # array engine + scalar report
@@ -87,4 +128,6 @@ if __name__ == "__main__":
     sweep_detnet_fps()
     sweep_memory_tech()
     sweep_mipi_energy()
+    pareto_study()
+    knob_search()
     report_winner()

@@ -1,5 +1,5 @@
 """Core: the paper's semi-analytical DOSC power model + TPU adaptation."""
 
 from . import (arrays, constants, dosc, energy, handtracking,  # noqa: F401
-               hlo_analysis, partition, rbe, roofline, sweep, system,
-               tpu_energy, workloads)
+               hlo_analysis, latency, optimize, pareto, partition, rbe,
+               roofline, sweep, system, tpu_energy, workloads)

@@ -22,7 +22,11 @@ a handful of scalar knobs changing.  This module lowers everything that is
 
 :mod:`repro.core.sweep` consumes a :class:`ModelArrays` inside a
 ``jax.jit``/``jax.vmap`` kernel; the scalar API consumes the same payload
-plan through :func:`mipi_payloads`, so the two paths cannot drift.
+plan through :func:`mipi_payloads`, so the two paths cannot drift.  The
+cycle prefix-sums double as the lowering of the per-cut latency model
+(:func:`repro.core.latency.cut_latency` — the kernel's ``latency``
+channel), and the per-rate payload tables are shared between the Eq. 5
+power term and the latency critical path.
 """
 
 from __future__ import annotations

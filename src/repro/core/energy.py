@@ -112,7 +112,8 @@ class ModuleEnergy:
     """
 
     name: str
-    group: str            # "camera" | "comm" | "compute" | "memory"
+    group: str            # breakdown key: "camera", a link tag ("mipi.0",
+                          # "utsv"), or "<site>.compute" / "<site>.memory"
     energy_per_frame: float
     fps: float
 

@@ -1,0 +1,243 @@
+"""Multi-objective Pareto analysis over design-space grids.
+
+The paper's core claim is that the distributed on-sensor architecture wins
+on *power, latency, and MIPI traffic simultaneously* — which makes the
+partition search a multi-objective problem, not an ``argmin`` over one
+channel.  This module extracts exact non-dominated sets from the dense
+grids of :func:`repro.core.sweep.evaluate_grid`:
+
+* :func:`non_dominated_mask` — exact dominance filtering over an ``(n, d)``
+  objective matrix: a lexicographic sort (dominators always precede the
+  points they dominate) followed by chunked, vectorized culling against
+  the running front, so cost scales with ``n × front_size`` instead of
+  ``n²`` on realistic grids.  Rows with any non-finite entry (the NaN
+  invalid-MRAM corners of the grid engine) are masked out up front.
+* :func:`pareto_front` — the front of a :class:`~repro.core.sweep.
+  SweepResult` over arbitrary objective channels, each minimized by
+  default or maximized via ``maximize=``.
+* :func:`hypervolume` — exact dominated hypervolume w.r.t. a reference
+  point (sweep for d ≤ 2, recursive objective slicing above), the scalar
+  front-quality metric benchmarked in ``benchmarks/pareto_bench.py``.
+* :func:`knee_point` — the balanced-compromise point: minimum Euclidean
+  distance to the ideal point after per-objective [0, 1] normalization.
+
+Dominance convention throughout (minimization): ``a`` dominates ``b`` iff
+``a <= b`` in every objective and ``a < b`` in at least one.  Duplicate
+points do not dominate each other, so ties survive into the front.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+
+from .sweep import SweepResult
+
+#: The paper's three headline objectives, all minimized.
+DEFAULT_OBJECTIVES = ("avg_power", "latency", "mipi_bytes_per_s")
+
+_CHUNK = 512   # pairwise-dominance block size (memory ~ chunk × n × d)
+
+
+def non_dominated_mask(points: np.ndarray) -> np.ndarray:
+    """Boolean mask of the non-dominated rows of an ``(n, d)`` matrix.
+
+    Minimization in every column; rows containing NaN/inf are never part
+    of the front.  Exact: after a lexicographic sort any dominator
+    precedes the points it dominates, and (by transitivity) a point
+    dominated by a *discarded* point is also dominated by whichever front
+    member discarded it — so checking each chunk against the running
+    front plus pairwise within the chunk's survivors loses nothing.
+    Worst case (everything mutually non-dominated) degrades gracefully to
+    the plain O(n²) pairwise sweep.
+    """
+    pts = np.asarray(points, np.float64)
+    if pts.ndim != 2:
+        raise ValueError(f"expected (n, d) objective matrix, got {pts.shape}")
+    mask = np.zeros(pts.shape[0], bool)
+    idx = np.flatnonzero(np.isfinite(pts).all(axis=1))
+    if idx.size == 0:
+        return mask
+    order = np.lexsort(pts[idx].T[::-1])    # by col 0, ties by col 1, ...
+    Q = pts[idx][order]
+    out = np.zeros(Q.shape[0], bool)
+    front = Q[:0]
+    for lo in range(0, Q.shape[0], _CHUNK):
+        blk = Q[lo:lo + _CHUNK]                              # (b, d)
+        if front.shape[0]:
+            le = (front[None, :, :] <= blk[:, None, :]).all(-1)
+            lt = (front[None, :, :] < blk[:, None, :]).any(-1)
+            alive = np.flatnonzero(~(le & lt).any(axis=1))
+        else:
+            alive = np.arange(blk.shape[0])
+        if alive.size:
+            B = blk[alive]                                   # pairwise
+            le = (B[None, :, :] <= B[:, None, :]).all(-1)
+            lt = (B[None, :, :] < B[:, None, :]).any(-1)
+            sel = alive[~(le & lt).any(axis=1)]
+            out[lo + sel] = True
+            front = np.concatenate([front, blk[sel]], axis=0)
+    mask[idx[order]] = out
+    return mask
+
+
+def knee_point(points: np.ndarray) -> int:
+    """Index of the knee (balanced compromise) of a front.
+
+    Each objective is normalized to [0, 1] over the given points; the knee
+    is the point closest (Euclidean) to the normalized ideal ``(0, ..., 0)``
+    — extreme points that win one objective by sacrificing the others sit
+    at distance ~1, the elbow of the trade-off curve sits closest.
+    """
+    P = np.asarray(points, np.float64)
+    if P.ndim != 2 or P.shape[0] == 0:
+        raise ValueError("knee_point needs a non-empty (n, d) matrix")
+    lo, hi = P.min(axis=0), P.max(axis=0)
+    span = np.where(hi > lo, hi - lo, 1.0)
+    return int(np.argmin(np.linalg.norm((P - lo) / span, axis=1)))
+
+
+def hypervolume(points: np.ndarray, ref: Sequence[float]) -> float:
+    """Exact dominated hypervolume of ``points`` w.r.t. ``ref`` (minimize).
+
+    The Lebesgue measure of the region dominated by the point set and
+    bounded above by the reference point — the standard scalar quality
+    metric for a Pareto front (larger is better).  Points that do not
+    strictly dominate ``ref`` contribute nothing.  Exact sweep for d ≤ 2;
+    recursive slicing over the last objective for d ≥ 3 (fine for the
+    front sizes the grids here produce, typically tens of points).
+    """
+    ref = np.asarray(ref, np.float64)
+    P = np.asarray(points, np.float64)
+    if P.ndim != 2 or P.shape[1] != ref.shape[0]:
+        raise ValueError(f"points {P.shape} incompatible with ref {ref.shape}")
+    P = P[np.isfinite(P).all(axis=1)]
+    P = P[(P < ref).all(axis=1)]
+    if P.shape[0] == 0:
+        return 0.0
+    P = P[non_dominated_mask(P)]
+    return _hv(sorted(map(tuple, P)), tuple(ref))
+
+
+def _hv(pts: list[tuple], ref: tuple) -> float:
+    d = len(ref)
+    if d == 1:
+        return ref[0] - min(p[0] for p in pts)
+    if d == 2:
+        # Sweep ascending in obj0; on a front, obj1 is then descending.
+        hv, y_cover = 0.0, ref[1]
+        for x, y in sorted(pts):
+            if y < y_cover:
+                hv += (ref[0] - x) * (y_cover - y)
+                y_cover = y
+        return hv
+    # Slice along the last objective: between consecutive z values the
+    # cross-section is the (d-1)-dim hypervolume of the points at or below.
+    order = sorted(pts, key=lambda p: p[-1])
+    hv = 0.0
+    for i, p in enumerate(order):
+        z_hi = order[i + 1][-1] if i + 1 < len(order) else ref[-1]
+        if z_hi > p[-1]:
+            hv += (z_hi - p[-1]) * _hv([q[:-1] for q in order[:i + 1]],
+                                       ref[:-1])
+    return hv
+
+
+@dataclasses.dataclass(frozen=True)
+class ParetoFront:
+    """The exact non-dominated set of one grid over chosen objectives.
+
+    ``values`` holds the objective channels in their natural orientation
+    (rows sorted by the first objective, best first); ``indices`` are flat
+    indices into the originating grid, so ``result.config_at(indices[i])``
+    recovers the knob settings of front member ``i``.
+    """
+
+    result: SweepResult
+    objectives: tuple[str, ...]
+    maximize: tuple[str, ...]
+    indices: np.ndarray          # (k,) flat grid indices
+    values: np.ndarray           # (k, d) objective values, natural signs
+
+    @property
+    def size(self) -> int:
+        return int(self.indices.size)
+
+    def _signed(self, values: np.ndarray) -> np.ndarray:
+        sign = np.where([o in self.maximize for o in self.objectives],
+                        -1.0, 1.0)
+        return values * sign
+
+    def configs(self) -> list[dict]:
+        """Knob settings + objective values of every front member."""
+        out = []
+        for flat, vals in zip(self.indices, self.values):
+            cfg = self.result.config_at(int(flat))
+            cfg.update(zip(self.objectives, map(float, vals)))
+            out.append(cfg)
+        return out
+
+    def knee(self) -> dict:
+        """Config dict of the balanced-compromise member (see
+        :func:`knee_point`)."""
+        return self.configs()[knee_point(self._signed(self.values))]
+
+    def hypervolume(self, ref: Mapping[str, float] | None = None) -> float:
+        """Dominated hypervolume of the front (larger is better).
+
+        ``ref`` maps objective name -> reference value; when omitted, the
+        per-objective worst *valid* value over the whole originating grid
+        is used (nudged outward by 1e-9 of the span so nadir points still
+        count).  Pass an explicit ``ref`` when comparing fronts extracted
+        from different grids.
+        """
+        if ref is not None:
+            r = self._signed(
+                np.asarray([ref[o] for o in self.objectives], np.float64))
+        else:
+            r = []
+            for o in self.objectives:
+                c = self.result.data[o].ravel()
+                signed = -c[np.isfinite(c)] if o in self.maximize \
+                    else c[np.isfinite(c)]
+                span = float(signed.max() - signed.min()) or 1.0
+                r.append(float(signed.max()) + 1e-9 * span)
+            r = np.asarray(r, np.float64)
+        return hypervolume(self._signed(self.values), r)
+
+
+def pareto_front(result: SweepResult,
+                 objectives: Sequence[str] = DEFAULT_OBJECTIVES,
+                 maximize: Iterable[str] = ()) -> ParetoFront:
+    """Extract the exact Pareto front of a sweep over objective channels.
+
+    ``objectives`` name fields of ``result.data`` (see ``sweep.FIELDS``);
+    each is minimized unless listed in ``maximize``.  Grid configurations
+    with a NaN in any selected channel — the invalid MRAM corners — are
+    excluded.  Returns a :class:`ParetoFront` sorted by the first
+    objective (best first).
+    """
+    objectives = tuple(objectives)
+    maximize = tuple(maximize)
+    if len(objectives) < 1:
+        raise ValueError("need at least one objective channel")
+    unknown = [o for o in objectives if o not in result.data]
+    if unknown:
+        raise ValueError(f"unknown objective channels {unknown}; "
+                         f"have {sorted(result.data)}")
+    stray = [o for o in maximize if o not in objectives]
+    if stray:
+        raise ValueError(f"maximize entries {stray} not in objectives")
+
+    V = np.stack([np.asarray(result.data[o], np.float64).ravel()
+                  for o in objectives], axis=1)
+    sign = np.where([o in maximize for o in objectives], -1.0, 1.0)
+    mask = non_dominated_mask(V * sign)
+    idx = np.flatnonzero(mask)
+    vals = V[idx]
+    order = np.argsort(vals[:, 0] * sign[0], kind="stable")
+    return ParetoFront(result=result, objectives=objectives,
+                       maximize=maximize, indices=idx[order],
+                       values=vals[order])

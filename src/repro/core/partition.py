@@ -28,8 +28,11 @@ Eqs. 1-11 for an arbitrary (cut × node × memory × rate × ...) cartesian
 product in one jit/vmap device call.  Both paths derive what crosses MIPI
 at each cut from :func:`repro.core.arrays.mipi_payloads`, so they cannot
 drift; ``tests/test_sweep.py`` pins them to ≤1e-6 relative parity.
-:func:`optimal_partition` uses the array engine to locate the minimum and
-the scalar path to render its report.
+:func:`optimal_partition` uses the array engine to locate the minimum of
+any single objective channel (power, latency, or MIPI traffic) and the
+scalar path to render its report; trade-offs *across* the channels are
+the domain of :mod:`repro.core.pareto` (exact fronts) and
+:mod:`repro.core.optimize` (gradient search over the continuous knobs).
 """
 
 from __future__ import annotations
@@ -44,19 +47,29 @@ from .constants import (CAMERA_FPS, DETNET_FPS, KEYNET_FPS, MIPI,
                         T_SENSE_S, TECH_NODES, UTSV, TechNode)
 from .constants import BOX_COORDS_BYTES  # noqa: F401  (re-export)
 from .handtracking import FULL_FRAME_BYTES, build_detnet, build_keynet
+from .latency import cut_latency
 from .system import (Deployment, ProcessorSite, SystemReport,
                      _camera_modules, _link_modules, _resolve_node,
                      replicate_site_modules, MemKind)
 from .workloads import NNWorkload
 
+#: SweepResult channels / PartitionPoint attributes ``optimal_partition``
+#: can minimize (the paper's three headline objectives).
+OBJECTIVES = ("avg_power", "latency", "mipi_bytes_per_s")
+
 
 @dataclasses.dataclass(frozen=True)
 class PartitionPoint:
+    """One fully-evaluated partition cut: the three objective scalars
+    (``avg_power`` W, ``latency`` s, ``mipi_bytes_per_s`` B/s) plus the
+    named per-module :class:`~repro.core.system.SystemReport`."""
+
     cut: int
     label: str
     avg_power: float
     mipi_bytes_per_s: float
     sensor_macs_per_s: float
+    latency: float
     report: SystemReport
 
 
@@ -160,9 +173,14 @@ def evaluate_cut(cut: int,
     rep = SystemReport(name=f"partition[{label}]", modules=mods)
     mipi_rate = sum(b * r for b, r in mipi_payload_rates) * num_cameras
     sensor_macs = sum(w.total_macs * f for w, f in sensor_wls) * num_cameras
+    lat = cut_latency(cut, agg_node=agg_n, sensor_node=sen_n,
+                      detnet=detnet, keynet=keynet,
+                      num_cameras=num_cameras, camera_fps=camera_fps,
+                      detnet_fps=detnet_fps, keynet_fps=keynet_fps)
     return PartitionPoint(cut=cut, label=label, avg_power=rep.avg_power,
                           mipi_bytes_per_s=mipi_rate,
-                          sensor_macs_per_s=sensor_macs, report=rep)
+                          sensor_macs_per_s=sensor_macs,
+                          latency=lat.total, report=rep)
 
 
 def sweep_partitions(**kw) -> list[PartitionPoint]:
@@ -186,8 +204,15 @@ def _registry_name(node: str | TechNode) -> str | None:
     return node.name if TECH_NODES.get(node.name) is node else None
 
 
-def optimal_partition(engine: str = "array", **kw) -> PartitionPoint:
-    """Minimum-power partition point (the paper's Fig. 2 sweep).
+def optimal_partition(engine: str = "array",
+                      objective: str = "avg_power", **kw) -> PartitionPoint:
+    """Optimal partition point along one objective (Fig. 2 generalized).
+
+    ``objective`` selects which channel is minimized over the cut axis —
+    one of :data:`OBJECTIVES` (``avg_power`` reproduces the paper's power
+    sweep; ``latency`` and ``mipi_bytes_per_s`` are the other two headline
+    claims).  For trade-offs *between* the objectives use
+    :func:`repro.core.pareto.pareto_front` instead of a scalar argmin.
 
     With ``engine="array"`` (default) the cut axis is evaluated by the
     vectorized grid engine and only the winner is rendered through the
@@ -195,6 +220,9 @@ def optimal_partition(engine: str = "array", **kw) -> PartitionPoint:
     ``TechNode`` objects outside the registry fall back to the scalar
     engine automatically.
     """
+    if objective not in OBJECTIVES:
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"have {OBJECTIVES}")
     agg = _registry_name(kw.get("agg_node", "7nm"))
     sen = _registry_name(kw.get("sensor_node", "7nm"))
     # Keep the engines interchangeable: the scalar sweep raises for an
@@ -209,5 +237,5 @@ def optimal_partition(engine: str = "array", **kw) -> PartitionPoint:
     if engine == "array" and agg is not None and sen is not None:
         from . import sweep as _sweep
         res = _sweep.evaluate_grid(**_sweep.scalar_axes(kw))
-        return evaluate_cut(res.argmin()["cut"], **kw)
-    return min(sweep_partitions(**kw), key=lambda p: p.avg_power)
+        return evaluate_cut(res.argmin(field=objective)["cut"], **kw)
+    return min(sweep_partitions(**kw), key=lambda p: getattr(p, objective))

@@ -10,7 +10,11 @@ The repo now has **two evaluation paths** over the same analytical model:
   of :mod:`repro.core.arrays` and evaluates an arbitrary cartesian grid
   over the paper's design knobs in a single ``jax.jit``-compiled,
   ``jax.vmap``-batched device call.  Use it for sweeps: dense sensitivity
-  heatmaps, Pareto fronts, partition × node × memory × rate grids.
+  heatmaps, partition × node × memory × rate grids, and as the substrate
+  for multi-objective analysis — every configuration evaluates the three
+  objective channels (``avg_power``, ``latency``, ``mipi_bytes_per_s``)
+  that :mod:`repro.core.pareto` extracts fronts over and
+  :mod:`repro.core.optimize` differentiates through.
 
 The two paths are kept numerically interchangeable (``tests/test_sweep.py``
 asserts ≤1e-6 relative parity across a sampled grid); the payload plan per
@@ -58,9 +62,13 @@ AXIS_NAMES = ("cut", "agg_node", "sensor_node", "weight_mem", "detnet_fps",
               "keynet_fps", "num_cameras", "mipi_energy_scale", "camera_fps")
 
 #: Output fields of the kernel (each becomes one grid-shaped array).
+#: ``avg_power`` + the seven power-breakdown groups, plus the three
+#: non-power objective channels: ``mipi_bytes_per_s`` (Eq. 5 link traffic),
+#: ``sensor_macs_per_s`` and ``latency`` (the generalized per-cut
+#: ``repro.core.latency.cut_latency`` model, lowered into the kernel).
 FIELDS = ("avg_power", "camera", "utsv", "mipi", "sensor_compute",
           "sensor_memory", "agg_compute", "agg_memory", "mipi_bytes_per_s",
-          "sensor_macs_per_s")
+          "sensor_macs_per_s", "latency")
 
 
 # ---------------------------------------------------------------------------
@@ -187,6 +195,29 @@ def _make_config_fn(M: A.ModelArrays):
         p_agg_compute = jnp.where(has_agg, p_comp_a, 0.0)
         p_agg_memory = jnp.where(has_agg, p_mem_a, 0.0)
 
+        # ---- end-to-end result latency (cut_latency, lowered: Eq. 6/9) ----
+        # DetNet work/payloads are amortized by the ROI-reuse ratio; the
+        # aggregator serializes the other cameras' suffix work (t_queue).
+        det_amort = jnp.minimum(1.0, det_fps / cam_fps)
+        t_det_sen = j(det.c_cycles_sensor)[cd] / j(M.f_clk)[sen_i] * det_amort
+        t_det_agg = ((j(det.c_cycles_agg)[n_det] - j(det.c_cycles_agg)[cd])
+                     / j(M.f_clk)[agg_i] * det_amort)
+        t_key_sen = j(key.c_cycles_sensor)[ck] / j(M.f_clk)[sen_i]
+        t_key_agg = ((j(key.c_cycles_agg)[n_key] - j(key.c_cycles_agg)[ck])
+                     / j(M.f_clk)[agg_i])
+        t_comm_cut = (j(M.pay_det_rate)[cut] * det_amort
+                      + j(M.pay_key_rate)[cut]) / A.MIPI_BW
+        latency = (A.T_SENSE + t_comm_cam + t_det_sen + t_det_agg
+                   + t_comm_cut + (ncam - 1.0) * (t_det_agg + t_key_agg)
+                   + t_key_sen + t_key_agg)
+
+        # Invalid (node, weight-mem) corners must poison every objective
+        # channel — a Pareto front over non-power objectives would otherwise
+        # happily select physically impossible configurations.  The power
+        # fields inherit NaN from the wm_* tables; the rest get it here.
+        invalid = jnp.where(has_sensor,
+                            j(M.wm_e_read)[sen_i, wm_i] * 0.0, 0.0)
+
         total = (p_camera + p_utsv + p_mipi + p_sensor_compute
                  + p_sensor_memory + p_agg_compute + p_agg_memory)
         return {
@@ -198,11 +229,28 @@ def _make_config_fn(M: A.ModelArrays):
             "sensor_memory": p_sensor_memory,
             "agg_compute": p_agg_compute,
             "agg_memory": p_agg_memory,
-            "mipi_bytes_per_s": mipi_bps,
-            "sensor_macs_per_s": jnp.where(has_sensor, macs_s * ncam, 0.0),
+            "mipi_bytes_per_s": mipi_bps + invalid,
+            "sensor_macs_per_s": (jnp.where(has_sensor, macs_s * ncam, 0.0)
+                                  + invalid),
+            "latency": latency + invalid,
         }
 
     return config_fn
+
+
+def config_kernel(model: A.ModelArrays | None = None):
+    """The unbatched, differentiable Eq. 1-11 kernel for one model.
+
+    Returns the raw per-configuration function ``f(cut, agg_i, sen_i, wm_i,
+    detnet_fps, keynet_fps, num_cameras, mipi_energy_scale, camera_fps) ->
+    {field: scalar}`` that :func:`evaluate_grid` vmaps.  The integer
+    arguments index the model's tables (``ModelArrays.node_index`` /
+    ``arrays.WEIGHT_MEM_KINDS``); every float argument is differentiable —
+    :mod:`repro.core.optimize` drives ``jax.grad`` through it for the
+    continuous-knob search.
+    """
+    M = model if model is not None else A.model_arrays()
+    return _make_config_fn(M)
 
 
 @functools.lru_cache(maxsize=16)
@@ -238,6 +286,16 @@ class SweepResult:
     @property
     def avg_power(self) -> np.ndarray:
         return self.data["avg_power"]
+
+    @property
+    def latency(self) -> np.ndarray:
+        """End-to-end result latency (s) — ``latency.cut_latency`` lowered."""
+        return self.data["latency"]
+
+    @property
+    def mipi_bytes_per_s(self) -> np.ndarray:
+        """MIPI link traffic (B/s) across all cameras (Eq. 5 payloads)."""
+        return self.data["mipi_bytes_per_s"]
 
     def config_at(self, flat_index: int) -> dict:
         """Axis values of one flat grid index."""

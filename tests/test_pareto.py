@@ -1,0 +1,208 @@
+"""Pareto-front extraction: dominance correctness, NaN-corner masking,
+knee point, and hypervolume — all against brute-force oracles."""
+
+import numpy as np
+import pytest
+
+from repro.core import pareto, sweep
+from repro.core.handtracking import build_detnet, build_keynet
+
+N_DET = len(build_detnet().layers)
+N_ALL = N_DET + len(build_keynet().layers)
+
+
+def brute_force_mask(points: np.ndarray) -> np.ndarray:
+    """O(n^2) Python-loop oracle for the non-dominated set (minimize)."""
+    pts = np.asarray(points, float)
+    n = pts.shape[0]
+    mask = np.zeros(n, bool)
+    for i in range(n):
+        if not np.isfinite(pts[i]).all():
+            continue
+        dominated = False
+        for k in range(n):
+            if k == i or not np.isfinite(pts[k]).all():
+                continue
+            if (pts[k] <= pts[i]).all() and (pts[k] < pts[i]).any():
+                dominated = True
+                break
+        mask[i] = not dominated
+    return mask
+
+
+class TestDominance:
+    def test_hand_built_front(self):
+        pts = np.array([
+            [1.0, 5.0],    # front
+            [2.0, 3.0],    # front
+            [4.0, 1.0],    # front
+            [2.0, 4.0],    # dominated by (2, 3)
+            [5.0, 5.0],    # dominated by everything
+            [4.0, 1.0],    # duplicate of a front point: kept (ties survive)
+        ])
+        np.testing.assert_array_equal(
+            pareto.non_dominated_mask(pts),
+            [True, True, True, False, False, True])
+
+    def test_single_objective_is_argmin(self):
+        pts = np.array([[3.0], [1.0], [2.0], [1.0]])
+        np.testing.assert_array_equal(pareto.non_dominated_mask(pts),
+                                      [False, True, False, True])
+
+    def test_matches_brute_force_random(self):
+        rng = np.random.default_rng(7)
+        for d in (2, 3, 4):
+            # Coarse integer grid => plenty of ties and duplicates.
+            pts = rng.integers(0, 6, size=(600, d)).astype(float)
+            np.testing.assert_array_equal(pareto.non_dominated_mask(pts),
+                                          brute_force_mask(pts))
+
+    def test_chunking_boundary(self):
+        rng = np.random.default_rng(1)
+        pts = rng.normal(size=(pareto._CHUNK + 3, 3))
+        np.testing.assert_array_equal(pareto.non_dominated_mask(pts),
+                                      brute_force_mask(pts))
+
+    def test_nan_rows_never_on_front(self):
+        pts = np.array([[np.nan, 0.0], [0.0, np.inf], [1.0, 1.0]])
+        np.testing.assert_array_equal(pareto.non_dominated_mask(pts),
+                                      [False, False, True])
+        assert not pareto.non_dominated_mask(
+            np.full((4, 2), np.nan)).any()
+
+    def test_rejects_bad_shape(self):
+        with pytest.raises(ValueError):
+            pareto.non_dominated_mask(np.zeros(5))
+
+
+class TestFrontOverGrid:
+    @pytest.fixture(scope="class")
+    def grid(self):
+        # Mixes valid and invalid (7nm + MRAM, cut > 0) corners.
+        return sweep.evaluate_grid(sensor_nodes=("7nm", "16nm"),
+                                   weight_mems=("sram", "mram"),
+                                   detnet_fps=(5.0, 10.0, 30.0))
+
+    def test_front_is_exact_nondominated_set(self, grid):
+        front = pareto.pareto_front(grid)
+        V = np.stack([grid.data[o].ravel()
+                      for o in pareto.DEFAULT_OBJECTIVES], axis=1)
+        expect = np.flatnonzero(brute_force_mask(V))
+        assert sorted(front.indices.tolist()) == sorted(expect.tolist())
+        assert 0 < front.size < grid.n_configs
+
+    def test_nan_corners_masked(self, grid):
+        assert np.isnan(grid.avg_power).any()          # fixture has them
+        assert np.isnan(grid.latency).any()            # poisoned channels
+        assert np.isnan(grid.mipi_bytes_per_s).any()
+        front = pareto.pareto_front(grid)
+        assert np.isfinite(front.values).all()
+        for cfg in front.configs():
+            assert not (cfg["weight_mem"] == "mram"
+                        and cfg["sensor_node"] == "7nm" and cfg["cut"] > 0)
+
+    def test_front_sorted_and_configs_roundtrip(self, grid):
+        front = pareto.pareto_front(grid)
+        assert (np.diff(front.values[:, 0]) >= 0).all()
+        cfgs = front.configs()
+        assert len(cfgs) == front.size
+        # config_at + channel lookup reproduces the stored values
+        for cfg, flat, vals in zip(cfgs, front.indices, front.values):
+            assert cfg["avg_power"] == pytest.approx(
+                float(grid.avg_power.ravel()[flat]))
+            assert vals[0] == pytest.approx(cfg["avg_power"])
+
+    def test_front_members_are_mutually_nondominated(self, grid):
+        front = pareto.pareto_front(grid)
+        assert pareto.non_dominated_mask(front.values).all()
+
+    def test_maximize_flips_orientation(self, grid):
+        f = pareto.pareto_front(grid,
+                                objectives=("avg_power",
+                                            "sensor_macs_per_s"),
+                                maximize=("sensor_macs_per_s",))
+        V = np.stack([grid.data["avg_power"].ravel(),
+                      -grid.data["sensor_macs_per_s"].ravel()], axis=1)
+        expect = np.flatnonzero(brute_force_mask(V))
+        assert sorted(f.indices.tolist()) == sorted(expect.tolist())
+
+    def test_single_objective_front_is_argmin(self, grid):
+        f = pareto.pareto_front(grid, objectives=("avg_power",))
+        assert float(f.values[0, 0]) == pytest.approx(
+            float(np.nanmin(grid.avg_power)))
+
+    def test_rejects_bad_arguments(self, grid):
+        with pytest.raises(ValueError, match="unknown objective"):
+            pareto.pareto_front(grid, objectives=("avg_power", "nope"))
+        with pytest.raises(ValueError, match="maximize"):
+            pareto.pareto_front(grid, objectives=("avg_power",),
+                                maximize=("latency",))
+        with pytest.raises(ValueError):
+            pareto.pareto_front(grid, objectives=())
+
+
+class TestKnee:
+    def test_obvious_elbow(self):
+        # Extremes win one axis each; the middle point is the compromise.
+        pts = np.array([[0.0, 1.0], [0.15, 0.2], [1.0, 0.0]])
+        assert pareto.knee_point(pts) == 1
+
+    def test_scale_invariant(self):
+        pts = np.array([[0.0, 1.0], [0.15, 0.2], [1.0, 0.0]])
+        scaled = pts * np.array([1e-3, 1e9])   # wildly different units
+        assert pareto.knee_point(scaled) == pareto.knee_point(pts)
+
+    def test_front_knee_returns_config(self):
+        grid = sweep.evaluate_grid(sensor_nodes=("16nm",))
+        knee = pareto.pareto_front(grid).knee()
+        assert set(pareto.DEFAULT_OBJECTIVES) <= set(knee)
+        assert 0 <= knee["cut"] <= N_ALL
+
+    def test_rejects_empty(self):
+        with pytest.raises(ValueError):
+            pareto.knee_point(np.zeros((0, 2)))
+
+
+class TestHypervolume:
+    def test_single_point_is_box_volume(self):
+        assert pareto.hypervolume([[1.0, 1.0, 1.0]],
+                                  [2.0, 3.0, 4.0]) == pytest.approx(6.0)
+
+    def test_2d_staircase_union(self):
+        pts = [[1.0, 3.0], [2.0, 2.0], [3.0, 1.0]]
+        # union of the three boxes against ref (4, 4): 1 + 2 + 3
+        assert pareto.hypervolume(pts, [4.0, 4.0]) == pytest.approx(6.0)
+
+    def test_3d_matches_inclusion_exclusion(self):
+        a, b = [1.0, 2.0, 3.0], [2.0, 1.0, 2.0]
+        ref = [4.0, 4.0, 4.0]
+        va = (4 - 1) * (4 - 2) * (4 - 3)
+        vb = (4 - 2) * (4 - 1) * (4 - 2)
+        vab = (4 - 2) * (4 - 2) * (4 - 3)   # componentwise max
+        assert pareto.hypervolume([a, b], ref) == pytest.approx(
+            va + vb - vab)
+
+    def test_dominated_and_out_of_ref_points_add_nothing(self):
+        base = pareto.hypervolume([[1.0, 1.0]], [3.0, 3.0])
+        more = pareto.hypervolume([[1.0, 1.0], [2.0, 2.0], [5.0, 0.5]],
+                                  [3.0, 3.0])
+        assert more == pytest.approx(base)
+        assert pareto.hypervolume([[4.0, 4.0]], [3.0, 3.0]) == 0.0
+
+    def test_adding_a_front_point_grows_hv(self):
+        ref = [4.0, 4.0]
+        assert (pareto.hypervolume([[1.0, 3.0], [3.0, 1.0], [1.8, 1.8]],
+                                   ref)
+                > pareto.hypervolume([[1.0, 3.0], [3.0, 1.0]], ref))
+
+    def test_front_default_ref_positive_and_ref_override(self):
+        grid = sweep.evaluate_grid(sensor_nodes=("7nm", "16nm"))
+        front = pareto.pareto_front(grid)
+        assert front.hypervolume() > 0
+        ref = {o: float(np.nanmax(grid.data[o]) * 2)
+               for o in front.objectives}
+        assert front.hypervolume(ref) > front.hypervolume()
+
+    def test_rejects_mismatched_ref(self):
+        with pytest.raises(ValueError):
+            pareto.hypervolume([[1.0, 2.0]], [3.0, 3.0, 3.0])

@@ -9,7 +9,7 @@ execution strategies.
 import numpy as np
 import pytest
 
-from repro.core import partition, sweep, system
+from repro.core import latency, partition, sweep, system
 from repro.core.arrays import model_arrays
 from repro.core.handtracking import build_detnet, build_keynet
 
@@ -191,6 +191,68 @@ class TestOptimizer:
                                    weight_mems=("mram",))
         power = grid.avg_power.ravel()
         assert np.isfinite(power[0]) and np.isnan(power[1])
+
+
+class TestLatencyChannel:
+    """The kernel's ``latency`` channel is ``latency.cut_latency`` lowered
+    onto the cycle prefix-sums — scalar and vector must agree ≤1e-6."""
+
+    def test_sampled_grid_parity_with_cut_latency(self):
+        grid = sweep.evaluate_grid(
+            cuts=CUTS, agg_nodes=NODES, sensor_nodes=NODES,
+            detnet_fps=DET_FPS, keynet_fps=KEY_FPS, num_cameras=NCAMS,
+            camera_fps=CAM_FPS)
+        lat = grid.latency
+        for idx in np.ndindex(grid.shape):
+            cfg = {name: vals[i]
+                   for (name, vals), i in zip(grid.axes.items(), idx)}
+            scalar = latency.cut_latency(
+                cfg["cut"], agg_node=cfg["agg_node"],
+                sensor_node=cfg["sensor_node"],
+                num_cameras=int(cfg["num_cameras"]),
+                camera_fps=cfg["camera_fps"],
+                detnet_fps=cfg["detnet_fps"],
+                keynet_fps=cfg["keynet_fps"]).total
+            assert_rel(scalar, float(lat[idx]), f"latency @ {cfg}")
+
+    def test_partition_point_latency_matches_grid(self):
+        for cut in (0, N_DET, N_ALL):
+            pt = partition.evaluate_cut(cut, sensor_node="16nm",
+                                        num_cameras=2)
+            vec = sweep.evaluate_one(cut, sensor_node="16nm",
+                                     num_cameras=2)
+            assert_rel(pt.latency, vec["latency"], f"latency @ cut {cut}")
+
+    def test_cut0_reduces_to_centralized_helper(self):
+        """At the defaults (30/10 fps = detnet_every 3), the generalized
+        model reproduces the topology-specific helper exactly."""
+        assert latency.cut_latency(0, agg_node="7nm").total == \
+            pytest.approx(
+                latency.centralized_latency("7nm", detnet_every=3).total,
+                rel=1e-12)
+
+    def test_paper_cut_close_to_distributed_helper(self):
+        """The generalized model adds only the tiny amortized DetNet-output
+        payload the distributed helper ignores."""
+        gen = latency.cut_latency(N_DET, sensor_node="16nm").total
+        ref = latency.distributed_latency(sensor_node="16nm",
+                                          detnet_every=3).total
+        assert gen == pytest.approx(ref, rel=1e-4)
+        assert gen >= ref   # the extra payload can only add time
+
+    def test_distributed_beats_centralized_on_latency(self):
+        """Paper §1: the DOSC topology claims latency benefits too."""
+        lat = sweep.evaluate_grid().latency.ravel()
+        assert lat[N_DET] < lat[0]
+
+    def test_invalid_corners_poison_all_objective_channels(self):
+        grid = sweep.evaluate_grid(cuts=(0, 1), sensor_nodes=("7nm",),
+                                   weight_mems=("mram",))
+        for field in ("avg_power", "latency", "mipi_bytes_per_s",
+                      "sensor_macs_per_s"):
+            col = grid.data[field].ravel()
+            assert np.isfinite(col[0]), field      # centralized: valid
+            assert np.isnan(col[1]), field         # cut>0: poisoned
 
 
 class TestEngineMechanics:

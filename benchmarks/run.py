@@ -1,6 +1,6 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only <name>]
+    PYTHONPATH=src python -m benchmarks.run [--only <name>] [--smoke]
 
 Emits ``name,value,derived`` CSV rows:
   * power_tables  — Fig. 5a / Fig. 5b / Table 2 reproduction
@@ -12,6 +12,13 @@ Emits ``name,value,derived`` CSV rows:
                     (also snapshots BENCH_sweep.json for the perf trail)
   * pareto_bench  — Pareto-front extraction + gradient knob-search
                     throughput (snapshots BENCH_pareto.json)
+  * stream_bench  — streaming vs dense sweep executor: throughput + peak
+                    RSS at 10^5..10^7 configs (snapshots BENCH_stream.json)
+
+``--smoke`` runs the fast CI gate instead: tiny grids, asserting exact
+streaming/dense parity (argmin, top-k, Pareto front, counts) and stacked-
+workload parity end-to-end — perf-path regressions fail CI, not just
+benchmark runs.
 """
 
 from __future__ import annotations
@@ -39,13 +46,72 @@ def dosc_advisor_rows():
 
 
 SUITES = ["power_tables", "rbe_roofline", "tpu_roofline", "kernel_bench",
-          "dosc_advisor", "sweep_bench", "pareto_bench"]
+          "dosc_advisor", "sweep_bench", "pareto_bench", "stream_bench"]
+
+
+def smoke_rows():
+    """Fast streaming/dense parity gate for CI (tiny grids, asserts)."""
+    import numpy as np
+
+    from repro.core import pareto, partition, stream, sweep
+    from repro.core.handtracking import build_detnet, build_keynet
+
+    grid_kw = dict(sensor_nodes=("7nm", "16nm"),
+                   weight_mems=("sram", "mram"),
+                   detnet_fps=(5.0, 30.0))     # 34 cuts x 2x2x2 = 272
+    dense = sweep.evaluate_grid(**grid_kw)
+    res = stream.stream_grid(**grid_kw, chunk_size=97, track="all",
+                             hist_bins=8)
+    assert all(res.argmin(f) == dense.argmin(f) for f in sweep.FIELDS), \
+        "streaming argmin drifted from dense"
+    assert all(res.top_k(o) == dense.top_k(o, 4)
+               for o in res.objectives), "streaming top-k drifted"
+    df, sf = pareto.pareto_front(dense), res.pareto_front()
+    assert np.array_equal(df.indices, sf.indices) and \
+        np.array_equal(df.values, sf.values), "streaming front drifted"
+    assert all(res.finite_counts[f] ==
+               int(np.isfinite(dense.data[f]).sum())
+               for f in sweep.FIELDS), "validity counts drifted"
+
+    # Stacked-workload axis: every model row reproduces its own grid.
+    det, key = build_detnet(), build_keynet()
+    pairs = ((det, key), (det.scaled(0.5), key))
+    stacked = sweep.evaluate_grid(models=pairs, detnet_fps=(10.0, 30.0))
+    for mi, (d_wl, k_wl) in enumerate(pairs):
+        single = sweep.evaluate_grid(detnet=d_wl, keynet=k_wl,
+                                     detnet_fps=(10.0, 30.0))
+        a, b = stacked.avg_power[mi], single.avg_power
+        ok = np.isfinite(a) & np.isfinite(b)
+        rel = np.abs(a[ok] - b[ok]) / np.maximum(np.abs(b[ok]), 1e-30)
+        assert rel.max() <= 1e-6, f"stacked model {mi} drifted: {rel.max()}"
+
+    # optimal_partition routes sequence knobs through the grid engines.
+    best = partition.optimal_partition(sensor_node=("7nm", "16nm"))
+    assert best.avg_power <= partition.optimal_partition().avg_power * (
+        1 + 1e-12)
+
+    return [
+        ("smoke.stream_dense_parity", 1.0,
+         f"argmin/top-k/front/counts exact on {dense.n_configs} configs"),
+        ("smoke.stacked_parity", 1.0,
+         f"{len(pairs)} stacked models <=1e-6 vs single grids"),
+        ("smoke.front_size", float(sf.size), "reference-front members"),
+    ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=SUITES)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast streaming/dense parity gate (CI)")
     args = ap.parse_args()
+    if args.smoke:
+        print("name,value,derived")
+        t0 = time.time()
+        for name, val, derived in smoke_rows():
+            print(f"{name},{val:.6g},{derived}")
+        print(f"smoke.wall_s,{time.time()-t0:.1f},streaming parity gate")
+        return
     suites = [args.only] if args.only else SUITES
     print("name,value,derived")
     t0 = time.time()

@@ -1,0 +1,208 @@
+"""Streaming vs dense design-space sweeps: throughput and peak memory.
+
+    PYTHONPATH=src python -m benchmarks.stream_bench
+
+Measures the streaming executor (`repro.core.stream.stream_grid`) against
+the dense grid engine (`repro.core.sweep.evaluate_grid`) at 10^5 / 10^6 /
+10^7 configurations.  Each measurement runs in its own subprocess so peak
+RSS is attributable per (mode, size) — the headline result is that dense
+memory grows O(grid) (and becomes unrunnable at 10^7 on small hosts)
+while streaming stays flat at O(chunk + front).  Exact argmin/top-k/
+Pareto-front parity on the 10,880-config reference grid is asserted and
+recorded.  Emits ``name,value,derived`` rows and snapshots
+``BENCH_stream.json`` at the repo root.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import resource
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_stream.json"
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+
+#: The PR-1 reference grid (10,880 configs) — the exact-parity anchor,
+#: shared with the dense-engine benchmark so the two suites can never
+#: drift onto different grids.
+from benchmarks.sweep_bench import GRID as REFERENCE_GRID  # noqa: E402
+
+
+def _grid_for(n: int) -> dict:
+    """Reference grid widened along the rate axes to ~n configurations."""
+    g = dict(REFERENCE_GRID)
+    if n >= 10_000_000:
+        g["detnet_fps"] = tuple(np.linspace(5.0, 30.0, 50))
+        g["camera_fps"] = tuple(np.linspace(20.0, 60.0, 92))   # 10,009,600
+    elif n >= 1_000_000:
+        g["camera_fps"] = tuple(np.linspace(20.0, 60.0, 92))   # 1,000,960
+    elif n >= 100_000:
+        g["camera_fps"] = tuple(np.linspace(20.0, 60.0, 9))    # 97,920
+    return g
+
+
+def _rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _mem_available_mb() -> float:
+    try:
+        with open("/proc/meminfo") as fh:
+            for line in fh:
+                if line.startswith("MemAvailable"):
+                    return float(line.split()[1]) / 1024.0
+    except OSError:
+        pass
+    return float("inf")
+
+
+def _worker(mode: str, n: int) -> dict:
+    from repro.core import stream, sweep
+
+    grid = _grid_for(n)
+    if mode == "dense":
+        # 11 channels + 10 meshgrid coordinate arrays, all float64.
+        need_mb = n * 8 * 21 / 2**20 * 1.5
+        if need_mb > _mem_available_mb():
+            return {"mode": mode, "n": n, "skipped":
+                    f"needs ~{need_mb:.0f} MB dense grid memory, "
+                    f"{_mem_available_mb():.0f} MB available"}
+        res = sweep.evaluate_grid(**grid)          # compile + first run
+        best = None
+        for _ in range(3):                         # post-compile, best-of
+            t0 = time.perf_counter()
+            res = sweep.evaluate_grid(**grid)
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        return {"mode": mode, "n": res.n_configs,
+                "configs_per_s": round(res.n_configs / best, 1),
+                "peak_rss_mb": round(_rss_mb(), 1),
+                "best_power_mw": round(res.argmin()["avg_power"] * 1e3, 4)}
+    res = stream.stream_grid(**grid)               # compile + first run
+    best_stats = res.stats
+    for _ in range(2):                             # warm step cache
+        t0 = time.perf_counter()
+        res = stream.stream_grid(**grid)
+        if res.stats["total_s"] < best_stats["total_s"]:
+            best_stats = res.stats
+    return {"mode": mode, "n": res.n_configs,
+            "configs_per_s": round(res.n_configs
+                                   / best_stats["total_s"], 1),
+            "steady_configs_per_s":
+                round(best_stats["steady_configs_per_s"], 1),
+            "peak_rss_mb": round(_rss_mb(), 1),
+            "front_size": int(res.front_indices.size),
+            "best_power_mw": round(res.argmin()["avg_power"] * 1e3, 4)}
+
+
+def _spawn(mode: str, n: int) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(SRC)] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep)
+                      if p])
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.stream_bench", "--worker",
+         mode, str(n)],
+        capture_output=True, text=True, timeout=1800,
+        cwd=str(SRC.parent), env=env)
+    if out.returncode != 0:
+        return {"mode": mode, "n": n,
+                "failed": out.stderr.strip().splitlines()[-1]
+                if out.stderr.strip() else "worker died"}
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def _parity() -> dict:
+    """Exact stream/dense agreement on the 10,880 reference grid."""
+    from repro.core import pareto, stream, sweep
+
+    dense = sweep.evaluate_grid(**REFERENCE_GRID)
+    res = stream.stream_grid(**REFERENCE_GRID, chunk_size=4096,
+                             track="all")
+    df, sf = pareto.pareto_front(dense), res.pareto_front()
+    return {
+        "grid_configs": dense.n_configs,
+        "argmin": all(res.argmin(f) == dense.argmin(f)
+                      for f in sweep.FIELDS),
+        "top_k": all(res.top_k(o) == dense.top_k(o, 4)
+                     for o in res.objectives),
+        "pareto_front": bool(np.array_equal(df.indices, sf.indices)
+                             and np.array_equal(df.values, sf.values)),
+    }
+
+
+def rows():
+    parity = _parity()
+    assert all(parity[k] for k in ("argmin", "top_k", "pareto_front")), \
+        f"stream/dense parity violated: {parity}"
+
+    points = []
+    out = []
+    for n in (100_000, 1_000_000, 10_000_000):
+        # Adjacent (stream, dense) runs so shared-host noise hits both.
+        s = _spawn("stream", n)
+        d = _spawn("dense", n)
+        points.append({"n": n, "stream": s, "dense": d})
+        tag = f"{n:.0e}".replace("+0", "").replace("+", "")
+        if "configs_per_s" in s:
+            out.append((f"stream.{tag}.configs_per_s",
+                        s["configs_per_s"],
+                        f"steady {s.get('steady_configs_per_s', 0):.3g}/s "
+                        f"rss {s['peak_rss_mb']:.0f}MB "
+                        f"front {s.get('front_size', 0)}"))
+        else:
+            out.append((f"stream.{tag}.FAILED", 0.0, str(s)))
+        if "configs_per_s" in d:
+            out.append((f"dense.{tag}.configs_per_s", d["configs_per_s"],
+                        f"rss {d['peak_rss_mb']:.0f}MB"))
+        else:
+            out.append((f"dense.{tag}.skipped", 0.0,
+                        d.get("skipped", d.get("failed", "?"))))
+
+    sa = next((p["stream"] for p in points
+               if p["n"] == 1_000_000 and "configs_per_s" in p["stream"]),
+              None)
+    da = next((p["dense"] for p in points
+               if p["n"] == 1_000_000 and "configs_per_s" in p["dense"]),
+              None)
+    s_small = points[0]["stream"].get("peak_rss_mb")
+    s_big = points[-1]["stream"].get("peak_rss_mb")
+    snapshot = {
+        "parity_10880": parity,
+        "points": points,
+        "stream_rss_growth_1e5_to_1e7":
+            (round(s_big / s_small, 2) if s_small and s_big else None),
+        "stream_vs_dense_at_1e6":
+            (round(sa["configs_per_s"] / da["configs_per_s"], 2)
+             if sa and da else None),
+        "pr1_dense_baseline_configs_per_s": 1_662_391.5,
+    }
+    BENCH_JSON.write_text(json.dumps(snapshot, indent=2) + "\n")
+
+    out.append(("stream.parity_10880",
+                1.0, "argmin/top-k/front exactly equal dense"))
+    if s_small and s_big:
+        out.append(("stream.rss_growth_1e5_to_1e7", s_big / s_small,
+                    "bounded host memory: peak RSS ratio across 100x grid"))
+    return out
+
+
+def main() -> None:
+    if len(sys.argv) >= 4 and sys.argv[1] == "--worker":
+        print(json.dumps(_worker(sys.argv[2], int(sys.argv[3]))))
+        return
+    print("name,value,derived")
+    for name, val, derived in rows():
+        print(f"{name},{val:.6g},{derived}")
+    print(f"(snapshot written to {BENCH_JSON})")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,11 @@ section below is one batched device call instead of a scalar Python loop:
   axis now — no more monkey-patching the link constants),
 * the Pareto front over (power, latency, MIPI traffic) — the paper's
   three headline claims as one multi-objective picture,
+* a streaming ~1M-config sweep (`stream.stream_grid`): the grid is
+  never materialized — chunks are decoded/evaluated on device and
+  folded into running argmin/top-k/front reductions,
+* architecture x partition co-design over a batched workload axis
+  (`models=`: DetNet/KeyNet variants swept inside one compiled kernel),
 * gradient knob search: projected Adam driving jax.grad through the
   Eq. 1-11 kernel, cross-checked against a dense grid.
 
@@ -22,7 +27,7 @@ report for the single winning configuration at the end.
 
 import numpy as np
 
-from repro.core import optimize, pareto, partition, sweep
+from repro.core import optimize, pareto, partition, stream, sweep
 from repro.core.constants import MIPI
 from repro.core.handtracking import build_detnet, build_keynet
 
@@ -113,6 +118,49 @@ def knob_search():
           f"{res.fields['latency']*1e3:.3f} ms")
 
 
+def streaming_sweep():
+    print("\n== streaming sweep: ~1M configs, O(chunk) host memory ==")
+    # The same knobs at production resolution would not fit densely —
+    # the streaming executor never materializes the grid.
+    res = stream.stream_grid(
+        sensor_nodes=("7nm", "16nm"), weight_mems=("sram", "mram"),
+        detnet_fps=tuple(np.linspace(5.0, 30.0, 26)),
+        keynet_fps=(15.0, 30.0), num_cameras=(2, 4),
+        mipi_energy_scale=(1.0, 2.0),
+        camera_fps=tuple(np.linspace(20.0, 60.0, 36)))
+    best = res.argmin()
+    print(f"  {res.n_configs:,} configs in {res.stats['total_s']:.1f}s "
+          f"({res.stats['steady_configs_per_s']/1e6:.2f}M cfg/s steady, "
+          f"{int(res.stats['n_chunks'])} chunks x {res.chunk_size:,})")
+    print(f"  best: cut {best['cut']} @{best['sensor_node']}"
+          f"/{best['weight_mem']} detfps={best['detnet_fps']:g} "
+          f"camfps={best['camera_fps']:g} "
+          f"-> {best['avg_power']*1e3:.3f} mW")
+    print(f"  top-3 latency: " + ", ".join(
+        f"cut {c['cut']}@{c['sensor_node']},cam{c['camera_fps']:g},"
+        f"det{c['detnet_fps']:g}: {c['latency']*1e3:.2f}ms"
+        for c in res.top_k("latency")[:3]))
+    print(f"  exact Pareto front: {res.front_indices.size} members "
+          f"(merged incrementally, grid never materialized)")
+
+
+def architecture_search():
+    print("\n== batched workload axis: architecture x partition ==")
+    det, key = build_detnet(), build_keynet()
+    pairs = ((det, key), (det.scaled(0.5), key), (det, key.scaled(0.5)))
+    res = sweep.evaluate_grid(models=pairs, sensor_nodes=("7nm", "16nm"),
+                              detnet_fps=(10.0, 30.0))
+    print(f"  {'model':>20s} {'best cut':>8s} {'mW':>8s}")
+    for mi, name in enumerate(res.axes["model"]):
+        power = res.avg_power[mi]
+        flat = int(np.nanargmin(power))
+        cut = np.unravel_index(flat, power.shape)[0]
+        print(f"  {name:>20s} {cut:8d} {np.nanmin(power)*1e3:8.3f}")
+    best = res.argmin()
+    print(f"  winner: {best['model']} at cut {best['cut']} "
+          f"({best['avg_power']*1e3:.3f} mW)")
+
+
 def report_winner():
     print("\n== full module report of the optimal configuration ==")
     best = partition.optimal_partition()      # array engine + scalar report
@@ -129,5 +177,7 @@ if __name__ == "__main__":
     sweep_memory_tech()
     sweep_mipi_energy()
     pareto_study()
+    streaming_sweep()
+    architecture_search()
     knob_search()
     report_winner()

@@ -264,6 +264,185 @@ def model_arrays(detnet: NNWorkload | None = None,
     )
 
 
+# ---------------------------------------------------------------------------
+# Stacked (multi-model) tables — the batched workload axis
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class StackedWorkloadArrays:
+    """Ragged per-model layer tables padded into one dense leading axis.
+
+    ``n_layers[m]`` is model ``m``'s true layer count; every 2-D table has
+    shape ``(n_models, max_layers + 1)`` with the tail of shorter rows
+    edge-padded (prefix sums repeat their final total, ``peak_suffix``
+    repeats its trailing 0).  The kernel clips its gather indices to the
+    per-model ``n_layers``, so padded entries are only ever read through
+    the always-poisoned beyond-``n_cuts`` cut indices — see the padded-cut
+    masking note in ``docs/equations.md``.
+    """
+
+    names: tuple[str, ...]
+    n_layers: np.ndarray          # (M,) int32 — true (unpadded) layer counts
+    input_bytes: np.ndarray       # (M,)
+    output_bytes: np.ndarray      # (M,)
+    c_macs: np.ndarray            # (M, Lmax+1) — and the rest of the
+    c_weight_bytes: np.ndarray    # WorkloadArrays prefix-sum tables, padded
+    c_weight_stream: np.ndarray
+    c_act_traffic: np.ndarray
+    c_cycles_sensor: np.ndarray
+    c_cycles_agg: np.ndarray
+    peak_prefix: np.ndarray
+    peak_suffix: np.ndarray
+
+
+_WL_TABLE_FIELDS = ("c_macs", "c_weight_bytes", "c_weight_stream",
+                    "c_act_traffic", "c_cycles_sensor", "c_cycles_agg",
+                    "peak_prefix", "peak_suffix")
+
+
+def _stack_workloads(wls: tuple[WorkloadArrays, ...]) -> StackedWorkloadArrays:
+    width = max(w.n_layers for w in wls) + 1
+    tables = {}
+    for f in _WL_TABLE_FIELDS:
+        rows = []
+        for w in wls:
+            a = getattr(w, f)
+            # Edge padding: prefix sums repeat their total, peak_suffix its
+            # trailing 0 — any accidental read of a padded slot is a no-op.
+            rows.append(np.pad(a, (0, width - a.size), mode="edge"))
+        tables[f] = np.asarray(rows, np.float64)
+    return StackedWorkloadArrays(
+        names=tuple(w.name for w in wls),
+        n_layers=np.asarray([w.n_layers for w in wls], np.int32),
+        input_bytes=np.asarray([w.input_bytes for w in wls], np.float64),
+        output_bytes=np.asarray([w.output_bytes for w in wls], np.float64),
+        **tables,
+    )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class StackedModelArrays:
+    """A batch of :class:`ModelArrays` as one extra leading ``model`` axis.
+
+    The technology tables are shared (every model prices against the same
+    ``TECH_NODES`` registry); everything workload-derived — the DetNet /
+    KeyNet prefix-sum tables and the per-cut MIPI payload tables — gains a
+    leading axis of size ``n_models``, padded to the widest model.
+    ``n_cuts[m]`` is the per-model *valid-cut* bound: grid cut indices at
+    or beyond it evaluate to NaN for model ``m`` (the padded-cut mask), so
+    one compiled kernel can sweep architectures with ragged layer counts.
+    """
+
+    model_names: tuple[str, ...]
+    det: StackedWorkloadArrays
+    key: StackedWorkloadArrays
+    n_cuts: np.ndarray            # (M,) int32 — per-model valid-cut counts
+    node_names: tuple[str, ...]
+
+    # Shared technology tables (same shapes/meaning as ModelArrays).
+    e_mac: np.ndarray
+    f_clk: np.ndarray
+    sram_e_read: np.ndarray
+    sram_e_write: np.ndarray
+    sram_leak_on: np.ndarray
+    sram_leak_ret: np.ndarray
+    wm_e_read: np.ndarray
+    wm_leak_on: np.ndarray
+    wm_leak_ret: np.ndarray
+
+    # Per-model, per-cut MIPI payload tables, shape (M, n_cuts_max),
+    # zero-padded beyond each model's n_cuts (poisoned before use).
+    pay_cam_rate: np.ndarray
+    pay_det_rate: np.ndarray
+    pay_key_rate: np.ndarray
+    pay_max: np.ndarray
+
+    @property
+    def n_models(self) -> int:
+        return len(self.model_names)
+
+    @property
+    def n_cuts_max(self) -> int:
+        return int(self.n_cuts.max())
+
+    def node_index(self, node: str | TechNode) -> int:
+        name = node if isinstance(node, str) else node.name
+        try:
+            return self.node_names.index(name)
+        except ValueError:
+            raise KeyError(f"unknown tech node {name!r}; "
+                           f"have {self.node_names}") from None
+
+
+@functools.lru_cache(maxsize=16)
+def stack_model_arrays(models: tuple) -> StackedModelArrays:
+    """Stack already-lowered :class:`ModelArrays` along a new model axis."""
+    if not models:
+        raise ValueError("need at least one model to stack")
+    first = models[0]
+    for m in models[1:]:
+        if m.node_names != first.node_names:
+            raise ValueError("stacked models must share the tech-node "
+                             "registry")
+    names, seen = [], {}
+    for m in models:
+        base = f"{m.det.name}+{m.key.name}"
+        seen[base] = seen.get(base, 0) + 1
+        names.append(base if seen[base] == 1 else f"{base}#{seen[base]}")
+
+    n_cuts = np.asarray([m.n_cuts for m in models], np.int32)
+    width = int(n_cuts.max())
+
+    def pay(field):
+        return np.asarray([np.pad(getattr(m, field),
+                                  (0, width - getattr(m, field).size))
+                           for m in models], np.float64)
+
+    return StackedModelArrays(
+        model_names=tuple(names),
+        det=_stack_workloads(tuple(m.det for m in models)),
+        key=_stack_workloads(tuple(m.key for m in models)),
+        n_cuts=n_cuts,
+        node_names=first.node_names,
+        e_mac=first.e_mac, f_clk=first.f_clk,
+        sram_e_read=first.sram_e_read, sram_e_write=first.sram_e_write,
+        sram_leak_on=first.sram_leak_on, sram_leak_ret=first.sram_leak_ret,
+        wm_e_read=first.wm_e_read, wm_leak_on=first.wm_leak_on,
+        wm_leak_ret=first.wm_leak_ret,
+        pay_cam_rate=pay("pay_cam_rate"), pay_det_rate=pay("pay_det_rate"),
+        pay_key_rate=pay("pay_key_rate"), pay_max=pay("pay_max"),
+    )
+
+
+def stacked_model_arrays(workloads=None) -> StackedModelArrays:
+    """Lower a batch of workloads into one stacked, padded table set.
+
+    ``workloads`` is a sequence whose entries are either ``(detnet,
+    keynet)`` :class:`~repro.core.workloads.NNWorkload` pairs (``None``
+    selects the canonical MEgATrack network) or already-lowered
+    :class:`ModelArrays`.  The result powers the ``model`` grid axis of
+    :func:`repro.core.sweep.evaluate_grid` and
+    :func:`repro.core.stream.stream_grid` — one compiled kernel sweeps
+    every architecture variant.  Ragged layer counts are fine: shorter
+    models NaN out beyond their own cut range.
+    """
+    if workloads is None:
+        entries: tuple = ((None, None),)
+    else:
+        entries = tuple(workloads)
+        if not entries:
+            raise ValueError("need at least one workload entry")
+    models = []
+    for e in entries:
+        if isinstance(e, ModelArrays):
+            models.append(e)
+        else:
+            det, key = e
+            models.append(model_arrays(det, key))
+    return stack_model_arrays(tuple(models))
+
+
 # Link / camera scalars the kernel closes over (kept here so sweep.py has a
 # single import site for every physical constant it consumes).
 CAMERA_SENSE_W = DPS_CAMERA.sense

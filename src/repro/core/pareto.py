@@ -83,6 +83,41 @@ def non_dominated_mask(points: np.ndarray) -> np.ndarray:
     return mask
 
 
+def merge_fronts(values_a: np.ndarray, indices_a: np.ndarray,
+                 values_b: np.ndarray, indices_b: np.ndarray,
+                 sign: np.ndarray | None = None
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Merge two partial non-dominated sets into one exact front.
+
+    This is the incremental-front primitive of the streaming executor
+    (:mod:`repro.core.stream`): each chunk's surviving candidates are
+    merged into the running front, so the exact Pareto front of an
+    arbitrarily large grid is built with O(front + chunk) memory.
+    ``values_*`` are ``(n, d)`` objective rows in their *natural*
+    orientation with ``indices_*`` the flat grid indices; ``sign`` (+1
+    minimize / -1 maximize per column, default all minimize) orients the
+    dominance test.  Rows are deterministically ordered by flat index, so
+    merging is associative and chunk-order independent.
+    """
+    Va = np.asarray(values_a, np.float64)
+    Vb = np.asarray(values_b, np.float64)
+    if Va.size == 0 and Va.ndim != 2:
+        Va = Va.reshape(0, Vb.shape[1] if Vb.ndim == 2 else 0)
+    if Vb.size == 0 and Vb.ndim != 2:
+        Vb = Vb.reshape(0, Va.shape[1])
+    V = np.concatenate([Va, Vb], axis=0)
+    I = np.concatenate([np.asarray(indices_a, np.int64),
+                        np.asarray(indices_b, np.int64)])
+    if V.shape[0] != I.shape[0]:
+        raise ValueError(f"values/indices length mismatch "
+                         f"{V.shape[0]} != {I.shape[0]}")
+    order = np.argsort(I, kind="stable")
+    V, I = V[order], I[order]
+    s = np.ones(V.shape[1]) if sign is None else np.asarray(sign, np.float64)
+    keep = non_dominated_mask(V * s)
+    return V[keep], I[keep]
+
+
 def knee_point(points: np.ndarray) -> int:
     """Index of the knee (balanced compromise) of a front.
 
@@ -152,7 +187,10 @@ class ParetoFront:
     ``values`` holds the objective channels in their natural orientation
     (rows sorted by the first objective, best first); ``indices`` are flat
     indices into the originating grid, so ``result.config_at(indices[i])``
-    recovers the knob settings of front member ``i``.
+    recovers the knob settings of front member ``i``.  ``result`` may be a
+    dense :class:`~repro.core.sweep.SweepResult` or any duck-typed result
+    exposing ``config_at``/``channel_bounds`` (the streaming executor's
+    ``StreamResult`` qualifies — its front is this same class).
     """
 
     result: SweepResult
@@ -197,13 +235,16 @@ class ParetoFront:
             r = self._signed(
                 np.asarray([ref[o] for o in self.objectives], np.float64))
         else:
+            # The originating result only needs to expose channel_bounds()
+            # — both the dense SweepResult and the streaming StreamResult
+            # do, so fronts from either path price identically.
             r = []
             for o in self.objectives:
-                c = self.result.data[o].ravel()
-                signed = -c[np.isfinite(c)] if o in self.maximize \
-                    else c[np.isfinite(c)]
-                span = float(signed.max() - signed.min()) or 1.0
-                r.append(float(signed.max()) + 1e-9 * span)
+                lo, hi = self.result.channel_bounds(o)
+                s_lo, s_hi = ((-hi, -lo) if o in self.maximize
+                              else (lo, hi))
+                span = (s_hi - s_lo) or 1.0
+                r.append(s_hi + 1e-9 * span)
             r = np.asarray(r, np.float64)
         return hypervolume(self._signed(self.values), r)
 
@@ -233,6 +274,15 @@ def pareto_front(result: SweepResult,
 
     V = np.stack([np.asarray(result.data[o], np.float64).ravel()
                   for o in objectives], axis=1)
+    if V.shape[0] and not np.isfinite(V).all(axis=1).any():
+        # Mirror SweepResult.argmin: an all-invalid grid is a configuration
+        # error (e.g. MRAM-only on a node with no MRAM vehicle), not an
+        # empty front.
+        from .sweep import _fully_invalid_axis_values, invalid_message
+        nan = ~np.isfinite(V).all(axis=1).reshape(result.shape)
+        raise ValueError(invalid_message(
+            "/".join(objectives),
+            _fully_invalid_axis_values(nan, result.axes)))
     sign = np.where([o in maximize for o in objectives], -1.0, 1.0)
     mask = non_dominated_mask(V * sign)
     idx = np.flatnonzero(mask)

@@ -40,6 +40,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import numpy as np
+
 from . import energy as E
 from .arrays import RATE_CAMERA, RATE_DETNET, RATE_KEYNET, mipi_payloads
 from .constants import (CAMERA_FPS, DETNET_FPS, KEYNET_FPS, MIPI,
@@ -56,6 +58,20 @@ from .workloads import NNWorkload
 #: SweepResult channels / PartitionPoint attributes ``optimal_partition``
 #: can minimize (the paper's three headline objectives).
 OBJECTIVES = ("avg_power", "latency", "mipi_bytes_per_s")
+
+#: Grid size above which ``optimal_partition`` routes the search through
+#: the streaming executor (`repro.core.stream.stream_grid`) instead of
+#: materializing a dense grid.
+STREAM_THRESHOLD = 1 << 20
+
+#: evaluate_cut kwarg for each sweep axis name (the winner of a grid /
+#: stream search is rendered through the scalar path with these).
+_AXIS_TO_KWARG = {"agg_node": "agg_node", "sensor_node": "sensor_node",
+                  "weight_mem": "sensor_weight_mem",
+                  "detnet_fps": "detnet_fps", "keynet_fps": "keynet_fps",
+                  "num_cameras": "num_cameras",
+                  "mipi_energy_scale": "mipi_energy_scale",
+                  "camera_fps": "camera_fps"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,6 +220,10 @@ def _registry_name(node: str | TechNode) -> str | None:
     return node.name if TECH_NODES.get(node.name) is node else None
 
 
+def _is_axis(v) -> bool:
+    return isinstance(v, (list, tuple, np.ndarray))
+
+
 def optimal_partition(engine: str = "array",
                       objective: str = "avg_power", **kw) -> PartitionPoint:
     """Optimal partition point along one objective (Fig. 2 generalized).
@@ -214,15 +234,79 @@ def optimal_partition(engine: str = "array",
     claims).  For trade-offs *between* the objectives use
     :func:`repro.core.pareto.pareto_front` instead of a scalar argmin.
 
-    With ``engine="array"`` (default) the cut axis is evaluated by the
-    vectorized grid engine and only the winner is rendered through the
-    scalar path; ``engine="scalar"`` forces the full scalar sweep.  Custom
-    ``TechNode`` objects outside the registry fall back to the scalar
-    engine automatically.
+    Any knob may also be a *sequence* (e.g. ``sensor_node=("7nm",
+    "16nm")``, ``detnet_fps=np.linspace(5, 30, 50)``, or an explicit
+    ``cuts=`` axis) — the search then runs over the full cartesian grid
+    of all sequence-valued knobs × every cut.  Grids up to
+    :data:`STREAM_THRESHOLD` configurations are evaluated densely; larger
+    spaces route through the streaming executor
+    (:func:`repro.core.stream.stream_grid`), so the search stays
+    memory-bounded no matter how many knobs are opened up.  Only the
+    winner is rendered through the scalar path.
+
+    With scalar knobs, ``engine="array"`` (default) evaluates the cut
+    axis with the vectorized grid engine; ``engine="scalar"`` forces the
+    full scalar sweep.  Custom ``TechNode`` objects outside the registry
+    fall back to the scalar engine automatically.
     """
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown objective {objective!r}; "
                          f"have {OBJECTIVES}")
+    known = set(_AXIS_TO_KWARG.values()) | {"detnet", "keynet", "cuts"}
+    unknown_kw = sorted(set(kw) - known)
+    if unknown_kw:
+        # The grid branch rebuilds its evaluate_cut call from the axis
+        # map, so a misspelled knob would otherwise be dropped silently.
+        raise TypeError(f"unknown knobs {unknown_kw}; have {sorted(known)}")
+    from . import sweep as _sweep
+
+    cuts = kw.pop("cuts", None)
+    if cuts is not None:
+        cuts = tuple(cuts)        # may be a generator: materialize once
+    multi = cuts is not None or any(
+        _is_axis(v) for k, v in kw.items() if k not in ("detnet", "keynet"))
+    if multi:
+        if engine != "array":
+            raise ValueError("sequence-valued knobs (or cuts=) require "
+                             "engine='array'")
+        axes = _sweep.scalar_axes(kw)
+        for name in ("agg_nodes", "sensor_nodes"):
+            bad = [n for n in axes[name] if _registry_name(n) is None]
+            if bad:
+                raise ValueError(f"{name} entries outside the TECH_NODES "
+                                 f"registry not supported in a grid "
+                                 f"search: {bad}")
+        # Same eager guard as the scalar path: if *every* (sensor node,
+        # weight mem) combination lacks a test vehicle, all cut > 0
+        # corners are NaN and the argmin would quietly return the one
+        # valid centralized point instead of surfacing the error.
+        if all(m == "mram" and _resolve_node(n).mram is None
+               for m in axes["weight_mems"] for n in axes["sensor_nodes"]):
+            raise ValueError(
+                "no MRAM test vehicle at any requested sensor node "
+                f"{tuple(_resolve_node(n).name for n in axes['sensor_nodes'])}"
+                " — every distributed (cut > 0) configuration is invalid")
+        n_det = len((kw.get("detnet") or build_detnet()).layers)
+        n_key = len((kw.get("keynet") or build_keynet()).layers)
+        n_cuts = (len(list(cuts)) if cuts is not None
+                  else n_det + n_key + 1)
+        n_configs = n_cuts
+        for name in ("agg_nodes", "sensor_nodes", "weight_mems",
+                     "detnet_fps", "keynet_fps", "num_cameras",
+                     "mipi_energy_scale", "camera_fps"):
+            n_configs *= len(axes[name])
+        if n_configs > STREAM_THRESHOLD:
+            from . import stream as _stream
+            win = _stream.stream_grid(
+                cuts=cuts, objectives=(objective,), **axes).argmin(objective)
+        else:
+            win = _sweep.evaluate_grid(cuts=cuts, **axes).argmin(objective)
+        scalar_kw = {_AXIS_TO_KWARG[name]: win[name]
+                     for name in _AXIS_TO_KWARG}
+        scalar_kw["num_cameras"] = int(scalar_kw["num_cameras"])
+        return evaluate_cut(int(win["cut"]), detnet=kw.get("detnet"),
+                            keynet=kw.get("keynet"), **scalar_kw)
+
     agg = _registry_name(kw.get("agg_node", "7nm"))
     sen = _registry_name(kw.get("sensor_node", "7nm"))
     # Keep the engines interchangeable: the scalar sweep raises for an
@@ -235,7 +319,6 @@ def optimal_partition(engine: str = "array",
             f"no MRAM test vehicle at "
             f"{_resolve_node(kw.get('sensor_node', '7nm')).name}")
     if engine == "array" and agg is not None and sen is not None:
-        from . import sweep as _sweep
         res = _sweep.evaluate_grid(**_sweep.scalar_axes(kw))
         return evaluate_cut(res.argmin(field=objective)["cut"], **kw)
     return min(sweep_partitions(**kw), key=lambda p: getattr(p, objective))

@@ -1,0 +1,703 @@
+"""Streaming, sharded sweep executor: memory-bounded giant design spaces.
+
+:func:`repro.core.sweep.evaluate_grid` materializes the full cartesian
+product — host coordinate meshes on the way in, eleven dense channel
+grids on the way out — so memory is O(grid) and a 9-axis space at
+realistic resolution (10⁷–10⁹ configurations) is unreachable.  This
+module replaces that with a **streaming executor** over the *same*
+compiled Eq. 1-11 kernel:
+
+* **Device-side coordinate decoding** — each chunk starts from a flat
+  index range; the mixed-radix decode of
+  :func:`repro.core.sweep.decode_flat_index` runs on-device, so no
+  coordinate arrays are ever materialized anywhere.
+* **Fixed-size donated chunks** — one cached, jit-compiled step decodes
+  and evaluates a chunk and folds it into a running device carry
+  (argmin, validity counts, channel bounds per tracked channel).  The
+  carry is donated back to the device each step, so the reduction state
+  never reallocates; only the tracked channel rows leave the device
+  (untracked kernel outputs are dead-code-eliminated, which is a large
+  part of why streaming keeps up with the dense path while doing
+  strictly more work).
+* **Exact host merges** — top-k per objective (gated on the chunk
+  actually beating the running k-th best, so it is ~free in steady
+  state), optional histograms, and an **incremental Pareto front**: a
+  subsampled-front dominance pre-filter discards almost every point;
+  the rare survivors are buffered and merged exactly with
+  :func:`repro.core.pareto.merge_fronts`.  Host memory stays
+  O(chunk + front) for any grid size, and argmin/top-k/front are
+  *exactly* the dense-path results.
+* **Sharding** — with more than one device the chunk stream is split
+  across devices via ``jax.pmap`` (one carry per device, merged once at
+  the end), so kernel throughput scales with the device count.
+* **Batched workload axis** — ``models=`` stacks architecture variants
+  (see :func:`repro.core.arrays.stacked_model_arrays`) into a leading
+  grid axis evaluated inside the same kernel, for SplitNets-style
+  architecture × partition co-design sweeps.
+
+The dense path remains the right tool for small grids where the full
+per-channel arrays are wanted (heatmaps, reporting); the two paths are
+pinned exactly equal — argmin, top-k, and Pareto front — by
+``tests/test_stream.py`` and the ``benchmarks/run.py --smoke`` CI gate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import OrderedDict
+from typing import Iterable, Mapping, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from . import arrays as A
+from . import pareto as P
+from . import sweep as SW
+from .constants import (CAMERA_FPS, DETNET_FPS, KEYNET_FPS, NUM_CAMERAS,
+                        TechNode)
+from .workloads import NNWorkload
+
+#: Default flat-index chunk evaluated per device per step.
+DEFAULT_CHUNK = 1 << 18
+
+_FILTER_ROWS = 24      # front subsample rows in the dominance pre-filter
+_PROBE = 4096          # strided probe (front seed + histogram ranges)
+_MERGE_EVERY = 8192    # host candidate-buffer size that triggers a merge
+_STEP_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
+_STEP_CACHE_MAX = 32
+
+
+# ---------------------------------------------------------------------------
+# Result container
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamResult:
+    """Reductions of one streamed sweep (never the dense grid itself).
+
+    Holds O(front + k + axes) state: per-channel argmin winners, top-k
+    tables for the tracked objectives, validity counts, channel bounds,
+    optional histograms, and the exact Pareto front.  ``axes`` matches
+    :class:`~repro.core.sweep.SweepResult` (including the optional leading
+    ``model`` axis), and flat indices are interchangeable with the dense
+    path, so :meth:`config_at` decodes identically.
+    """
+
+    axes: "OrderedDict[str, tuple]"
+    objectives: tuple[str, ...]
+    maximize: tuple[str, ...]
+    chunk_size: int
+    n_devices: int
+
+    min_val: Mapping[str, float]          # per tracked channel: lowest value
+    min_idx: Mapping[str, int]            # ... and its flat index
+    finite_counts: Mapping[str, int]      # valid-config counts (exact)
+    channel_min: Mapping[str, float]      # finite min / max per channel
+    channel_max: Mapping[str, float]
+    #: Valid-config counts per axis value from the strided probe pass —
+    #: diagnostics for the all-invalid error messages, not exact tallies.
+    axis_valid: "OrderedDict[str, np.ndarray]"
+
+    topk_idx: np.ndarray                  # (n_objectives, k) flat indices
+    topk_val: np.ndarray                  # natural-orientation values
+
+    front_indices: np.ndarray             # (f,) flat indices, exact front
+    front_values: np.ndarray              # (f, d) natural-orientation values
+
+    hist: Optional[Mapping[str, tuple[np.ndarray, np.ndarray]]]
+    stats: Mapping[str, float]
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(len(v) for v in self.axes.values())
+
+    @property
+    def n_configs(self) -> int:
+        return int(np.prod(self.shape))
+
+    def config_at(self, flat_index: int) -> dict:
+        """Axis values of one flat grid index (the shared
+        :func:`~repro.core.sweep.config_from_flat` decode — identical to
+        the dense ``SweepResult.config_at``)."""
+        return SW.config_from_flat(self.shape, self.axes, flat_index)
+
+    def _invalid_notes(self) -> list[str]:
+        return [f"{name}={vals[i]!r}"
+                for (name, vals), counts in zip(self.axes.items(),
+                                                self.axis_valid.values())
+                for i in np.flatnonzero(counts == 0)]
+
+    def argmin(self, field: str = "avg_power") -> dict:
+        """Best (lowest-``field``) configuration — dense-argmin equal."""
+        if field not in self.min_val:
+            raise ValueError(
+                f"channel {field!r} was not tracked; this stream reduced "
+                f"{sorted(self.min_val)} — re-run stream_grid with "
+                f"track=({field!r},) or track='all'")
+        if self.finite_counts[field] == 0:
+            raise ValueError(SW.invalid_message(field, self._invalid_notes()))
+        out = self.config_at(self.min_idx[field])
+        out[field] = self.min_val[field]
+        return out
+
+    def top_k(self, field: str) -> list[dict]:
+        """The k best configurations of one tracked objective, best first
+        (k was fixed at :func:`stream_grid` time; ties break toward the
+        lower flat index, matching the dense ``SweepResult.top_k``)."""
+        if field not in self.objectives:
+            raise ValueError(f"top-k tracks only {self.objectives}; "
+                             f"re-run stream_grid with {field!r} in "
+                             f"objectives=")
+        oi = self.objectives.index(field)
+        out = []
+        for flat, val in zip(self.topk_idx[oi], self.topk_val[oi]):
+            if not np.isfinite(val):
+                break
+            cfg = self.config_at(int(flat))
+            cfg[field] = float(val)
+            out.append(cfg)
+        return out
+
+    def channel_bounds(self, field: str) -> tuple[float, float]:
+        """(min, max) of the finite entries of one channel (the protocol
+        :meth:`repro.core.pareto.ParetoFront.hypervolume` prices against)."""
+        if self.finite_counts[field] == 0:
+            raise ValueError(SW.invalid_message(field, self._invalid_notes()))
+        return self.channel_min[field], self.channel_max[field]
+
+    def pareto_front(self) -> P.ParetoFront:
+        """The exact non-dominated set as a regular
+        :class:`~repro.core.pareto.ParetoFront` (identical — indices and
+        values — to ``pareto.pareto_front`` on the dense grid)."""
+        sign0 = -1.0 if self.objectives[0] in self.maximize else 1.0
+        order = np.argsort(self.front_values[:, 0] * sign0, kind="stable")
+        return P.ParetoFront(
+            result=self, objectives=self.objectives, maximize=self.maximize,
+            indices=self.front_indices[order],
+            values=self.front_values[order])
+
+
+# ---------------------------------------------------------------------------
+# The compiled chunk step (cached across stream_grid calls)
+# ---------------------------------------------------------------------------
+
+
+def _build_step(S, shape, n_total, chunk, fields, n_dev, devices):
+    """Evaluate one decoded chunk and fold it into the device carry.
+
+    Returns the tracked channel rows ``F`` (``(n_fields, chunk)``) for the
+    host-side top-k / Pareto merges.  Axis-value arrays are *arguments*
+    (not closure constants), so the compiled step is reusable across
+    grids with the same axis sizes — the cache below makes repeated
+    sweeps compile-free, like the dense ``_compiled_kernel``.
+    """
+    kernel = SW.vmapped_kernel(S)
+    # int32 decode arithmetic when the flat index space fits — int64
+    # div/mod is measurably slower on CPU.
+    small = n_total + chunk * n_dev < 2**31
+
+    def step(carry, axvals, start):
+        flat = start + jnp.arange(chunk, dtype=jnp.int64)
+        ingrid = flat < n_total
+        # Mixed-radix decode (the shared sweep.decode_flat_index, traced
+        # on-device) + axis-value gather: the coordinates for this chunk
+        # never exist as host arrays, and XLA fuses the decode straight
+        # into the kernel body.
+        fdec = flat.astype(jnp.int32) if small else flat
+        coords = SW.decode_flat_index(shape, fdec)
+        out = kernel(*[v[c] for v, c in zip(axvals, coords)])
+
+        F = jnp.stack([out[f] for f in fields])            # (nf, chunk)
+        valid = jnp.isfinite(F) & ingrid[None, :]
+        Fm = jnp.where(valid, F, jnp.inf)
+
+        # Running argmin per channel; ties toward the lower flat index
+        # (jnp.argmin returns the first minimum, matching np.nanargmin).
+        loc = jnp.argmin(Fm, axis=1)
+        lv = Fm.min(axis=1)          # == Fm[:, loc] — doubles as chunk fmin
+        li = flat[loc]
+        # isfinite guard: an all-invalid chunk ties at inf == inf and must
+        # not swap the sentinel min_idx for an invalid config's index.
+        better = (lv < carry["min_val"]) | ((lv == carry["min_val"])
+                                            & jnp.isfinite(lv)
+                                            & (li < carry["min_idx"]))
+        new_carry = {
+            "min_val": jnp.where(better, lv, carry["min_val"]),
+            "min_idx": jnp.where(better, li, carry["min_idx"]),
+            "finite": carry["finite"] + valid.sum(axis=1),
+            "fmin": jnp.minimum(carry["fmin"], lv),
+            "fmax": jnp.maximum(
+                carry["fmax"], jnp.where(valid, F, -jnp.inf).max(axis=1)),
+        }
+        return new_carry, F
+
+    if n_dev > 1:
+        return jax.pmap(step, donate_argnums=(0,), in_axes=(0, None, 0),
+                        devices=devices)
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def _cached_step(S, shape, n_total, chunk, fields, n_dev, devices):
+    # S is hashed by identity (frozen, eq=False); keying on the object
+    # itself (not id()) keeps it alive so a recycled id can never alias
+    # a stale compiled step.
+    key = (S, shape, chunk, fields, n_dev,
+           tuple(str(d) for d in devices or ()))
+    fn = _STEP_CACHE.get(key)
+    if fn is None:
+        fn = _build_step(S, shape, n_total, chunk, fields, n_dev, devices)
+        _STEP_CACHE[key] = fn
+        while len(_STEP_CACHE) > _STEP_CACHE_MAX:
+            _STEP_CACHE.popitem(last=False)
+    return fn
+
+
+def _init_carry(n_total, n_fields):
+    # Strong dtypes throughout: a weak-typed init carry would retrace the
+    # step on its second call (outputs come back strong-typed).
+    return {
+        "min_val": jnp.full((n_fields,), jnp.inf, jnp.float64),
+        "min_idx": jnp.full((n_fields,), n_total, jnp.int64),
+        "finite": jnp.zeros((n_fields,), jnp.int64),
+        "fmin": jnp.full((n_fields,), jnp.inf, jnp.float64),
+        "fmax": jnp.full((n_fields,), -jnp.inf, jnp.float64),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Host-side exact merges
+# ---------------------------------------------------------------------------
+
+
+class _TopK:
+    """Running exact top-k per objective over (signed value, flat index).
+
+    Chunk extraction is gated on ``x <= kth`` — after the table tightens
+    (a few chunks in) almost every chunk skips in one vectorized compare.
+    Ties break toward the lower flat index, matching ``np.argsort(...,
+    kind='stable')`` on the dense grid.
+    """
+
+    def __init__(self, n_obj: int, k: int, n_total: int):
+        self.k = k
+        self.val = np.full((n_obj, k), np.inf)
+        self.idx = np.full((n_obj, k), n_total, np.int64)
+
+    def update(self, oi: int, x: np.ndarray, base: np.int64):
+        kth = self.val[oi, -1]
+        sel = np.flatnonzero(x <= kth)       # NaN compares False: excluded
+        if sel.size == 0:
+            return
+        if sel.size > 4 * self.k:
+            # Large entrant set (warmup): shrink exactly via a partition.
+            xv = x[sel]
+            kthv = np.partition(xv, self.k - 1)[self.k - 1]
+            sel = sel[xv <= kthv]
+        cv = np.concatenate([self.val[oi], x[sel]])
+        ci = np.concatenate([self.idx[oi], base + sel.astype(np.int64)])
+        order = np.lexsort((ci, cv))[:self.k]
+        self.val[oi] = cv[order]
+        self.idx[oi] = ci[order]
+
+
+def _filter_rows(front_signed: np.ndarray, rows: int, d: int) -> np.ndarray:
+    """Subsample the running front into the fixed-size dominance filter.
+
+    Rows are drawn at quantiles of the front sorted along *every*
+    objective (not just the first) — a front with hundreds of members
+    spreads differently along each trade-off axis, and a filter that only
+    walks the first objective leaves holes that flood the host merge with
+    false survivors.
+    """
+    filt = np.full((rows, d), np.inf)
+    k = front_signed.shape[0]
+    if k == 0:
+        return filt
+    if k <= rows:
+        filt[:k] = front_signed
+        return filt
+    per = max(1, rows // d)
+    picks: list = []
+    for col in range(d):
+        order = np.argsort(front_signed[:, col], kind="stable")
+        picks.extend(order[np.round(np.linspace(0, k - 1, per))
+                           .astype(int)])
+    take = np.unique(np.asarray(picks))[:rows]
+    filt[:take.size] = front_signed[take]
+    return filt
+
+
+def _undominated(Osg: np.ndarray, filt: np.ndarray) -> np.ndarray:
+    """Finite rows of ``Osg`` (signed ``(d, n)`` channel rows) that no
+    filter row dominates — unrolled over the few filter rows so every op
+    stays a flat vector pass."""
+    d = Osg.shape[0]
+    fin = np.isfinite(Osg[0])
+    for i in range(1, d):
+        fin &= np.isfinite(Osg[i])
+    dom = np.zeros(Osg.shape[1], bool)
+    for r in range(filt.shape[0]):
+        if not np.isfinite(filt[r, 0]):
+            break
+        le = filt[r, 0] <= Osg[0]
+        lt = filt[r, 0] < Osg[0]
+        for i in range(1, d):
+            le &= filt[r, i] <= Osg[i]
+            lt |= filt[r, i] < Osg[i]
+        dom |= le & lt
+    return fin & ~dom
+
+
+class _FrontFilter:
+    """Dominance pre-filter against the running front.
+
+    Two sufficient conditions for "this point is dominated" (so discarding
+    is always exact; everything uncertain survives into the exact merge):
+
+    * a few explicit front rows (:func:`_filter_rows`), checked directly;
+    * for d <= 3, a quantile-binned 2-D prefix-min table over the front:
+      ``D[b1, b2]`` is the best (signed) first objective among front
+      members whose objective-1/2 values fall in a *strictly lower* bin
+      in both axes — ``D[pb1-1, pb2-1] <= p0`` therefore proves a member
+      with ``m0 <= p0, m1 < p1, m2 < p2`` exists, i.e. true domination.
+      This scales with front *shape*, not front size, which is what keeps
+      survivor counts (and the exact-merge cost) flat on grids whose
+      fronts grow into the hundreds of members.
+    """
+
+    def __init__(self, d: int, bins: int = 64):
+        self.d = d
+        self.bins = bins
+        self.rows = np.full((_FILTER_ROWS, d), np.inf)
+        self.edges = None
+        self.table = None
+
+    def rebuild(self, front_signed: np.ndarray):
+        self.rows = _filter_rows(front_signed, _FILTER_ROWS, self.d)
+        self.edges = self.table = None
+        k = front_signed.shape[0]
+        if not (2 <= self.d <= 3) or k < 8:
+            return
+        cols = list(range(1, self.d))
+        edges = [np.unique(np.quantile(front_signed[:, c],
+                                       np.linspace(0, 1, self.bins + 1)))
+                 for c in cols]
+        if any(e.size < 2 for e in edges):
+            return
+        dims = tuple(e.size for e in edges)
+        table = np.full(dims, np.inf)
+        bin_idx = [np.clip(np.searchsorted(e, front_signed[:, c],
+                                           side="right") - 1,
+                           0, e.size - 1)
+                   for e, c in zip(edges, cols)]
+        np.minimum.at(table, tuple(bin_idx), front_signed[:, 0])
+        for ax in range(table.ndim):
+            table = np.minimum.accumulate(table, axis=ax)
+        self.edges = edges
+        self.table = table
+
+    def undominated(self, Osg: np.ndarray) -> np.ndarray:
+        keep = _undominated(Osg, self.rows)
+        if self.table is None:
+            return keep
+        idx = []
+        ok = np.ones(Osg.shape[1], bool)
+        for e, row in zip(self.edges, Osg[1:]):
+            # Strictly-lower bin: a member binned below E[pb] has a value
+            # < E[pb] <= p, hence strictly smaller in that objective.
+            b = np.searchsorted(e, row, side="right") - 2
+            ok &= b >= 0
+            idx.append(np.clip(b, 0, e.size - 1))
+        dom = np.zeros(Osg.shape[1], bool)
+        dom[ok] = self.table[tuple(i[ok] for i in idx)] <= Osg[0][ok]
+        return keep & ~dom
+
+
+def _probe(S, axis_vals, shape, n_total, obj_fields, sign, hist_bins,
+           hist_ranges):
+    """Strided sample pass: seeds the front filter, histogram ranges and
+    the per-axis-value validity diagnostics.
+
+    The probe points are ordinary grid points evaluated through the same
+    compiled kernel; they only ever *pre-filter* (the exact front is built
+    solely from chunk survivors), so correctness never depends on probe
+    coverage.
+    """
+    m = int(min(_PROBE, n_total))
+    flat = np.unique(np.linspace(0, n_total - 1, m).astype(np.int64))
+    coords = SW.decode_flat_index(shape, flat)
+    out = SW._compiled_kernel(S)(
+        *[jnp.asarray(a[c]) for a, c in zip(axis_vals, coords)])
+    O = np.stack([np.asarray(out[f]) for f in obj_fields], axis=1)
+    fin = np.isfinite(O).all(axis=1)
+    axis_valid = tuple(np.bincount(c[fin], minlength=sz)
+                       for c, sz in zip(coords, shape))
+    seed = O[fin] * sign
+    if seed.shape[0]:
+        seed = seed[P.non_dominated_mask(seed)]
+        # The probe runs through the dense jit while chunks run through
+        # the step jit; the two lowerings can disagree in the last ulp.
+        # Pad the seed rows outward so a probe twin of a front point can
+        # never strictly dominate (and wrongly cull) its chunk-evaluated
+        # copy — the filter stays conservative, the host merge is exact.
+        seed = seed + (1e-9 * np.abs(seed) + 1e-300)
+
+    edges = None
+    if hist_bins:
+        edges = np.empty((len(obj_fields), hist_bins + 1))
+        for oi, f in enumerate(obj_fields):
+            if hist_ranges is not None and f in hist_ranges:
+                lo, hi = map(float, hist_ranges[f])
+            else:
+                col = O[:, oi][np.isfinite(O[:, oi])]
+                if col.size == 0:
+                    lo, hi = 0.0, 1.0
+                else:
+                    lo, hi = float(col.min()), float(col.max())
+                    pad = 0.05 * ((hi - lo) or max(abs(lo), 1.0))
+                    lo, hi = lo - pad, hi + pad
+            if hi <= lo:
+                hi = lo + 1.0
+            edges[oi] = np.linspace(lo, hi, hist_bins + 1)
+    return seed, edges, axis_valid
+
+
+# ---------------------------------------------------------------------------
+# The executor
+# ---------------------------------------------------------------------------
+
+
+def stream_grid(cuts: Optional[Iterable[int]] = None,
+                agg_nodes: Sequence[str | TechNode] = ("7nm",),
+                sensor_nodes: Sequence[str | TechNode] = ("7nm",),
+                weight_mems: Sequence[str] = ("sram",),
+                detnet_fps: Sequence[float] = (DETNET_FPS,),
+                keynet_fps: Sequence[float] = (KEYNET_FPS,),
+                num_cameras: Sequence[float] = (NUM_CAMERAS,),
+                mipi_energy_scale: Sequence[float] = (1.0,),
+                camera_fps: Sequence[float] = (CAMERA_FPS,),
+                detnet: NNWorkload | None = None,
+                keynet: NNWorkload | None = None,
+                model: A.ModelArrays | None = None,
+                models=None,
+                chunk_size: int = DEFAULT_CHUNK,
+                top_k: int = 4,
+                objectives: Sequence[str] = P.DEFAULT_OBJECTIVES,
+                maximize: Iterable[str] = (),
+                track: Optional[Sequence[str]] = None,
+                hist_bins: int = 0,
+                hist_ranges: Optional[Mapping] = None,
+                devices: Optional[Sequence] = None) -> StreamResult:
+    """Stream Eqs. 1-11 over an arbitrarily large cartesian grid.
+
+    Same axes (and ``models=`` workload batch) as
+    :func:`repro.core.sweep.evaluate_grid`, but the grid is never
+    materialized: flat indices are decoded to coordinates on-device in
+    ``chunk_size`` pieces (per device) and folded into running
+    reductions, so host memory is O(chunk + front) for any grid size.
+    Argmin, top-k and Pareto front are *exactly* the dense-path results.
+
+    ``objectives``/``maximize`` select the channels tracked by top-k and
+    the incremental Pareto front.  ``track`` adds further channels to the
+    argmin/count/bounds reductions (or ``"all"`` for every kernel field)
+    — untracked channels are dead-code-eliminated from the compiled step,
+    which is a large part of why streaming keeps pace with the dense
+    path, so track only what you need.  ``hist_bins`` adds per-objective
+    histograms (ranges from ``hist_ranges`` or a strided probe pass, with
+    out-of-range values clamped into the end bins).  ``devices`` shards
+    the chunk stream across multiple JAX devices via ``pmap``.
+    """
+    S, axis_vals, axes = SW.build_axes(
+        cuts, agg_nodes, sensor_nodes, weight_mems, detnet_fps, keynet_fps,
+        num_cameras, mipi_energy_scale, camera_fps, detnet, keynet, model,
+        models)
+    full_shape = tuple(a.size for a in axis_vals)
+    n_total = int(np.prod(full_shape))
+
+    objectives = tuple(objectives)
+    maximize = tuple(maximize)
+    if not objectives:
+        raise ValueError("need at least one objective channel")
+    if track == "all":
+        extra: tuple = SW.FIELDS
+    else:
+        extra = tuple(track) if track is not None else ()
+    fields = objectives + tuple(f for f in extra if f not in objectives)
+    unknown = [o for o in fields if o not in SW.FIELDS]
+    if unknown:
+        raise ValueError(f"unknown objective channels {unknown}; "
+                         f"have {SW.FIELDS}")
+    stray = [o for o in maximize if o not in objectives]
+    if stray:
+        raise ValueError(f"maximize entries {stray} not in objectives")
+    sign = np.where([o in maximize for o in objectives], -1.0, 1.0)
+    d = len(objectives)
+
+    dev_list = list(devices) if devices is not None else jax.local_devices()
+    n_dev = max(1, len(dev_list))
+    chunk = max(1, int(chunk_size))
+    k = max(1, min(int(top_k), n_total))
+    per_step = chunk * n_dev
+    n_steps = math.ceil(n_total / per_step)
+
+    t0 = time.perf_counter()
+    with enable_x64():
+        seed_signed, hist_edges, axis_valid = _probe(
+            S, axis_vals, full_shape, n_total, objectives, sign,
+            hist_bins, hist_ranges)
+
+        run = _cached_step(S, full_shape, n_total, chunk, fields, n_dev,
+                           dev_list if n_dev > 1 else None)
+        axvals_j = tuple(jnp.asarray(a) for a in axis_vals)
+        carry = _init_carry(n_total, len(fields))
+        if n_dev > 1:
+            carry = jax.tree_util.tree_map(
+                lambda x: jnp.stack([x] * n_dev), carry)
+        elif devices is not None:
+            # A single explicit device: commit the operands there so the
+            # jit path honors devices= just like the pmap path does.
+            axvals_j = jax.device_put(axvals_j, dev_list[0])
+            carry = jax.device_put(carry, dev_list[0])
+
+        topk = _TopK(d, k, n_total)
+        front_vals = np.empty((0, d))       # natural orientation
+        front_idx = np.empty((0,), np.int64)
+        buf_vals: list = []                 # pending front candidates —
+        buf_idx: list = []                  # merged in batches, not per chunk
+        buf_n = 0
+        ffilt = _FrontFilter(d)
+        hist_counts = (np.zeros((d, hist_bins), np.int64) if hist_bins
+                       else None)
+        t_first = None
+
+        def refresh_filter():
+            base = np.concatenate([front_vals * sign, seed_signed]) \
+                if seed_signed.size else front_vals * sign
+            ffilt.rebuild(base)
+
+        def flush():
+            nonlocal front_vals, front_idx, buf_vals, buf_idx, buf_n
+            if buf_n:
+                cat_v = np.concatenate(buf_vals)
+                cat_i = np.concatenate(buf_idx)
+                if front_vals.shape[0] and cat_v.shape[0] > 64:
+                    # Exact pre-cull against the *full* running front (its
+                    # members are chunk-evaluated values, so discarding
+                    # dominated candidates here loses nothing) — keeps the
+                    # n·log-ish merge below from ever seeing the bulk.
+                    keep = _undominated(
+                        np.ascontiguousarray((cat_v * sign).T),
+                        front_vals * sign)
+                    cat_v, cat_i = cat_v[keep], cat_i[keep]
+                front_vals, front_idx = P.merge_fronts(
+                    front_vals, front_idx, cat_v, cat_i, sign)
+                buf_vals, buf_idx, buf_n = [], [], 0
+            refresh_filter()
+
+        refresh_filter()
+        for si in range(n_steps):
+            start = si * per_step
+            if n_dev > 1:
+                carry, F = run(carry, axvals_j,
+                               jnp.asarray(start + chunk * np.arange(n_dev),
+                                           jnp.int64))
+                F_blocks = np.asarray(F)
+            else:
+                carry, F = run(carry, axvals_j, jnp.int64(start))
+                F_blocks = np.asarray(F)[None]
+
+            for di in range(n_dev):
+                dstart = start + chunk * di
+                vlen = min(chunk, max(0, n_total - dstart))
+                if vlen == 0:
+                    break
+                Fd = F_blocks[di][:, :vlen]
+                base_i = np.int64(dstart)
+                for oi in range(d):
+                    x = Fd[oi] if sign[oi] == 1.0 else Fd[oi] * sign[oi]
+                    topk.update(oi, x, base_i)
+                Osg = Fd[:d] if (sign == 1.0).all() else Fd[:d] * sign[:,
+                                                                       None]
+                cand = ffilt.undominated(Osg)
+                loc = np.flatnonzero(cand)
+                if loc.size:
+                    buf_vals.append(Fd[:d].T[loc])
+                    buf_idx.append(dstart + loc.astype(np.int64))
+                    buf_n += loc.size
+                if hist_counts is not None:
+                    for oi in range(d):
+                        col = Fd[oi]
+                        col = col[np.isfinite(col)]
+                        hist_counts[oi] += np.histogram(
+                            np.clip(col, hist_edges[oi][0],
+                                    hist_edges[oi][-1]),
+                            bins=hist_edges[oi])[0]
+            # An early first flush turns the chunk-0 survivors into a real
+            # running front, so the bin-table filter bites from chunk 1 on.
+            if buf_n >= _MERGE_EVERY or si == 0:
+                flush()
+            if t_first is None:
+                jax.block_until_ready(carry["min_val"])
+                t_first = time.perf_counter() - t0
+
+        flush()
+        carry = jax.tree_util.tree_map(np.asarray, carry)
+    total_s = time.perf_counter() - t0
+
+    if n_dev > 1:
+        carry = _merge_device_carries(carry)
+    stats = {
+        "n_configs": float(n_total),
+        "n_chunks": float(n_steps),
+        "total_s": total_s,
+        "first_chunk_s": t_first if t_first is not None else total_s,
+        "configs_per_s": n_total / total_s if total_s else float("inf"),
+        "steady_configs_per_s": (
+            (n_total - min(per_step, n_total))
+            / max(total_s - (t_first or 0.0), 1e-9)
+            if n_steps > 1 else n_total / max(total_s, 1e-9)),
+    }
+
+    hist_out = None
+    if hist_bins:
+        hist_out = {f: (hist_counts[oi].copy(), hist_edges[oi].copy())
+                    for oi, f in enumerate(objectives)}
+    visible_axis_valid = (axis_valid[1:] if len(axis_valid) == len(axes) + 1
+                          else axis_valid)     # drop hidden model axis
+    return StreamResult(
+        axes=axes, objectives=objectives, maximize=maximize,
+        chunk_size=chunk, n_devices=n_dev,
+        min_val={f: float(carry["min_val"][i])
+                 for i, f in enumerate(fields)},
+        min_idx={f: int(carry["min_idx"][i]) for i, f in enumerate(fields)},
+        finite_counts={f: int(carry["finite"][i])
+                       for i, f in enumerate(fields)},
+        channel_min={f: float(carry["fmin"][i])
+                     for i, f in enumerate(fields)},
+        channel_max={f: float(carry["fmax"][i])
+                     for i, f in enumerate(fields)},
+        axis_valid=OrderedDict(zip(axes, visible_axis_valid)),
+        topk_val=topk.val * sign[:, None],
+        topk_idx=topk.idx,
+        front_indices=front_idx, front_values=front_vals,
+        hist=hist_out, stats=stats)
+
+
+def _merge_device_carries(carry):
+    """Fold per-device reduction carries into one (host side, exact)."""
+    mv, mi = carry["min_val"], carry["min_idx"]     # (ndev, nf)
+    order = np.lexsort((mi, mv), axis=0)[0]         # per-field best device
+    nf = mv.shape[1]
+    return {
+        "min_val": mv[order, np.arange(nf)],
+        "min_idx": mi[order, np.arange(nf)],
+        "finite": carry["finite"].sum(axis=0),
+        "fmin": carry["fmin"].min(axis=0),
+        "fmax": carry["fmax"].max(axis=0),
+    }

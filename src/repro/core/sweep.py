@@ -61,6 +61,10 @@ from .workloads import NNWorkload
 AXIS_NAMES = ("cut", "agg_node", "sensor_node", "weight_mem", "detnet_fps",
               "keynet_fps", "num_cameras", "mipi_energy_scale", "camera_fps")
 
+#: Name of the optional leading axis over stacked workload batches
+#: (``models=`` on :func:`evaluate_grid` / ``stream.stream_grid``).
+MODEL_AXIS = "model"
+
 #: Output fields of the kernel (each becomes one grid-shaped array).
 #: ``avg_power`` + the seven power-breakdown groups, plus the three
 #: non-power objective channels: ``mipi_bytes_per_s`` (Eq. 5 link traffic),
@@ -105,15 +109,23 @@ def _site_power(macs_per_s, w_read_per_s, act_per_s, cycles_per_s, f_clk,
     return p_compute, p_l2w + p_l2a + p_l1 + p_leak
 
 
-def _make_config_fn(M: A.ModelArrays):
-    """Close the Eq. 1-11 kernel over one model's constant tables."""
-    det, key = M.det, M.key
-    n_det, n_key = det.n_layers, key.n_layers
-    n_all = n_det + n_key
+def _make_config_fn(S: A.StackedModelArrays):
+    """Close the Eq. 1-11 kernel over a stacked batch of model tables.
+
+    The first argument of the returned function selects the model along
+    the stacked (padded) workload axis; for a single-model stack it is a
+    constant 0 and the gathers reduce to the plain per-model reads.
+    """
+    det, key = S.det, S.key
+    M = S
     j = jnp.asarray  # constants fold into the jaxpr at trace time
 
-    def config_fn(cut, agg_i, sen_i, wm_i, det_fps, key_fps, ncam,
+    def config_fn(model_i, cut, agg_i, sen_i, wm_i, det_fps, key_fps, ncam,
                   mipi_scale, cam_fps):
+        m = model_i
+        n_det = j(det.n_layers)[m]
+        n_key = j(key.n_layers)[m]
+        n_all = n_det + n_key
         cd = jnp.clip(cut, 0, n_det)          # DetNet layers on-sensor
         ck = jnp.clip(cut - n_det, 0, n_key)  # KeyNet layers on-sensor
         has_sensor = cut > 0
@@ -133,23 +145,25 @@ def _make_config_fn(M: A.ModelArrays):
             0.0)
 
         # ---- Eq. 5: MIPI payload plan for this cut ----
-        bps_per_cam = (j(M.pay_cam_rate)[cut] * cam_fps
-                       + j(M.pay_det_rate)[cut] * det_fps
-                       + j(M.pay_key_rate)[cut] * key_fps)
+        bps_per_cam = (j(M.pay_cam_rate)[m, cut] * cam_fps
+                       + j(M.pay_det_rate)[m, cut] * det_fps
+                       + j(M.pay_key_rate)[m, cut] * key_fps)
         p_mipi = bps_per_cam * (A.MIPI_E_PER_BYTE * mipi_scale) * ncam
         mipi_bps = bps_per_cam * ncam
 
         # ---- on-sensor site (x ncam replicas) ----
-        macs_s = (j(det.c_macs)[cd] * det_fps + j(key.c_macs)[ck] * key_fps)
-        w_read_s = (j(det.c_weight_stream)[cd] * det_fps
-                    + j(key.c_weight_stream)[ck] * key_fps)
-        act_s = (j(det.c_act_traffic)[cd] * det_fps
-                 + j(key.c_act_traffic)[ck] * key_fps)
-        cyc_s = (j(det.c_cycles_sensor)[cd] * det_fps
-                 + j(key.c_cycles_sensor)[ck] * key_fps)
-        cap_w_s = j(det.c_weight_bytes)[cd] + j(key.c_weight_bytes)[ck]
-        cap_a_s = (jnp.maximum(j(det.peak_prefix)[cd], j(key.peak_prefix)[ck])
-                   + det.input_bytes)
+        macs_s = (j(det.c_macs)[m, cd] * det_fps
+                  + j(key.c_macs)[m, ck] * key_fps)
+        w_read_s = (j(det.c_weight_stream)[m, cd] * det_fps
+                    + j(key.c_weight_stream)[m, ck] * key_fps)
+        act_s = (j(det.c_act_traffic)[m, cd] * det_fps
+                 + j(key.c_act_traffic)[m, ck] * key_fps)
+        cyc_s = (j(det.c_cycles_sensor)[m, cd] * det_fps
+                 + j(key.c_cycles_sensor)[m, ck] * key_fps)
+        cap_w_s = j(det.c_weight_bytes)[m, cd] + j(key.c_weight_bytes)[m, ck]
+        cap_a_s = (jnp.maximum(j(det.peak_prefix)[m, cd],
+                               j(key.peak_prefix)[m, ck])
+                   + j(det.input_bytes)[m])
         p_comp_s, p_mem_s = _site_power(
             macs_s, w_read_s, act_s, cyc_s,
             j(M.f_clk)[sen_i], j(M.e_mac)[sen_i],
@@ -162,27 +176,29 @@ def _make_config_fn(M: A.ModelArrays):
         p_sensor_memory = jnp.where(has_sensor, p_mem_s * ncam, 0.0)
 
         # ---- aggregator site (suffix of each network, rate x ncam) ----
-        macs_a = ((j(det.c_macs)[n_det] - j(det.c_macs)[cd])
+        macs_a = ((j(det.c_macs)[m, n_det] - j(det.c_macs)[m, cd])
                   * (det_fps * ncam)
-                  + (j(key.c_macs)[n_key] - j(key.c_macs)[ck])
+                  + (j(key.c_macs)[m, n_key] - j(key.c_macs)[m, ck])
                   * (key_fps * ncam))
-        w_read_a = ((j(det.c_weight_stream)[n_det]
-                     - j(det.c_weight_stream)[cd]) * (det_fps * ncam)
-                    + (j(key.c_weight_stream)[n_key]
-                       - j(key.c_weight_stream)[ck]) * (key_fps * ncam))
-        act_a = ((j(det.c_act_traffic)[n_det] - j(det.c_act_traffic)[cd])
+        w_read_a = ((j(det.c_weight_stream)[m, n_det]
+                     - j(det.c_weight_stream)[m, cd]) * (det_fps * ncam)
+                    + (j(key.c_weight_stream)[m, n_key]
+                       - j(key.c_weight_stream)[m, ck]) * (key_fps * ncam))
+        act_a = ((j(det.c_act_traffic)[m, n_det]
+                  - j(det.c_act_traffic)[m, cd]) * (det_fps * ncam)
+                 + (j(key.c_act_traffic)[m, n_key]
+                    - j(key.c_act_traffic)[m, ck]) * (key_fps * ncam))
+        cyc_a = ((j(det.c_cycles_agg)[m, n_det] - j(det.c_cycles_agg)[m, cd])
                  * (det_fps * ncam)
-                 + (j(key.c_act_traffic)[n_key] - j(key.c_act_traffic)[ck])
-                 * (key_fps * ncam))
-        cyc_a = ((j(det.c_cycles_agg)[n_det] - j(det.c_cycles_agg)[cd])
-                 * (det_fps * ncam)
-                 + (j(key.c_cycles_agg)[n_key] - j(key.c_cycles_agg)[ck])
-                 * (key_fps * ncam))
-        cap_w_a = ((j(det.c_weight_bytes)[n_det] - j(det.c_weight_bytes)[cd])
-                   + (j(key.c_weight_bytes)[n_key]
-                      - j(key.c_weight_bytes)[ck]))
-        cap_a_a = (jnp.maximum(j(det.peak_suffix)[cd], j(key.peak_suffix)[ck])
-                   + j(M.pay_max)[cut] * ncam)
+                 + (j(key.c_cycles_agg)[m, n_key]
+                    - j(key.c_cycles_agg)[m, ck]) * (key_fps * ncam))
+        cap_w_a = ((j(det.c_weight_bytes)[m, n_det]
+                    - j(det.c_weight_bytes)[m, cd])
+                   + (j(key.c_weight_bytes)[m, n_key]
+                      - j(key.c_weight_bytes)[m, ck]))
+        cap_a_a = (jnp.maximum(j(det.peak_suffix)[m, cd],
+                               j(key.peak_suffix)[m, ck])
+                   + j(M.pay_max)[m, cut] * ncam)
         p_comp_a, p_mem_a = _site_power(
             macs_a, w_read_a, act_a, cyc_a,
             j(M.f_clk)[agg_i], j(M.e_mac)[agg_i],
@@ -199,14 +215,17 @@ def _make_config_fn(M: A.ModelArrays):
         # DetNet work/payloads are amortized by the ROI-reuse ratio; the
         # aggregator serializes the other cameras' suffix work (t_queue).
         det_amort = jnp.minimum(1.0, det_fps / cam_fps)
-        t_det_sen = j(det.c_cycles_sensor)[cd] / j(M.f_clk)[sen_i] * det_amort
-        t_det_agg = ((j(det.c_cycles_agg)[n_det] - j(det.c_cycles_agg)[cd])
+        t_det_sen = (j(det.c_cycles_sensor)[m, cd] / j(M.f_clk)[sen_i]
+                     * det_amort)
+        t_det_agg = ((j(det.c_cycles_agg)[m, n_det]
+                      - j(det.c_cycles_agg)[m, cd])
                      / j(M.f_clk)[agg_i] * det_amort)
-        t_key_sen = j(key.c_cycles_sensor)[ck] / j(M.f_clk)[sen_i]
-        t_key_agg = ((j(key.c_cycles_agg)[n_key] - j(key.c_cycles_agg)[ck])
+        t_key_sen = j(key.c_cycles_sensor)[m, ck] / j(M.f_clk)[sen_i]
+        t_key_agg = ((j(key.c_cycles_agg)[m, n_key]
+                      - j(key.c_cycles_agg)[m, ck])
                      / j(M.f_clk)[agg_i])
-        t_comm_cut = (j(M.pay_det_rate)[cut] * det_amort
-                      + j(M.pay_key_rate)[cut]) / A.MIPI_BW
+        t_comm_cut = (j(M.pay_det_rate)[m, cut] * det_amort
+                      + j(M.pay_key_rate)[m, cut]) / A.MIPI_BW
         latency = (A.T_SENSE + t_comm_cam + t_det_sen + t_det_agg
                    + t_comm_cut + (ncam - 1.0) * (t_det_agg + t_key_agg)
                    + t_key_sen + t_key_agg)
@@ -217,18 +236,24 @@ def _make_config_fn(M: A.ModelArrays):
         # fields inherit NaN from the wm_* tables; the rest get it here.
         invalid = jnp.where(has_sensor,
                             j(M.wm_e_read)[sen_i, wm_i] * 0.0, 0.0)
+        # Padded-cut masking: on the stacked workload axis a grid cut index
+        # beyond this model's own cut range addresses padding, not a real
+        # partition — poison *every* channel (adds an exact 0.0 for the
+        # in-range cuts, so single-model grids are bitwise unaffected).
+        pad = jnp.where(cut <= n_all, 0.0, jnp.nan)
+        invalid = invalid + pad
 
         total = (p_camera + p_utsv + p_mipi + p_sensor_compute
                  + p_sensor_memory + p_agg_compute + p_agg_memory)
         return {
-            "avg_power": total,
-            "camera": p_camera,
-            "utsv": p_utsv,
-            "mipi": p_mipi,
-            "sensor_compute": p_sensor_compute,
-            "sensor_memory": p_sensor_memory,
-            "agg_compute": p_agg_compute,
-            "agg_memory": p_agg_memory,
+            "avg_power": total + pad,
+            "camera": p_camera + pad,
+            "utsv": p_utsv + pad,
+            "mipi": p_mipi + pad,
+            "sensor_compute": p_sensor_compute + pad,
+            "sensor_memory": p_sensor_memory + pad,
+            "agg_compute": p_agg_compute + pad,
+            "agg_memory": p_agg_memory + pad,
             "mipi_bytes_per_s": mipi_bps + invalid,
             "sensor_macs_per_s": (jnp.where(has_sensor, macs_s * ncam, 0.0)
                                   + invalid),
@@ -247,16 +272,89 @@ def config_kernel(model: A.ModelArrays | None = None):
     arguments index the model's tables (``ModelArrays.node_index`` /
     ``arrays.WEIGHT_MEM_KINDS``); every float argument is differentiable —
     :mod:`repro.core.optimize` drives ``jax.grad`` through it for the
-    continuous-knob search.
+    continuous-knob search.  (Internally the kernel is the stacked
+    multi-model one with the model coordinate pinned to 0.)
     """
     M = model if model is not None else A.model_arrays()
-    return _make_config_fn(M)
+    fn = _make_config_fn(A.stack_model_arrays((M,)))
+    return functools.partial(fn, 0)
 
 
 @functools.lru_cache(maxsize=16)
-def _compiled_kernel(M: A.ModelArrays):
-    """One jit(vmap(kernel)) per model lowering (cached by identity)."""
-    return jax.jit(jax.vmap(_make_config_fn(M)))
+def _compiled_kernel(S: A.StackedModelArrays):
+    """One jit(vmap(kernel)) per stacked lowering (cached by identity).
+
+    The vmapped signature is ``(model_i, cut, agg_i, sen_i, wm_i,
+    detnet_fps, keynet_fps, num_cameras, mipi_energy_scale, camera_fps)``
+    over equal-length flat arrays — exactly what both the dense meshgrid
+    path here and the chunked decode of :mod:`repro.core.stream` produce.
+    """
+    return jax.jit(jax.vmap(_make_config_fn(S)))
+
+
+def vmapped_kernel(S: A.StackedModelArrays):
+    """The un-jitted vmapped kernel (for embedding in a larger jit, e.g.
+    the fused chunk-reduction step of :func:`repro.core.stream.stream_grid`)."""
+    return jax.vmap(_make_config_fn(S))
+
+
+# ---------------------------------------------------------------------------
+# Flat-index coordinate decoding (shared with the streaming executor)
+# ---------------------------------------------------------------------------
+
+
+def decode_flat_index(shape: Sequence[int], flat):
+    """Mixed-radix decode of C-order flat indices into per-axis indices.
+
+    Pure arithmetic — no coordinate meshes are ever materialized, so the
+    cost is O(n_axes) per index regardless of grid size.  ``flat`` may be
+    a Python int, a numpy array, or a traced jax array (the streaming
+    executor runs this decode on-device per chunk); returns one index per
+    axis, in axis order.
+    """
+    strides = []
+    s = 1
+    for size in reversed(shape):
+        strides.append(s)
+        s *= int(size)
+    strides.reverse()
+    return tuple((flat // stride) % size
+                 for stride, size in zip(strides, shape))
+
+
+def config_from_flat(shape: Sequence[int],
+                     axes: "OrderedDict[str, tuple]",
+                     flat_index: int) -> dict:
+    """Axis values of one flat C-order grid index — the single
+    ``config_at`` implementation behind both the dense ``SweepResult``
+    and the streaming ``StreamResult`` (their flat indices are
+    interchangeable by construction)."""
+    n = int(np.prod(shape))
+    if not 0 <= flat_index < n:
+        raise IndexError(f"flat index {flat_index} outside [0, {n})")
+    idx = decode_flat_index(shape, int(flat_index))
+    return {name: vals[i] for (name, vals), i in zip(axes.items(), idx)}
+
+
+def _fully_invalid_axis_values(nan_mask: np.ndarray,
+                               axes: "OrderedDict[str, tuple]") -> list[str]:
+    """``name=value`` notes for axis values whose whole hyperplane is NaN."""
+    notes = []
+    for ax, (name, vals) in enumerate(axes.items()):
+        for i, v in enumerate(vals):
+            if np.take(nan_mask, i, axis=ax).all():
+                notes.append(f"{name}={v!r}")
+    return notes
+
+
+def invalid_message(field: str, notes: Sequence[str]) -> str:
+    """Shared all-invalid error text (dense and streaming paths)."""
+    detail = ("; fully-invalid axis values: " + ", ".join(notes)
+              if notes else "")
+    return (f"every grid configuration is invalid (all-NaN) in channel "
+            f"{field!r} — check the weight_mem / sensor_node combinations "
+            f"against the available memory test vehicles and the cut range "
+            f"of each stacked model{detail}")
 
 
 # ---------------------------------------------------------------------------
@@ -269,7 +367,9 @@ class SweepResult:
     """Dense grid of Eq. 1/2 evaluations.
 
     ``axes`` maps axis name -> the axis values (in grid order); every array
-    in ``data`` has shape ``tuple(len(v) for v in axes.values())``.
+    in ``data`` has shape ``tuple(len(v) for v in axes.values())``.  Grids
+    evaluated with a stacked workload batch carry a leading ``model`` axis
+    before the nine knob axes.
     """
 
     axes: "OrderedDict[str, tuple]"
@@ -298,65 +398,107 @@ class SweepResult:
         return self.data["mipi_bytes_per_s"]
 
     def config_at(self, flat_index: int) -> dict:
-        """Axis values of one flat grid index."""
-        idx = np.unravel_index(flat_index, self.shape)
-        return {name: vals[i]
-                for (name, vals), i in zip(self.axes.items(), idx)}
+        """Axis values of one flat grid index (arithmetic decode — no
+        coordinate meshes)."""
+        return config_from_flat(self.shape, self.axes, flat_index)
 
     def argmin(self, field: str = "avg_power") -> dict:
-        """Best (lowest-``field``) configuration; NaN entries ignored."""
+        """Best (lowest-``field``) configuration; NaN entries ignored.
+
+        Raises a :class:`ValueError` naming the fully-invalid axis values
+        when *every* grid corner is NaN in ``field`` (e.g. an MRAM-only
+        grid on a node with no MRAM test vehicle).
+        """
         arr = self.data[field]
-        if np.isnan(arr).all():
-            raise ValueError(
-                "every grid corner is invalid (all-NaN) — check the "
-                "weight_mem / sensor_node combinations against the "
-                "available memory test vehicles")
+        nan = np.isnan(arr)
+        if nan.all():
+            raise ValueError(invalid_message(
+                field, _fully_invalid_axis_values(nan, self.axes)))
         flat = int(np.nanargmin(arr))
         out = self.config_at(flat)
         out[field] = float(self.data[field].ravel()[flat])
         return out
 
+    def top_k(self, field: str = "avg_power", k: int = 4) -> list[dict]:
+        """The ``k`` best (lowest-``field``) configurations, best first.
+
+        Ties are broken by flat grid index (matching :meth:`argmin` and
+        the streaming executor); NaN entries never appear.  Returns fewer
+        than ``k`` entries when the grid has fewer valid configurations.
+        """
+        vals = self.data[field].ravel().copy()
+        nan = np.isnan(vals)
+        if nan.all():
+            raise ValueError(invalid_message(
+                field, _fully_invalid_axis_values(np.isnan(self.data[field]),
+                                                  self.axes)))
+        vals[nan] = np.inf
+        order = np.argsort(vals, kind="stable")[:k]
+        out = []
+        for flat in order:
+            if not np.isfinite(vals[flat]):
+                break
+            cfg = self.config_at(int(flat))
+            cfg[field] = float(vals[flat])
+            out.append(cfg)
+        return out
+
+    def channel_bounds(self, field: str) -> tuple[float, float]:
+        """(min, max) of the finite entries of one channel."""
+        vals = self.data[field].ravel()
+        finite = vals[np.isfinite(vals)]
+        if finite.size == 0:
+            raise ValueError(invalid_message(
+                field, _fully_invalid_axis_values(np.isnan(self.data[field]),
+                                                  self.axes)))
+        return float(finite.min()), float(finite.max())
+
     def breakdown_at(self, flat_index: int) -> dict[str, float]:
         return {f: float(self.data[f].ravel()[flat_index]) for f in FIELDS}
 
 
-def _node_axis(M: A.ModelArrays,
+def _node_axis(S: A.StackedModelArrays,
                nodes: Sequence[str | TechNode]) -> tuple[np.ndarray, tuple]:
-    idx = np.asarray([M.node_index(n) for n in nodes], np.int32)
+    idx = np.asarray([S.node_index(n) for n in nodes], np.int32)
     labels = tuple(n if isinstance(n, str) else n.name for n in nodes)
     return idx, labels
 
 
-def evaluate_grid(cuts: Optional[Iterable[int]] = None,
-                  agg_nodes: Sequence[str | TechNode] = ("7nm",),
-                  sensor_nodes: Sequence[str | TechNode] = ("7nm",),
-                  weight_mems: Sequence[str] = ("sram",),
-                  detnet_fps: Sequence[float] = (DETNET_FPS,),
-                  keynet_fps: Sequence[float] = (KEYNET_FPS,),
-                  num_cameras: Sequence[float] = (NUM_CAMERAS,),
-                  mipi_energy_scale: Sequence[float] = (1.0,),
-                  camera_fps: Sequence[float] = (CAMERA_FPS,),
-                  detnet: NNWorkload | None = None,
-                  keynet: NNWorkload | None = None,
-                  model: A.ModelArrays | None = None) -> SweepResult:
-    """Evaluate Eqs. 1-11 over the cartesian product of the given axes.
+def build_axes(cuts=None, agg_nodes=("7nm",), sensor_nodes=("7nm",),
+               weight_mems=("sram",), detnet_fps=(DETNET_FPS,),
+               keynet_fps=(KEYNET_FPS,), num_cameras=(NUM_CAMERAS,),
+               mipi_energy_scale=(1.0,), camera_fps=(CAMERA_FPS,),
+               detnet=None, keynet=None, model=None, models=None):
+    """Validate and lower the grid axes (shared by dense and streaming).
 
-    One compiled device call for the whole grid (post first-call jit
-    compile, which is cached per workload pair).  ``cuts=None`` selects
-    every legal partition point.  Returns a :class:`SweepResult` whose
-    arrays are indexed ``[cut, agg, sensor, wmem, dfps, kfps, ncam,
-    mipi_scale, cam_fps]``.
+    Returns ``(S, axis_arrays, axes)`` where ``S`` is the stacked model
+    lowering, ``axis_arrays`` are the per-axis kernel index/value arrays
+    *including a leading model axis* (singleton when ``models`` is not
+    given), and ``axes`` is the user-facing axis dict — which includes
+    ``model`` only when a workload batch was requested, so single-model
+    results keep their 9-axis shape.
     """
-    M = model if model is not None else A.model_arrays(detnet, keynet)
+    if models is not None:
+        if model is not None or detnet is not None or keynet is not None:
+            raise ValueError("pass either models= or a single "
+                             "detnet/keynet/model, not both")
+        S = (models if isinstance(models, A.StackedModelArrays)
+             else A.stacked_model_arrays(models))
+    elif model is not None:
+        S = A.stack_model_arrays((model,))
+    else:
+        S = A.stack_model_arrays((A.model_arrays(detnet, keynet),))
 
+    model_ax = np.arange(S.n_models, dtype=np.int32)
     if cuts is None:
-        cut_ax = np.arange(M.n_cuts, dtype=np.int32)
+        cut_ax = np.arange(S.n_cuts_max, dtype=np.int32)
     else:
         cut_ax = np.asarray(list(cuts), np.int32)
-        if cut_ax.size and (cut_ax.min() < 0 or cut_ax.max() >= M.n_cuts):
-            raise ValueError(f"cuts outside [0, {M.n_cuts - 1}]")
-    agg_idx, agg_labels = _node_axis(M, agg_nodes)
-    sen_idx, sen_labels = _node_axis(M, sensor_nodes)
+        if cut_ax.size and (cut_ax.min() < 0
+                            or cut_ax.max() >= S.n_cuts_max):
+            raise ValueError(f"cuts outside [0, {S.n_cuts_max - 1}]")
+    agg_idx, agg_labels = _node_axis(S, agg_nodes)
+    sen_idx, sen_labels = _node_axis(S, sensor_nodes)
     for m in weight_mems:
         if m not in A.WEIGHT_MEM_KINDS:
             raise ValueError(f"unknown weight_mem {m!r}; "
@@ -372,38 +514,82 @@ def evaluate_grid(cuts: Optional[Iterable[int]] = None,
         raise ValueError(  # matches the scalar evaluate_cut semantics
             "num_cameras must be integers >= 1")
 
-    axis_arrays = [cut_ax, agg_idx, sen_idx, wm_idx, *float_axes]
-    shape = tuple(a.size for a in axis_arrays)
-    if 0 in shape:
+    axis_arrays = [model_ax, cut_ax, agg_idx, sen_idx, wm_idx, *float_axes]
+    if 0 in (a.size for a in axis_arrays):
         raise ValueError("every grid axis needs at least one value")
+    labels = (tuple(int(c) for c in cut_ax), agg_labels, sen_labels,
+              tuple(weight_mems), tuple(float_axes[0]), tuple(float_axes[1]),
+              tuple(float_axes[2]), tuple(float_axes[3]),
+              tuple(float_axes[4]))
+    if models is not None:
+        axes = OrderedDict(zip((MODEL_AXIS,) + AXIS_NAMES,
+                               (S.model_names,) + labels))
+    else:
+        axes = OrderedDict(zip(AXIS_NAMES, labels))
+    return S, axis_arrays, axes
+
+
+def evaluate_grid(cuts: Optional[Iterable[int]] = None,
+                  agg_nodes: Sequence[str | TechNode] = ("7nm",),
+                  sensor_nodes: Sequence[str | TechNode] = ("7nm",),
+                  weight_mems: Sequence[str] = ("sram",),
+                  detnet_fps: Sequence[float] = (DETNET_FPS,),
+                  keynet_fps: Sequence[float] = (KEYNET_FPS,),
+                  num_cameras: Sequence[float] = (NUM_CAMERAS,),
+                  mipi_energy_scale: Sequence[float] = (1.0,),
+                  camera_fps: Sequence[float] = (CAMERA_FPS,),
+                  detnet: NNWorkload | None = None,
+                  keynet: NNWorkload | None = None,
+                  model: A.ModelArrays | None = None,
+                  models=None) -> SweepResult:
+    """Evaluate Eqs. 1-11 over the cartesian product of the given axes.
+
+    One compiled device call for the whole grid (post first-call jit
+    compile, which is cached per workload batch).  ``cuts=None`` selects
+    every legal partition point.  Returns a :class:`SweepResult` whose
+    arrays are indexed ``[cut, agg, sensor, wmem, dfps, kfps, ncam,
+    mipi_scale, cam_fps]`` — with a leading ``model`` axis when ``models``
+    (a workload batch, see :func:`repro.core.arrays.stacked_model_arrays`)
+    is given.  Memory is O(grid); for spaces that do not fit, use the
+    streaming executor :func:`repro.core.stream.stream_grid`.
+    """
+    S, axis_arrays, axes = build_axes(
+        cuts, agg_nodes, sensor_nodes, weight_mems, detnet_fps, keynet_fps,
+        num_cameras, mipi_energy_scale, camera_fps, detnet, keynet, model,
+        models)
+    shape = tuple(len(v) for v in axes.values())
     grids = np.meshgrid(*axis_arrays, indexing="ij")
     flat = [g.ravel() for g in grids]
 
     with enable_x64():
-        out = _compiled_kernel(M)(*map(jnp.asarray, flat))
+        out = _compiled_kernel(S)(*map(jnp.asarray, flat))
         data = {k: np.asarray(v).reshape(shape) for k, v in out.items()}
-
-    axes = OrderedDict(zip(AXIS_NAMES, (
-        tuple(int(c) for c in cut_ax), agg_labels, sen_labels,
-        tuple(weight_mems), tuple(float_axes[0]), tuple(float_axes[1]),
-        tuple(float_axes[2]), tuple(float_axes[3]), tuple(float_axes[4]))))
     return SweepResult(axes=axes, data=data)
 
 
 def scalar_axes(kw: Mapping) -> dict:
-    """Map ``partition.evaluate_cut``-style scalar kwargs onto singleton
-    grid axes — the one place the kwarg↔axis correspondence is written
-    down (shared by :func:`evaluate_one` and
-    ``partition.optimal_partition``)."""
+    """Map ``partition.evaluate_cut``-style kwargs onto grid axes — the
+    one place the kwarg↔axis correspondence is written down (shared by
+    :func:`evaluate_one` and ``partition.optimal_partition``).  Scalar
+    values become singleton axes; a list/tuple/array value passes through
+    as a whole axis, which is how ``optimal_partition`` grows single-knob
+    calls into grid (and, past the size threshold, streaming) searches."""
+    def ax(name, default):
+        v = kw.get(name, default)
+        if v is None:
+            v = default
+        return (tuple(v) if isinstance(v, (list, tuple, np.ndarray))
+                else (v,))
+
     return dict(
-        agg_nodes=(kw.get("agg_node", "7nm"),),
-        sensor_nodes=(kw.get("sensor_node", "7nm"),),
-        weight_mems=(kw.get("sensor_weight_mem", "sram"),),
-        detnet_fps=(kw.get("detnet_fps", DETNET_FPS),),
-        keynet_fps=(kw.get("keynet_fps", KEYNET_FPS),),
-        num_cameras=(kw.get("num_cameras", NUM_CAMERAS),),
-        mipi_energy_scale=(kw.get("mipi_energy_scale", 1.0),),
-        camera_fps=(kw.get("camera_fps", CAMERA_FPS),),
+        agg_nodes=ax("agg_node", "7nm"),
+        sensor_nodes=ax("sensor_node", "7nm"),
+        weight_mems=ax("sensor_weight_mem", "sram"),
+        detnet_fps=ax("detnet_fps", DETNET_FPS),
+        keynet_fps=ax("keynet_fps", KEYNET_FPS),
+        num_cameras=ax("num_cameras", NUM_CAMERAS),
+        mipi_energy_scale=ax("mipi_energy_scale", 1.0),
+        camera_fps=ax("camera_fps", CAMERA_FPS),
         detnet=kw.get("detnet"), keynet=kw.get("keynet"))
 
 
@@ -412,6 +598,13 @@ def evaluate_one(cut: int, **kw) -> dict[str, float]:
 
     Scalar keyword arguments match ``partition.evaluate_cut`` (``agg_node``,
     ``sensor_node``, ``sensor_weight_mem``, fps knobs, ...); returns the
-    kernel's field dict for that one point.
+    kernel's field dict for that one point.  Sequence-valued kwargs are
+    rejected — grid axes belong to :func:`evaluate_grid` (or
+    ``partition.optimal_partition``, which accepts them directly).
     """
+    seq = sorted(k for k, v in kw.items()
+                 if isinstance(v, (list, tuple, np.ndarray)))
+    if seq:
+        raise ValueError(f"evaluate_one takes scalar knobs only; {seq} "
+                         f"are sequences — use evaluate_grid for axes")
     return evaluate_grid(cuts=(cut,), **scalar_axes(kw)).breakdown_at(0)

@@ -288,3 +288,47 @@ class TestEngineMechanics:
                                    weight_mems=("mram",))
         with pytest.raises(ValueError, match="invalid"):
             grid.argmin()
+
+    def test_argmin_all_nan_names_the_invalid_axes(self):
+        """The error must say *which* axis values are fully invalid, not
+        just that a nanargmin failed."""
+        grid = sweep.evaluate_grid(cuts=(1, 2), sensor_nodes=("7nm",),
+                                   weight_mems=("mram",))
+        with pytest.raises(ValueError) as ei:
+            grid.argmin()
+        msg = str(ei.value)
+        assert "weight_mem='mram'" in msg and "sensor_node='7nm'" in msg
+        with pytest.raises(ValueError, match="mram"):
+            grid.top_k()
+        with pytest.raises(ValueError, match="mram"):
+            grid.channel_bounds("avg_power")
+
+    def test_pareto_front_all_invalid_raises(self):
+        from repro.core import pareto
+        grid = sweep.evaluate_grid(cuts=(1, 2), sensor_nodes=("7nm",),
+                                   weight_mems=("mram",))
+        with pytest.raises(ValueError, match="invalid"):
+            pareto.pareto_front(grid)
+
+    def test_top_k_matches_stable_argsort(self):
+        grid = sweep.evaluate_grid(sensor_nodes=("7nm", "16nm"),
+                                   weight_mems=("sram", "mram"))
+        got = grid.top_k("avg_power", 5)
+        vals = grid.avg_power.ravel().copy()
+        vals[np.isnan(vals)] = np.inf
+        order = np.argsort(vals, kind="stable")[:5]
+        assert [c["avg_power"] for c in got] == [float(vals[i])
+                                                for i in order]
+        assert got[0] == grid.argmin() | {"avg_power": got[0]["avg_power"]}
+
+    def test_config_at_uses_arithmetic_decode(self):
+        """config_at must agree with decode_flat_index (the streamer's
+        shared decode) — no coordinate meshes involved."""
+        grid = sweep.evaluate_grid(cuts=(0, 5, 9), sensor_nodes=("7nm",
+                                                                 "16nm"),
+                                   detnet_fps=(5.0, 30.0))
+        for flat in (0, 5, grid.n_configs - 1):
+            idx = sweep.decode_flat_index(grid.shape, flat)
+            expect = {name: vals[i] for (name, vals), i
+                      in zip(grid.axes.items(), idx)}
+            assert grid.config_at(flat) == expect

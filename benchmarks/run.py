@@ -16,7 +16,9 @@ Emits ``name,value,derived`` CSV rows:
                     RSS at 10^5..10^7 configs (snapshots BENCH_stream.json)
 
 ``--smoke`` runs the fast CI gate instead: tiny grids, asserting exact
-streaming/dense parity (argmin, top-k, Pareto front, counts) and stacked-
+streaming/dense parity (argmin, top-k, Pareto front, counts), async
+double-buffered pipeline parity across prefetch depths, compiled
+``constraints=`` masking vs the dense host post-filter, and stacked-
 workload parity end-to-end — perf-path regressions fail CI, not just
 benchmark runs.
 """
@@ -73,6 +75,32 @@ def smoke_rows():
                int(np.isfinite(dense.data[f]).sum())
                for f in sweep.FIELDS), "validity counts drifted"
 
+    # Async double-buffered pipeline: prefetch depths (0 = synchronous
+    # reference) must not change a single result.
+    piped = stream.stream_grid(**grid_kw, chunk_size=97, prefetch=4)
+    sync = stream.stream_grid(**grid_kw, chunk_size=97, prefetch=0)
+    for r in (piped, sync):
+        assert all(r.argmin(o) == dense.argmin(o)
+                   for o in r.objectives), "async pipeline drifted"
+        pf = r.pareto_front()
+        assert np.array_equal(pf.indices, df.indices) and \
+            np.array_equal(pf.values, df.values), "async front drifted"
+
+    # Compiled constraint predicates == dense host post-filter, exactly.
+    lat_budget = float(np.nanquantile(dense.data["latency"], 0.5))
+    cons = {"latency": lat_budget}
+    constrained = stream.stream_grid(**grid_kw, chunk_size=97,
+                                    constraints=cons, prefetch=4)
+    dense_con = dense.constrain(cons)
+    assert constrained.argmin() == dense_con.argmin(), \
+        "constrained argmin drifted from host post-filter"
+    cf, dcf = constrained.pareto_front(), pareto.pareto_front(dense_con)
+    assert np.array_equal(cf.indices, dcf.indices) and \
+        np.array_equal(cf.values, dcf.values), "constrained front drifted"
+    assert constrained.finite_counts["latency"] == \
+        int(np.isfinite(dense_con.data["latency"]).sum()), \
+        "feasible counts drifted"
+
     # Stacked-workload axis: every model row reproduces its own grid.
     det, key = build_detnet(), build_keynet()
     pairs = ((det, key), (det.scaled(0.5), key))
@@ -93,6 +121,10 @@ def smoke_rows():
     return [
         ("smoke.stream_dense_parity", 1.0,
          f"argmin/top-k/front/counts exact on {dense.n_configs} configs"),
+        ("smoke.async_pipeline_parity", 1.0,
+         "prefetch 0/4 exact vs dense (double-buffered path)"),
+        ("smoke.constrained_parity", 1.0,
+         f"compiled latency<= {lat_budget:.3g} mask == dense post-filter"),
         ("smoke.stacked_parity", 1.0,
          f"{len(pairs)} stacked models <=1e-6 vs single grids"),
         ("smoke.front_size", float(sf.size), "reference-front members"),

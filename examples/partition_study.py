@@ -16,6 +16,9 @@ section below is one batched device call instead of a scalar Python loop:
 * a streaming ~1M-config sweep (`stream.stream_grid`): the grid is
   never materialized — chunks are decoded/evaluated on device and
   folded into running argmin/top-k/front reductions,
+* a constrained sweep: a latency budget + MIPI link cap compiled into
+  the streaming chunk step (`constraints=`), filtering infeasible
+  configurations before the front is extracted,
 * architecture x partition co-design over a batched workload axis
   (`models=`: DetNet/KeyNet variants swept inside one compiled kernel),
 * gradient knob search: projected Adam driving jax.grad through the
@@ -144,6 +147,43 @@ def streaming_sweep():
           f"(merged incrementally, grid never materialized)")
 
 
+def constrained_sweep():
+    print("\n== constrained streaming sweep: latency budget + link cap ==")
+    # Feasibility predicates compile into the chunk step: infeasible
+    # configurations are masked on-device before any reduction, so the
+    # argmin / top-k / Pareto front below are over the feasible set only
+    # (exactly what a dense post-filter would produce, without ever
+    # materializing the grid).
+    axes = dict(sensor_nodes=("7nm", "16nm"), weight_mems=("sram", "mram"),
+                detnet_fps=tuple(np.linspace(5.0, 30.0, 26)),
+                camera_fps=tuple(np.linspace(20.0, 60.0, 36)))
+    budget = {"latency": ("<=", 12e-3),            # end-to-end budget
+              "mipi_bytes_per_s": ("<=", 3e6)}     # link provisioning cap
+    free = stream.stream_grid(**axes, prefetch=4)
+    res = stream.stream_grid(**axes, constraints=budget, prefetch=4)
+    n_free = free.finite_counts["avg_power"]
+    n_feas = res.finite_counts["avg_power"]
+    print(f"  feasible: {n_feas:,} of {n_free:,} valid configs "
+          f"(latency <= 12 ms, MIPI <= 3 MB/s)")
+    best_free, best = free.argmin(), res.argmin()
+    print(f"  unconstrained best: cut {best_free['cut']} "
+          f"{best_free['avg_power']*1e3:.3f} mW")
+    print(f"  feasible best     : cut {best['cut']} "
+          f"@{best['sensor_node']}/{best['weight_mem']} "
+          f"detfps={best['detnet_fps']:g} -> "
+          f"{best['avg_power']*1e3:.3f} mW")
+    print(f"  feasible front    : {res.front_indices.size} members "
+          f"(vs {free.front_indices.size} unconstrained) — filtered "
+          f"before front extraction, on-device")
+    # The same machinery drives the scalar-search API end to end (the
+    # default 30 fps cameras bottom out at ~14.7 ms, so the budget here
+    # is looser than the streaming sweep's, which also opened camera_fps):
+    win = partition.optimal_partition(sensor_node=("7nm", "16nm"),
+                                      constraints={"latency": 15e-3})
+    print(f"  optimal_partition(constraints=...): {win.label}, "
+          f"{win.latency*1e3:.2f} ms, {win.avg_power*1e3:.3f} mW")
+
+
 def architecture_search():
     print("\n== batched workload axis: architecture x partition ==")
     det, key = build_detnet(), build_keynet()
@@ -178,6 +218,7 @@ if __name__ == "__main__":
     sweep_mipi_energy()
     pareto_study()
     streaming_sweep()
+    constrained_sweep()
     architecture_search()
     knob_search()
     report_winner()

@@ -225,7 +225,8 @@ def _is_axis(v) -> bool:
 
 
 def optimal_partition(engine: str = "array",
-                      objective: str = "avg_power", **kw) -> PartitionPoint:
+                      objective: str = "avg_power",
+                      constraints=None, **kw) -> PartitionPoint:
     """Optimal partition point along one objective (Fig. 2 generalized).
 
     ``objective`` selects which channel is minimized over the cut axis —
@@ -233,6 +234,16 @@ def optimal_partition(engine: str = "array",
     sweep; ``latency`` and ``mipi_bytes_per_s`` are the other two headline
     claims).  For trade-offs *between* the objectives use
     :func:`repro.core.pareto.pareto_front` instead of a scalar argmin.
+
+    ``constraints`` restricts the search to feasible configurations
+    (see :func:`repro.core.sweep.parse_constraints` — e.g.
+    ``constraints={"latency": 1e-3}`` for a latency budget, or
+    ``("mipi_bytes_per_s <= 1e9",)`` for a link cap).  On the dense grid
+    engines the predicates post-filter the channels
+    (``SweepResult.constrain``); on the streaming path they are compiled
+    into the chunk step, so huge constrained searches stay
+    memory-bounded.  Raises :class:`ValueError` when no configuration is
+    feasible.
 
     Any knob may also be a *sequence* (e.g. ``sensor_node=("7nm",
     "16nm")``, ``detnet_fps=np.linspace(5, 30, 50)``, or an explicit
@@ -259,6 +270,18 @@ def optimal_partition(engine: str = "array",
         # map, so a misspelled knob would otherwise be dropped silently.
         raise TypeError(f"unknown knobs {unknown_kw}; have {sorted(known)}")
     from . import sweep as _sweep
+
+    cons = _sweep.parse_constraints(constraints)
+
+    def constrained_argmin(res):
+        if cons:
+            res = res.constrain(cons)
+            if not np.isfinite(res.data[objective]).any():
+                raise ValueError(
+                    "no configuration satisfies constraints ("
+                    + ", ".join(f"{f} {op} {v:g}" for f, op, v in cons)
+                    + ") — loosen the constraints or widen the knobs")
+        return res.argmin(objective)
 
     cuts = kw.pop("cuts", None)
     if cuts is not None:
@@ -298,9 +321,10 @@ def optimal_partition(engine: str = "array",
         if n_configs > STREAM_THRESHOLD:
             from . import stream as _stream
             win = _stream.stream_grid(
-                cuts=cuts, objectives=(objective,), **axes).argmin(objective)
+                cuts=cuts, objectives=(objective,), constraints=cons,
+                **axes).argmin(objective)
         else:
-            win = _sweep.evaluate_grid(cuts=cuts, **axes).argmin(objective)
+            win = constrained_argmin(_sweep.evaluate_grid(cuts=cuts, **axes))
         scalar_kw = {_AXIS_TO_KWARG[name]: win[name]
                      for name in _AXIS_TO_KWARG}
         scalar_kw["num_cameras"] = int(scalar_kw["num_cameras"])
@@ -320,5 +344,21 @@ def optimal_partition(engine: str = "array",
             f"{_resolve_node(kw.get('sensor_node', '7nm')).name}")
     if engine == "array" and agg is not None and sen is not None:
         res = _sweep.evaluate_grid(**_sweep.scalar_axes(kw))
-        return evaluate_cut(res.argmin(field=objective)["cut"], **kw)
-    return min(sweep_partitions(**kw), key=lambda p: getattr(p, objective))
+        return evaluate_cut(constrained_argmin(res)["cut"], **kw)
+    points = sweep_partitions(**kw)
+    if cons:
+        # The scalar path only carries the objective scalars, so
+        # constraint channels must be PartitionPoint attributes.
+        for field, _, _ in cons:
+            if not hasattr(points[0], field):
+                raise ValueError(
+                    f"constraint channel {field!r} is not available on "
+                    f"the scalar engine; use engine='array'")
+        points = [p for p in points
+                  if all(_sweep.CONSTRAINT_OPS[op](getattr(p, f), v)
+                         for f, op, v in cons)]
+        if not points:
+            raise ValueError(
+                "no cut satisfies constraints ("
+                + ", ".join(f"{f} {op} {v:g}" for f, op, v in cons) + ")")
+    return min(points, key=lambda p: getattr(p, objective))

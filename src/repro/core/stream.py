@@ -5,31 +5,40 @@ product — host coordinate meshes on the way in, eleven dense channel
 grids on the way out — so memory is O(grid) and a 9-axis space at
 realistic resolution (10⁷–10⁹ configurations) is unreachable.  This
 module replaces that with a **streaming executor** over the *same*
-compiled Eq. 1-11 kernel:
+compiled Eq. 1-11 kernel, with every per-chunk reduction fused into the
+device step so the host never sees a full channel array:
 
 * **Device-side coordinate decoding** — each chunk starts from a flat
   index range; the mixed-radix decode of
   :func:`repro.core.sweep.decode_flat_index` runs on-device, so no
   coordinate arrays are ever materialized anywhere.
-* **Fixed-size donated chunks** — one cached, jit-compiled step decodes
-  and evaluates a chunk and folds it into a running device carry
-  (argmin, validity counts, channel bounds per tracked channel).  The
-  carry is donated back to the device each step, so the reduction state
-  never reallocates; only the tracked channel rows leave the device
-  (untracked kernel outputs are dead-code-eliminated, which is a large
-  part of why streaming keeps up with the dense path while doing
-  strictly more work).
-* **Exact host merges** — top-k per objective (gated on the chunk
-  actually beating the running k-th best, so it is ~free in steady
-  state), optional histograms, and an **incremental Pareto front**: a
-  subsampled-front dominance pre-filter discards almost every point;
-  the rare survivors are buffered and merged exactly with
-  :func:`repro.core.pareto.merge_fronts`.  Host memory stays
-  O(chunk + front) for any grid size, and argmin/top-k/front are
-  *exactly* the dense-path results.
+* **Fused on-device reductions** — one cached, jit-compiled step decodes
+  and evaluates a chunk and folds it into a donated running device carry:
+  argmin, feasibility counts and channel bounds per tracked channel,
+  per-objective **top-k** (chunk ``lax.top_k`` merged against the running
+  ``(n_obj, k)`` table with an exact two-key sort), optional histograms,
+  and the Pareto **dominance pre-filter**
+  (:func:`repro.core.pareto.dominance_filter_mask`, traced on-device).
+  Each step returns only a *compacted survivor set* — the few candidate
+  front rows (flat indices + objective values) the filter could not
+  discard — instead of ``(n_fields, chunk)`` channel arrays, so
+  device→host traffic is O(survivors) per chunk.
+* **Compiled constraint predicates** — ``constraints=`` (e.g. a latency
+  budget or a MIPI link cap, see
+  :func:`repro.core.sweep.parse_constraints`) are masked inside the chunk
+  step before any reduction: every result — argmin, top-k, counts,
+  bounds, histograms, front — is over the *feasible* set, identical to
+  host post-filtering the dense grid (``SweepResult.constrain``).
+* **Async double-buffered pipeline** — a producer thread drives the
+  chunk chain (XLA releases the GIL while a step executes) with
+  ``prefetch=`` chunk results in flight, so the host-side exact front
+  merges (filter pre-cull + :func:`_merge_into_front`) hide under
+  device compute.  Host memory stays O(chunk + front) for any grid
+  size, and argmin/top-k/front are *exactly* the dense-path results.
 * **Sharding** — with more than one device the chunk stream is split
   across devices via ``jax.pmap`` (one carry per device, merged once at
-  the end), so kernel throughput scales with the device count.
+  the end), with the same prefetch pipeline, so kernel throughput scales
+  with the device count.
 * **Batched workload axis** — ``models=`` stacks architecture variants
   (see :func:`repro.core.arrays.stacked_model_arrays`) into a leading
   grid axis evaluated inside the same kernel, for SplitNets-style
@@ -37,16 +46,21 @@ compiled Eq. 1-11 kernel:
 
 The dense path remains the right tool for small grids where the full
 per-channel arrays are wanted (heatmaps, reporting); the two paths are
-pinned exactly equal — argmin, top-k, and Pareto front — by
-``tests/test_stream.py`` and the ``benchmarks/run.py --smoke`` CI gate.
+pinned exactly equal — argmin, top-k, and Pareto front, with and without
+constraints, across prefetch depths — by ``tests/test_stream.py`` and
+the ``benchmarks/run.py --smoke`` CI gate.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 import time
 from collections import OrderedDict
+from queue import Empty as _Empty
+from queue import Full as _Full
+from queue import Queue as _Queue
 from typing import Iterable, Mapping, Optional, Sequence
 
 import numpy as np
@@ -62,12 +76,22 @@ from .constants import (CAMERA_FPS, DETNET_FPS, KEYNET_FPS, NUM_CAMERAS,
                         TechNode)
 from .workloads import NNWorkload
 
-#: Default flat-index chunk evaluated per device per step.
-DEFAULT_CHUNK = 1 << 18
+#: Default flat-index chunk evaluated per device per step.  The executor
+#: clamps the chunk to the (quantized) grid size so small grids never pay
+#: for padded lanes.  2¹⁷ keeps the chunk's working set inside CPU
+#: caches — the same fused step runs ~1.6× more configs/s than at 2¹⁸
+#: (measured), and the finer chunking pipelines better.
+DEFAULT_CHUNK = 1 << 17
 
-_FILTER_ROWS = 24      # front subsample rows in the dominance pre-filter
+#: Default number of chunks kept in flight ahead of the host merges.
+DEFAULT_PREFETCH = 2
+
+_FILTER_ROWS = 24      # explicit front rows in the dominance pre-filter
+_FILTER_BINS = 256     # quantile bins of the prefix-min dominance table
+_SURVIVOR_CAP = 16384  # per-chunk compacted-survivor capacity
 _PROBE = 4096          # strided probe (front seed + histogram ranges)
-_MERGE_EVERY = 8192    # host candidate-buffer size that triggers a merge
+_MERGE_EVERY = 4096    # candidate-buffer size that triggers an exact merge
+_CHUNK_QUANTUM = 4096  # chunk sizes are clamped to multiples of this
 _STEP_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
 _STEP_CACHE_MAX = 32
 
@@ -82,11 +106,13 @@ class StreamResult:
     """Reductions of one streamed sweep (never the dense grid itself).
 
     Holds O(front + k + axes) state: per-channel argmin winners, top-k
-    tables for the tracked objectives, validity counts, channel bounds,
-    optional histograms, and the exact Pareto front.  ``axes`` matches
-    :class:`~repro.core.sweep.SweepResult` (including the optional leading
-    ``model`` axis), and flat indices are interchangeable with the dense
-    path, so :meth:`config_at` decodes identically.
+    tables for the tracked objectives, feasibility counts, channel
+    bounds, optional histograms, and the exact Pareto front.  ``axes``
+    matches :class:`~repro.core.sweep.SweepResult` (including the
+    optional leading ``model`` axis), and flat indices are
+    interchangeable with the dense path, so :meth:`config_at` decodes
+    identically.  When the sweep ran with ``constraints=``, every
+    reduction is over the *feasible* subset only.
     """
 
     axes: "OrderedDict[str, tuple]"
@@ -97,8 +123,8 @@ class StreamResult:
 
     min_val: Mapping[str, float]          # per tracked channel: lowest value
     min_idx: Mapping[str, int]            # ... and its flat index
-    finite_counts: Mapping[str, int]      # valid-config counts (exact)
-    channel_min: Mapping[str, float]      # finite min / max per channel
+    finite_counts: Mapping[str, int]      # feasible-config counts (exact)
+    channel_min: Mapping[str, float]      # feasible min / max per channel
     channel_max: Mapping[str, float]
     #: Valid-config counts per axis value from the strided probe pass —
     #: diagnostics for the all-invalid error messages, not exact tallies.
@@ -112,6 +138,9 @@ class StreamResult:
 
     hist: Optional[Mapping[str, tuple[np.ndarray, np.ndarray]]]
     stats: Mapping[str, float]
+    #: Canonical ``(field, op, bound)`` predicates compiled into the chunk
+    #: step (empty when the sweep was unconstrained).
+    constraints: tuple[tuple[str, str, float], ...] = ()
 
     @property
     def shape(self) -> tuple[int, ...]:
@@ -133,23 +162,47 @@ class StreamResult:
                                                 self.axis_valid.values())
                 for i in np.flatnonzero(counts == 0)]
 
+    def _all_invalid_error(self, field: str) -> ValueError:
+        if self.constraints:
+            preds = ", ".join(f"{f} {op} {v:g}"
+                              for f, op, v in self.constraints)
+            return ValueError(
+                f"no grid configuration is feasible in channel {field!r} "
+                f"under constraints ({preds}) — loosen the constraints or "
+                f"widen the grid axes")
+        return ValueError(SW.invalid_message(field, self._invalid_notes()))
+
     def argmin(self, field: str = "avg_power") -> dict:
-        """Best (lowest-``field``) configuration — dense-argmin equal."""
+        """Best (lowest-``field``) feasible configuration.
+
+        Exactly the dense-path ``SweepResult.argmin``: the *first*
+        minimum wins, i.e. ties break toward the lower flat grid index
+        (matching ``np.nanargmin`` on the dense channel array).  Raises
+        :class:`ValueError` when every configuration is invalid
+        (all-NaN) in ``field`` — naming the fully-invalid axis values —
+        or, under ``constraints=``, when no configuration is feasible.
+        """
         if field not in self.min_val:
             raise ValueError(
                 f"channel {field!r} was not tracked; this stream reduced "
                 f"{sorted(self.min_val)} — re-run stream_grid with "
                 f"track=({field!r},) or track='all'")
         if self.finite_counts[field] == 0:
-            raise ValueError(SW.invalid_message(field, self._invalid_notes()))
+            raise self._all_invalid_error(field)
         out = self.config_at(self.min_idx[field])
         out[field] = self.min_val[field]
         return out
 
     def top_k(self, field: str) -> list[dict]:
-        """The k best configurations of one tracked objective, best first
-        (k was fixed at :func:`stream_grid` time; ties break toward the
-        lower flat index, matching the dense ``SweepResult.top_k``)."""
+        """The k best feasible configurations of one tracked objective,
+        best first (k was fixed at :func:`stream_grid` time).
+
+        Tie-breaking matches the dense ``SweepResult.top_k`` exactly:
+        equal objective values order by ascending flat grid index (a
+        stable sort over (value, flat index)).  Invalid (NaN) and
+        constraint-infeasible configurations never appear; fewer than k
+        entries come back when the feasible set is smaller than k.
+        """
         if field not in self.objectives:
             raise ValueError(f"top-k tracks only {self.objectives}; "
                              f"re-run stream_grid with {field!r} in "
@@ -165,16 +218,19 @@ class StreamResult:
         return out
 
     def channel_bounds(self, field: str) -> tuple[float, float]:
-        """(min, max) of the finite entries of one channel (the protocol
-        :meth:`repro.core.pareto.ParetoFront.hypervolume` prices against)."""
+        """(min, max) of the feasible entries of one channel (the
+        protocol :meth:`repro.core.pareto.ParetoFront.hypervolume` prices
+        against).  Raises :class:`ValueError` on all-invalid (or
+        all-infeasible) channels, like :meth:`argmin`."""
         if self.finite_counts[field] == 0:
-            raise ValueError(SW.invalid_message(field, self._invalid_notes()))
+            raise self._all_invalid_error(field)
         return self.channel_min[field], self.channel_max[field]
 
     def pareto_front(self) -> P.ParetoFront:
         """The exact non-dominated set as a regular
         :class:`~repro.core.pareto.ParetoFront` (identical — indices and
-        values — to ``pareto.pareto_front`` on the dense grid)."""
+        values — to ``pareto.pareto_front`` on the dense grid, post
+        ``SweepResult.constrain`` when constraints were given)."""
         sign0 = -1.0 if self.objectives[0] in self.maximize else 1.0
         order = np.argsort(self.front_values[:, 0] * sign0, kind="stable")
         return P.ParetoFront(
@@ -188,21 +244,43 @@ class StreamResult:
 # ---------------------------------------------------------------------------
 
 
-def _build_step(S, shape, n_total, chunk, fields, n_dev, devices):
-    """Evaluate one decoded chunk and fold it into the device carry.
+def _build_step(S, shape, n_total, chunk, fields, d, k, sign, cons_static,
+                hist_bins, n_dev, devices):
+    """Evaluate one decoded chunk and fold every reduction into the
+    device carry.
 
-    Returns the tracked channel rows ``F`` (``(n_fields, chunk)``) for the
-    host-side top-k / Pareto merges.  Axis-value arrays are *arguments*
-    (not closure constants), so the compiled step is reusable across
-    grids with the same axis sizes — the cache below makes repeated
-    sweeps compile-free, like the dense ``_compiled_kernel``.
+    All per-chunk work is fused here: constraint masking, argmin /
+    feasibility counts / channel bounds, the running per-objective top-k
+    table, optional histograms, and the Pareto dominance pre-filter.
+    The step returns only the compacted survivor set ``(flat indices,
+    objective rows, count)`` — O(survivors), not O(chunk), leaves the
+    device.  Axis values, constraint bounds and the filter state are
+    *arguments* (not closure constants), so the compiled step is
+    reusable across grids with the same axis sizes and across filter
+    refreshes — the cache below makes repeated sweeps compile-free.
     """
     kernel = SW.vmapped_kernel(S)
     # int32 decode arithmetic when the flat index space fits — int64
     # div/mod is measurably slower on CPU.
     small = n_total + chunk * n_dev < 2**31
+    sign_j = np.asarray(sign)
+    cap = min(_SURVIVOR_CAP, chunk)
+    # Block layout for the two-stage reductions: XLA CPU lowers a plain
+    # full-axis reduce (and especially lax.top_k) over 2¹⁸ lanes as a
+    # scalar loop; reducing (B, W) blocks stage-wise vectorizes, and the
+    # exact top-k needs only the k best blocks (~100× faster than
+    # lax.top_k on the whole chunk, measured).
+    W = min(512, chunk)
+    B = -(-chunk // W)
+    pad = B * W - chunk
+    nb = min(k, B)
 
-    def step(carry, axvals, start):
+    def blocks(x, fill):
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad)), constant_values=fill)
+        return x.reshape(x.shape[0], B, W)
+
+    def step(carry, axvals, aux, start):
         flat = start + jnp.arange(chunk, dtype=jnp.int64)
         ingrid = flat < n_total
         # Mixed-radix decode (the shared sweep.decode_flat_index, traced
@@ -214,14 +292,24 @@ def _build_step(S, shape, n_total, chunk, fields, n_dev, devices):
         out = kernel(*[v[c] for v, c in zip(axvals, coords)])
 
         F = jnp.stack([out[f] for f in fields])            # (nf, chunk)
-        valid = jnp.isfinite(F) & ingrid[None, :]
+        # Without the barrier XLA fuses the (expensive) kernel body into
+        # every reduction that consumes F, re-evaluating it several times
+        # per chunk; the barrier forces one materialization.
+        F = jax.lax.optimization_barrier(F)
+        feas = ingrid
+        for ci, (fi, op) in enumerate(cons_static):
+            # NaN channel values compare False, so invalid configurations
+            # are infeasible under any predicate.
+            feas = feas & SW.CONSTRAINT_OPS[op](F[fi], aux["cons"][ci])
+        valid = jnp.isfinite(F) & feas[None, :]
         Fm = jnp.where(valid, F, jnp.inf)
 
         # Running argmin per channel; ties toward the lower flat index
-        # (jnp.argmin returns the first minimum, matching np.nanargmin).
-        loc = jnp.argmin(Fm, axis=1)
-        lv = Fm.min(axis=1)          # == Fm[:, loc] — doubles as chunk fmin
-        li = flat[loc]
+        # (the flat-index min over the minima, matching np.nanargmin's
+        # first-minimum rule).
+        lv = blocks(Fm, jnp.inf).min(axis=2).min(axis=1)
+        li = blocks(jnp.where(Fm == lv[:, None], flat[None, :], n_total),
+                    n_total).min(axis=2).min(axis=1)
         # isfinite guard: an all-invalid chunk ties at inf == inf and must
         # not swap the sentinel min_idx for an invalid config's index.
         better = (lv < carry["min_val"]) | ((lv == carry["min_val"])
@@ -230,44 +318,109 @@ def _build_step(S, shape, n_total, chunk, fields, n_dev, devices):
         new_carry = {
             "min_val": jnp.where(better, lv, carry["min_val"]),
             "min_idx": jnp.where(better, li, carry["min_idx"]),
-            "finite": carry["finite"] + valid.sum(axis=1),
+            "finite": carry["finite"] + blocks(
+                valid.astype(jnp.int32), 0).sum(axis=2).sum(axis=1),
             "fmin": jnp.minimum(carry["fmin"], lv),
             "fmax": jnp.maximum(
-                carry["fmax"], jnp.where(valid, F, -jnp.inf).max(axis=1)),
+                carry["fmax"],
+                blocks(jnp.where(valid, F, -jnp.inf),
+                       -jnp.inf).max(axis=2).max(axis=1)),
         }
-        return new_carry, F
+
+        # Fused exact top-k.  The k best (value, flat index) pairs of the
+        # chunk live in the k best blocks ranked by (block min, block
+        # index): any element of a lower-ranked block is beaten by >= k
+        # strictly smaller pairs (each better block's min element — lower
+        # value, or equal value at a strictly lower flat index, since
+        # blocks are contiguous index ranges).  lax.top_k over the B
+        # block-mins breaks ties toward the lower block, the gathered
+        # k·W candidates merge against the running (d, k) table with an
+        # exact two-key sort.
+        Fsg = (Fm[:d] if (sign_j == 1.0).all()
+               else jnp.where(valid[:d], F[:d] * sign_j[:, None], jnp.inf))
+        Mb = blocks(Fsg, jnp.inf)                          # (d, B, W)
+        _, bidx = jax.lax.top_k(-Mb.min(axis=2), nb)       # (d, nb)
+        gath = jnp.take_along_axis(Mb, bidx[:, :, None], axis=1)
+        gpos = (bidx[:, :, None] * W
+                + jnp.arange(W, dtype=jnp.int64)[None, None, :])
+        cand_v = jnp.concatenate(
+            [carry["topk_val"], gath.reshape(d, nb * W)], axis=1)
+        cand_i = jnp.concatenate(
+            [carry["topk_idx"], start + gpos.reshape(d, nb * W)], axis=1)
+        sv, si = jax.lax.sort((cand_v, cand_i), dimension=-1, num_keys=2)
+        new_carry["topk_val"] = sv[:, :k]
+        new_carry["topk_idx"] = si[:, :k]
+
+        if hist_bins:
+            he = aux["hist_edges"]                         # (d, bins+1)
+            hist = carry["hist"]
+            for oi in range(d):
+                col = jnp.clip(F[oi], he[oi, 0], he[oi, -1])
+                b = jnp.clip(
+                    jnp.searchsorted(he[oi], col, side="right") - 1,
+                    0, hist_bins - 1)
+                hist = hist.at[oi, b].add(valid[oi].astype(hist.dtype))
+            new_carry["hist"] = hist
+
+        # Device-side dominance pre-filter + compaction: only the rows
+        # the filter cannot prove dominated leave the device.  Compaction
+        # is a binary search over the keep-count prefix sum (an order of
+        # magnitude faster than an XLA CPU scatter); the count is
+        # returned so the host can detect (rare) capacity overflow and
+        # re-derive that chunk's survivors exactly.
+        keep = P.dominance_filter_mask(aux["filter"], Fsg, xp=jnp)
+        csum = jnp.cumsum(keep.astype(jnp.int32))
+        pos = jnp.minimum(
+            jnp.searchsorted(csum, jnp.arange(1, cap + 1, dtype=jnp.int32),
+                             side="left"),
+            chunk - 1)
+        surv = (start + pos.astype(jnp.int64), F[:d, pos].T, csum[-1])
+        return new_carry, surv
 
     if n_dev > 1:
-        return jax.pmap(step, donate_argnums=(0,), in_axes=(0, None, 0),
-                        devices=devices)
+        # Every argument is device-mapped: the executor pre-replicates
+        # the axis values and filter state (device_put_replicated), so no
+        # argument is re-sharded per call.
+        return jax.pmap(step, donate_argnums=(0,),
+                        in_axes=(0, 0, 0, 0), devices=devices)
     return jax.jit(step, donate_argnums=(0,))
 
 
-def _cached_step(S, shape, n_total, chunk, fields, n_dev, devices):
+def _cached_step(S, shape, n_total, chunk, fields, d, k, sign, cons_static,
+                 hist_bins, n_dev, devices):
     # S is hashed by identity (frozen, eq=False); keying on the object
     # itself (not id()) keeps it alive so a recycled id can never alias
     # a stale compiled step.
-    key = (S, shape, chunk, fields, n_dev,
-           tuple(str(d) for d in devices or ()))
+    key = (S, shape, chunk, fields, d, k, tuple(sign), cons_static,
+           hist_bins, min(_SURVIVOR_CAP, chunk), n_dev,
+           tuple(str(dv) for dv in devices or ()))
     fn = _STEP_CACHE.get(key)
     if fn is None:
-        fn = _build_step(S, shape, n_total, chunk, fields, n_dev, devices)
+        fn = _build_step(S, shape, n_total, chunk, fields, d, k, sign,
+                         cons_static, hist_bins, n_dev, devices)
         _STEP_CACHE[key] = fn
         while len(_STEP_CACHE) > _STEP_CACHE_MAX:
             _STEP_CACHE.popitem(last=False)
     return fn
 
 
-def _init_carry(n_total, n_fields):
-    # Strong dtypes throughout: a weak-typed init carry would retrace the
-    # step on its second call (outputs come back strong-typed).
-    return {
-        "min_val": jnp.full((n_fields,), jnp.inf, jnp.float64),
-        "min_idx": jnp.full((n_fields,), n_total, jnp.int64),
-        "finite": jnp.zeros((n_fields,), jnp.int64),
-        "fmin": jnp.full((n_fields,), jnp.inf, jnp.float64),
-        "fmax": jnp.full((n_fields,), -jnp.inf, jnp.float64),
+def _init_carry(n_total, n_fields, d, k, hist_bins):
+    # Built as numpy and shipped with one batched device_put by the
+    # caller — and with strong dtypes throughout: a weak-typed init carry
+    # would retrace the step on its second call (outputs come back
+    # strong-typed).
+    carry = {
+        "min_val": np.full((n_fields,), np.inf),
+        "min_idx": np.full((n_fields,), n_total, np.int64),
+        "finite": np.zeros((n_fields,), np.int64),
+        "fmin": np.full((n_fields,), np.inf),
+        "fmax": np.full((n_fields,), -np.inf),
+        "topk_val": np.full((d, k), np.inf),
+        "topk_idx": np.full((d, k), n_total, np.int64),
     }
+    if hist_bins:
+        carry["hist"] = np.zeros((d, hist_bins), np.int64)
+    return carry
 
 
 # ---------------------------------------------------------------------------
@@ -275,151 +428,57 @@ def _init_carry(n_total, n_fields):
 # ---------------------------------------------------------------------------
 
 
-class _TopK:
-    """Running exact top-k per objective over (signed value, flat index).
+def _np_undominated(cand_sg: np.ndarray, wit_sg: np.ndarray) -> np.ndarray:
+    """Candidates (signed ``(n, d)``) no witness row strictly dominates —
+    the exact vectorized cull behind :func:`_merge_into_front`.  Built
+    from per-column 2-D broadcasts (witness-blocked): a (n, w, d) 3-D
+    broadcast materializes d× the temporaries and is several times
+    slower at these shapes."""
+    keep = np.ones(cand_sg.shape[0], bool)
+    d = cand_sg.shape[1]
+    for lo in range(0, wit_sg.shape[0], 512):
+        blk = wit_sg[lo:lo + 512]
+        le = blk[:, None, 0] <= cand_sg[None, :, 0]
+        lt = blk[:, None, 0] < cand_sg[None, :, 0]
+        for c in range(1, d):
+            le &= blk[:, None, c] <= cand_sg[None, :, c]
+            lt |= blk[:, None, c] < cand_sg[None, :, c]
+        keep &= ~(le & lt).any(axis=0)
+    return keep
 
-    Chunk extraction is gated on ``x <= kth`` — after the table tightens
-    (a few chunks in) almost every chunk skips in one vectorized compare.
-    Ties break toward the lower flat index, matching ``np.argsort(...,
-    kind='stable')`` on the dense grid.
+
+def _merge_into_front(front_v, front_i, cat_v, cat_i, sign):
+    """Exactly merge pre-filtered candidates into the running front.
+
+    Equivalent to :func:`repro.core.pareto.merge_fronts` but exploits the
+    invariant that ``front`` is already mutually non-dominated: entrants
+    are culled against the front, then against each other, then surviving
+    entrants evict any front member they dominate — three small
+    vectorized passes instead of re-scanning the whole union.  Rows stay
+    sorted by flat index, so tie order matches the dense path exactly.
     """
-
-    def __init__(self, n_obj: int, k: int, n_total: int):
-        self.k = k
-        self.val = np.full((n_obj, k), np.inf)
-        self.idx = np.full((n_obj, k), n_total, np.int64)
-
-    def update(self, oi: int, x: np.ndarray, base: np.int64):
-        kth = self.val[oi, -1]
-        sel = np.flatnonzero(x <= kth)       # NaN compares False: excluded
-        if sel.size == 0:
-            return
-        if sel.size > 4 * self.k:
-            # Large entrant set (warmup): shrink exactly via a partition.
-            xv = x[sel]
-            kthv = np.partition(xv, self.k - 1)[self.k - 1]
-            sel = sel[xv <= kthv]
-        cv = np.concatenate([self.val[oi], x[sel]])
-        ci = np.concatenate([self.idx[oi], base + sel.astype(np.int64)])
-        order = np.lexsort((ci, cv))[:self.k]
-        self.val[oi] = cv[order]
-        self.idx[oi] = ci[order]
+    if cat_v.shape[0] == 0:
+        return front_v, front_i
+    cat_sg = cat_v * sign
+    if front_v.shape[0]:
+        front_sg = front_v * sign
+        keep_c = _np_undominated(cat_sg, front_sg)
+        cat_v, cat_i, cat_sg = cat_v[keep_c], cat_i[keep_c], cat_sg[keep_c]
+        if cat_v.shape[0] == 0:
+            return front_v, front_i
+        keep_c = P.non_dominated_mask(cat_sg)
+        cat_v, cat_i, cat_sg = cat_v[keep_c], cat_i[keep_c], cat_sg[keep_c]
+        keep_f = _np_undominated(front_sg, cat_sg)
+        V = np.concatenate([front_v[keep_f], cat_v])
+        I = np.concatenate([front_i[keep_f], cat_i])
+    else:
+        keep = P.non_dominated_mask(cat_sg)
+        V, I = cat_v[keep], cat_i[keep]
+    order = np.argsort(I, kind="stable")
+    return V[order], I[order]
 
 
-def _filter_rows(front_signed: np.ndarray, rows: int, d: int) -> np.ndarray:
-    """Subsample the running front into the fixed-size dominance filter.
-
-    Rows are drawn at quantiles of the front sorted along *every*
-    objective (not just the first) — a front with hundreds of members
-    spreads differently along each trade-off axis, and a filter that only
-    walks the first objective leaves holes that flood the host merge with
-    false survivors.
-    """
-    filt = np.full((rows, d), np.inf)
-    k = front_signed.shape[0]
-    if k == 0:
-        return filt
-    if k <= rows:
-        filt[:k] = front_signed
-        return filt
-    per = max(1, rows // d)
-    picks: list = []
-    for col in range(d):
-        order = np.argsort(front_signed[:, col], kind="stable")
-        picks.extend(order[np.round(np.linspace(0, k - 1, per))
-                           .astype(int)])
-    take = np.unique(np.asarray(picks))[:rows]
-    filt[:take.size] = front_signed[take]
-    return filt
-
-
-def _undominated(Osg: np.ndarray, filt: np.ndarray) -> np.ndarray:
-    """Finite rows of ``Osg`` (signed ``(d, n)`` channel rows) that no
-    filter row dominates — unrolled over the few filter rows so every op
-    stays a flat vector pass."""
-    d = Osg.shape[0]
-    fin = np.isfinite(Osg[0])
-    for i in range(1, d):
-        fin &= np.isfinite(Osg[i])
-    dom = np.zeros(Osg.shape[1], bool)
-    for r in range(filt.shape[0]):
-        if not np.isfinite(filt[r, 0]):
-            break
-        le = filt[r, 0] <= Osg[0]
-        lt = filt[r, 0] < Osg[0]
-        for i in range(1, d):
-            le &= filt[r, i] <= Osg[i]
-            lt |= filt[r, i] < Osg[i]
-        dom |= le & lt
-    return fin & ~dom
-
-
-class _FrontFilter:
-    """Dominance pre-filter against the running front.
-
-    Two sufficient conditions for "this point is dominated" (so discarding
-    is always exact; everything uncertain survives into the exact merge):
-
-    * a few explicit front rows (:func:`_filter_rows`), checked directly;
-    * for d <= 3, a quantile-binned 2-D prefix-min table over the front:
-      ``D[b1, b2]`` is the best (signed) first objective among front
-      members whose objective-1/2 values fall in a *strictly lower* bin
-      in both axes — ``D[pb1-1, pb2-1] <= p0`` therefore proves a member
-      with ``m0 <= p0, m1 < p1, m2 < p2`` exists, i.e. true domination.
-      This scales with front *shape*, not front size, which is what keeps
-      survivor counts (and the exact-merge cost) flat on grids whose
-      fronts grow into the hundreds of members.
-    """
-
-    def __init__(self, d: int, bins: int = 64):
-        self.d = d
-        self.bins = bins
-        self.rows = np.full((_FILTER_ROWS, d), np.inf)
-        self.edges = None
-        self.table = None
-
-    def rebuild(self, front_signed: np.ndarray):
-        self.rows = _filter_rows(front_signed, _FILTER_ROWS, self.d)
-        self.edges = self.table = None
-        k = front_signed.shape[0]
-        if not (2 <= self.d <= 3) or k < 8:
-            return
-        cols = list(range(1, self.d))
-        edges = [np.unique(np.quantile(front_signed[:, c],
-                                       np.linspace(0, 1, self.bins + 1)))
-                 for c in cols]
-        if any(e.size < 2 for e in edges):
-            return
-        dims = tuple(e.size for e in edges)
-        table = np.full(dims, np.inf)
-        bin_idx = [np.clip(np.searchsorted(e, front_signed[:, c],
-                                           side="right") - 1,
-                           0, e.size - 1)
-                   for e, c in zip(edges, cols)]
-        np.minimum.at(table, tuple(bin_idx), front_signed[:, 0])
-        for ax in range(table.ndim):
-            table = np.minimum.accumulate(table, axis=ax)
-        self.edges = edges
-        self.table = table
-
-    def undominated(self, Osg: np.ndarray) -> np.ndarray:
-        keep = _undominated(Osg, self.rows)
-        if self.table is None:
-            return keep
-        idx = []
-        ok = np.ones(Osg.shape[1], bool)
-        for e, row in zip(self.edges, Osg[1:]):
-            # Strictly-lower bin: a member binned below E[pb] has a value
-            # < E[pb] <= p, hence strictly smaller in that objective.
-            b = np.searchsorted(e, row, side="right") - 2
-            ok &= b >= 0
-            idx.append(np.clip(b, 0, e.size - 1))
-        dom = np.zeros(Osg.shape[1], bool)
-        dom[ok] = self.table[tuple(i[ok] for i in idx)] <= Osg[0][ok]
-        return keep & ~dom
-
-
-def _probe(S, axis_vals, shape, n_total, obj_fields, sign, hist_bins,
+def _probe(S, axis_vals, shape, n_total, obj_fields, sign, cons, hist_bins,
            hist_ranges):
     """Strided sample pass: seeds the front filter, histogram ranges and
     the per-axis-value validity diagnostics.
@@ -427,20 +486,28 @@ def _probe(S, axis_vals, shape, n_total, obj_fields, sign, hist_bins,
     The probe points are ordinary grid points evaluated through the same
     compiled kernel; they only ever *pre-filter* (the exact front is built
     solely from chunk survivors), so correctness never depends on probe
-    coverage.
+    coverage.  Constraint predicates mask the probe exactly like the
+    chunk step, so an infeasible probe point can never cull a feasible
+    candidate.  The seed rows are *not* reduced to their own front — a
+    dominated evaluated point is still an exact dominance witness, and
+    the quantile/prefix-min filter build only gets tighter with more
+    rows.
     """
-    m = int(min(_PROBE, n_total))
+    m = int(min(_PROBE, max(256, n_total // 128), n_total))
     flat = np.unique(np.linspace(0, n_total - 1, m).astype(np.int64))
     coords = SW.decode_flat_index(shape, flat)
     out = SW._compiled_kernel(S)(
-        *[jnp.asarray(a[c]) for a, c in zip(axis_vals, coords)])
+        *[a[c] for a, c in zip(axis_vals, coords)])
     O = np.stack([np.asarray(out[f]) for f in obj_fields], axis=1)
-    fin = np.isfinite(O).all(axis=1)
+    feas = np.ones(flat.size, bool)
+    with np.errstate(invalid="ignore"):
+        for f, op, v in cons:
+            feas &= SW.CONSTRAINT_OPS[op](np.asarray(out[f]), v)
+    fin = np.isfinite(O).all(axis=1) & feas
     axis_valid = tuple(np.bincount(c[fin], minlength=sz)
                        for c, sz in zip(coords, shape))
     seed = O[fin] * sign
     if seed.shape[0]:
-        seed = seed[P.non_dominated_mask(seed)]
         # The probe runs through the dense jit while chunks run through
         # the step jit; the two lowerings can disagree in the last ulp.
         # Pad the seed rows outward so a probe twin of a front point can
@@ -491,6 +558,8 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                 objectives: Sequence[str] = P.DEFAULT_OBJECTIVES,
                 maximize: Iterable[str] = (),
                 track: Optional[Sequence[str]] = None,
+                constraints=None,
+                prefetch: int = DEFAULT_PREFETCH,
                 hist_bins: int = 0,
                 hist_ranges: Optional[Mapping] = None,
                 devices: Optional[Sequence] = None) -> StreamResult:
@@ -507,8 +576,15 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
     the incremental Pareto front.  ``track`` adds further channels to the
     argmin/count/bounds reductions (or ``"all"`` for every kernel field)
     — untracked channels are dead-code-eliminated from the compiled step,
-    which is a large part of why streaming keeps pace with the dense
-    path, so track only what you need.  ``hist_bins`` adds per-objective
+    so track only what you need.  ``constraints`` compiles feasibility
+    predicates (:func:`repro.core.sweep.parse_constraints` — e.g.
+    ``{"latency": budget}``, ``{"mipi_bytes_per_s": ("<=", link_cap)}``
+    or ``("latency <= 1e-3",)``) into the chunk step: infeasible
+    configurations are masked before any reduction, matching a dense
+    ``SweepResult.constrain`` post-filter exactly; constrained channels
+    are tracked automatically.  ``prefetch`` keeps that many chunks in
+    flight ahead of the host merges (0 = fully synchronous) so merge
+    work overlaps device compute.  ``hist_bins`` adds per-objective
     histograms (ranges from ``hist_ranges`` or a strided probe pass, with
     out-of-range values clamped into the end bins).  ``devices`` shards
     the chunk stream across multiple JAX devices via ``pmap``.
@@ -528,7 +604,10 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
         extra: tuple = SW.FIELDS
     else:
         extra = tuple(track) if track is not None else ()
-    fields = objectives + tuple(f for f in extra if f not in objectives)
+    cons = SW.parse_constraints(constraints)
+    extra = extra + tuple(f for f, _, _ in cons)
+    fields = objectives + tuple(dict.fromkeys(
+        f for f in extra if f not in objectives))
     unknown = [o for o in fields if o not in SW.FIELDS]
     if unknown:
         raise ValueError(f"unknown objective channels {unknown}; "
@@ -538,120 +617,255 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
         raise ValueError(f"maximize entries {stray} not in objectives")
     sign = np.where([o in maximize for o in objectives], -1.0, 1.0)
     d = len(objectives)
+    cons_static = tuple((fields.index(f), op) for f, op, _ in cons)
+    prefetch = max(0, int(prefetch))
 
     dev_list = list(devices) if devices is not None else jax.local_devices()
     n_dev = max(1, len(dev_list))
-    chunk = max(1, int(chunk_size))
     k = max(1, min(int(top_k), n_total))
+    # Clamp the chunk to the quantized per-device need: a 10⁵-config grid
+    # must not pay for a 2.6×-padded 2¹⁸ chunk, and quantizing keeps the
+    # compiled-step cache hot across nearby grid sizes.
+    chunk = max(1, int(chunk_size), k)
+    per_dev = -(-n_total // n_dev)
+    chunk = min(chunk, -(-per_dev // _CHUNK_QUANTUM) * _CHUNK_QUANTUM)
+    cap = min(_SURVIVOR_CAP, chunk)
     per_step = chunk * n_dev
     n_steps = math.ceil(n_total / per_step)
 
     t0 = time.perf_counter()
     with enable_x64():
         seed_signed, hist_edges, axis_valid = _probe(
-            S, axis_vals, full_shape, n_total, objectives, sign,
+            S, axis_vals, full_shape, n_total, objectives, sign, cons,
             hist_bins, hist_ranges)
 
-        run = _cached_step(S, full_shape, n_total, chunk, fields, n_dev,
+        run = _cached_step(S, full_shape, n_total, chunk, fields, d, k,
+                           sign, cons_static, hist_bins, n_dev,
                            dev_list if n_dev > 1 else None)
-        axvals_j = tuple(jnp.asarray(a) for a in axis_vals)
-        carry = _init_carry(n_total, len(fields))
+        # One batched device_put per pytree — per-leaf jnp.asarray calls
+        # cost ~10 ms of pure dispatch per stream on small grids.  With
+        # several devices, broadcast state is replicated up front so the
+        # pmap path never re-shards an argument per step.
         if n_dev > 1:
+            put = (lambda t: jax.device_put_replicated(t, dev_list))
+        else:
+            dev_target = dev_list[0] if devices is not None else None
+            put = (lambda t: jax.device_put(t, dev_target))
+        axvals_j = put(tuple(axis_vals))
+        carry = _init_carry(n_total, len(fields), d, k, hist_bins)
+        if n_dev > 1:
+            # Stacked on host; the first pmap call shards it, later calls
+            # donate the already-sharded buffers.
             carry = jax.tree_util.tree_map(
-                lambda x: jnp.stack([x] * n_dev), carry)
-        elif devices is not None:
-            # A single explicit device: commit the operands there so the
-            # jit path honors devices= just like the pmap path does.
-            axvals_j = jax.device_put(axvals_j, dev_list[0])
-            carry = jax.device_put(carry, dev_list[0])
+                lambda x: np.stack([x] * n_dev), carry)
+        else:
+            carry = put(carry)
 
-        topk = _TopK(d, k, n_total)
-        front_vals = np.empty((0, d))       # natural orientation
+        front_vals = np.empty((0, d))       # running exact front, natural
         front_idx = np.empty((0,), np.int64)
-        buf_vals: list = []                 # pending front candidates —
-        buf_idx: list = []                  # merged in batches, not per chunk
+        buf_vals: list = []                 # pending front candidates
+        buf_idx: list = []
         buf_n = 0
-        ffilt = _FrontFilter(d)
-        hist_counts = (np.zeros((d, hist_bins), np.int64) if hist_bins
-                       else None)
+        filt_np: dict = {}                  # host mirror of the device filter
+        aux_extra = {}
+        if cons:
+            aux_extra["cons"] = put(
+                np.asarray([v for _, _, v in cons], np.float64))
+        if hist_bins:
+            aux_extra["hist_edges"] = put(hist_edges)
+        aux = dict(aux_extra)
+        # Pre-cull the probe seed toward its near-front subset once: the
+        # filter build draws quantile bins and spread rows from the rows
+        # it is given, and a mostly-dominated cloud drags both toward the
+        # data mass instead of the front envelope (culls measurably
+        # worse).  Filter-based culling is exact, so this is quality-only.
+        if seed_signed.shape[0] > 4 * _FILTER_ROWS:
+            f0 = P.build_dominance_filter(seed_signed, d, _FILTER_ROWS,
+                                          _FILTER_BINS)
+            seed_signed = seed_signed[P.dominance_filter_mask(
+                f0, np.ascontiguousarray(seed_signed.T), xp=np)]
         t_first = None
+        t_wait = 0.0
+        t_host = 0.0
+        n_fallback = 0
 
-        def refresh_filter():
+        def rebuild_filter():
+            nonlocal filt_np, aux
             base = np.concatenate([front_vals * sign, seed_signed]) \
                 if seed_signed.size else front_vals * sign
-            ffilt.rebuild(base)
+            filt_np = P.build_dominance_filter(base, d, _FILTER_ROWS,
+                                               _FILTER_BINS)
+            aux = dict(aux_extra, filter=put(filt_np))
 
-        def flush():
+        def merge(final=False):
+            # Fold the candidate buffer into the running exact front.  In
+            # the pipelined path this runs while the producer thread is
+            # inside XLA on the next chunks, so its cost hides under
+            # device compute; the filter-based pre-cull keeps the exact
+            # dominance passes to a few hundred rows.
             nonlocal front_vals, front_idx, buf_vals, buf_idx, buf_n
             if buf_n:
                 cat_v = np.concatenate(buf_vals)
                 cat_i = np.concatenate(buf_idx)
-                if front_vals.shape[0] and cat_v.shape[0] > 64:
-                    # Exact pre-cull against the *full* running front (its
-                    # members are chunk-evaluated values, so discarding
-                    # dominated candidates here loses nothing) — keeps the
-                    # n·log-ish merge below from ever seeing the bulk.
-                    keep = _undominated(
-                        np.ascontiguousarray((cat_v * sign).T),
-                        front_vals * sign)
-                    cat_v, cat_i = cat_v[keep], cat_i[keep]
-                front_vals, front_idx = P.merge_fronts(
-                    front_vals, front_idx, cat_v, cat_i, sign)
+                cat_sg = cat_v * sign
+                base = np.concatenate([front_vals * sign, cat_sg,
+                                       seed_signed])
+                f = P.build_dominance_filter(base, d, _FILTER_ROWS,
+                                             _FILTER_BINS)
+                keep = P.dominance_filter_mask(
+                    f, np.ascontiguousarray(cat_sg.T), xp=np)
+                front_vals, front_idx = _merge_into_front(
+                    front_vals, front_idx, cat_v[keep], cat_i[keep], sign)
                 buf_vals, buf_idx, buf_n = [], [], 0
-            refresh_filter()
+            if not final:
+                rebuild_filter()
 
-        refresh_filter()
-        for si in range(n_steps):
-            start = si * per_step
-            if n_dev > 1:
-                carry, F = run(carry, axvals_j,
-                               jnp.asarray(start + chunk * np.arange(n_dev),
-                                           jnp.int64))
-                F_blocks = np.asarray(F)
-            else:
-                carry, F = run(carry, axvals_j, jnp.int64(start))
-                F_blocks = np.asarray(F)[None]
+        def host_chunk_survivors(dstart, vlen):
+            # Survivor-capacity overflow (warmup-only in practice): fetch
+            # nothing from the device — re-derive this chunk's survivors
+            # exactly from a host re-evaluation through the dense kernel,
+            # with the same constraint mask and (host-mirror) pre-filter.
+            flat = np.arange(dstart, dstart + vlen, dtype=np.int64)
+            coords = SW.decode_flat_index(full_shape, flat)
+            out = SW._compiled_kernel(S)(
+                *[jnp.asarray(a[c]) for a, c in zip(axis_vals, coords)])
+            O = np.stack([np.asarray(out[f]) for f in objectives])
+            feas = np.ones(vlen, bool)
+            with np.errstate(invalid="ignore"):
+                for f, op, v in cons:
+                    feas &= SW.CONSTRAINT_OPS[op](np.asarray(out[f]), v)
+            Osg = np.where(feas[None, :], O * sign[:, None], np.inf)
+            keep = P.dominance_filter_mask(filt_np, Osg, xp=np)
+            loc = np.flatnonzero(keep)
+            return flat[loc], O[:, loc].T
 
+        def process(item):
+            nonlocal buf_n, t_wait, t_host, t_first, n_fallback
+            start, surv = item
+            tw = time.perf_counter()
+            flat_s, val_s, cnt_s = (np.asarray(x) for x in surv)
+            t_wait += time.perf_counter() - tw
+            th = time.perf_counter()
+            if n_dev == 1:
+                flat_s, val_s = flat_s[None], val_s[None]
+                cnt_s = cnt_s[None]
             for di in range(n_dev):
                 dstart = start + chunk * di
-                vlen = min(chunk, max(0, n_total - dstart))
-                if vlen == 0:
+                vlen = min(chunk, n_total - dstart)
+                if vlen <= 0:
                     break
-                Fd = F_blocks[di][:, :vlen]
-                base_i = np.int64(dstart)
-                for oi in range(d):
-                    x = Fd[oi] if sign[oi] == 1.0 else Fd[oi] * sign[oi]
-                    topk.update(oi, x, base_i)
-                Osg = Fd[:d] if (sign == 1.0).all() else Fd[:d] * sign[:,
-                                                                       None]
-                cand = ffilt.undominated(Osg)
-                loc = np.flatnonzero(cand)
-                if loc.size:
-                    buf_vals.append(Fd[:d].T[loc])
-                    buf_idx.append(dstart + loc.astype(np.int64))
-                    buf_n += loc.size
-                if hist_counts is not None:
-                    for oi in range(d):
-                        col = Fd[oi]
-                        col = col[np.isfinite(col)]
-                        hist_counts[oi] += np.histogram(
-                            np.clip(col, hist_edges[oi][0],
-                                    hist_edges[oi][-1]),
-                            bins=hist_edges[oi])[0]
-            # An early first flush turns the chunk-0 survivors into a real
-            # running front, so the bin-table filter bites from chunk 1 on.
-            if buf_n >= _MERGE_EVERY or si == 0:
-                flush()
+                cnt = int(cnt_s[di])
+                if cnt > cap:
+                    n_fallback += 1
+                    fl, vv = host_chunk_survivors(dstart, vlen)
+                else:
+                    fl = flat_s[di][:cnt]
+                    vv = val_s[di][:cnt]
+                if len(fl):
+                    buf_idx.append(np.asarray(fl, np.int64))
+                    buf_vals.append(np.asarray(vv, np.float64))
+                    buf_n += len(fl)
+            if buf_n >= _MERGE_EVERY:
+                merge()
             if t_first is None:
-                jax.block_until_ready(carry["min_val"])
                 t_first = time.perf_counter() - t0
+            t_host += time.perf_counter() - th
 
-        flush()
+        def make_starts(si):
+            start = si * per_step
+            if n_dev > 1:
+                return jnp.asarray(start + chunk * np.arange(n_dev),
+                                   jnp.int64)
+            return jnp.int64(start)
+
+        rebuild_filter()                    # seed-only filter
+        if prefetch == 0 or n_steps == 1:
+            # Fully synchronous reference path (and the single-chunk fast
+            # path, where there is nothing to overlap).
+            for si in range(n_steps):
+                carry, surv = run(carry, axvals_j, aux, make_starts(si))
+                process((si * per_step, surv))
+                if si == 0 and n_steps > 1:
+                    merge()
+        else:
+            # Async double-buffered pipeline: a producer thread drives
+            # the chunk chain (XLA releases the GIL while a step
+            # executes, so the host merges below genuinely overlap
+            # device compute); the bounded queue keeps `prefetch` chunk
+            # results in flight.  The producer pauses after dispatching
+            # chunk 0 until its survivors have been folded into the
+            # filter, so every later chunk pre-filters against a real
+            # running front.
+            q: _Queue = _Queue(maxsize=prefetch)
+            filter_ready = threading.Event()
+            stop = threading.Event()
+            box: dict = {}
+
+            def put_or_stop(item):
+                # Never block forever: if the consumer died (exception in
+                # a merge), `stop` is set and the producer exits instead
+                # of leaking a thread wedged in q.put.
+                while not stop.is_set():
+                    try:
+                        q.put(item, timeout=0.05)
+                        return True
+                    except _Full:
+                        continue
+                return False
+
+            def produce():
+                nonlocal carry
+                try:
+                    with enable_x64():
+                        for si in range(n_steps):
+                            if stop.is_set():
+                                break
+                            carry, surv = run(carry, axvals_j, aux,
+                                              make_starts(si))
+                            if not put_or_stop((si * per_step, surv)):
+                                break
+                            if si == 0:
+                                filter_ready.wait()
+                except BaseException as e:  # pragma: no cover - rethrown
+                    box["err"] = e
+                finally:
+                    put_or_stop(None)
+
+            th_prod = threading.Thread(target=produce, daemon=True,
+                                       name="stream-producer")
+            th_prod.start()
+            try:
+                first = True
+                while True:
+                    item = q.get()
+                    if item is None:
+                        break
+                    process(item)
+                    if first:
+                        merge()
+                        filter_ready.set()
+                        first = False
+            finally:
+                # Consumer is done (or raised): release the producer from
+                # any blocked put/wait and drain whatever it had in
+                # flight, then collect it — at most one chunk step runs
+                # to completion before it sees `stop`.
+                stop.set()
+                filter_ready.set()
+                while True:
+                    try:
+                        q.get_nowait()
+                    except _Empty:
+                        break
+                th_prod.join()
+            if "err" in box:
+                raise box["err"]
+        merge(final=True)
         carry = jax.tree_util.tree_map(np.asarray, carry)
     total_s = time.perf_counter() - t0
 
     if n_dev > 1:
-        carry = _merge_device_carries(carry)
+        carry = _merge_device_carries(carry, k)
     stats = {
         "n_configs": float(n_total),
         "n_chunks": float(n_steps),
@@ -662,11 +876,25 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
             (n_total - min(per_step, n_total))
             / max(total_s - (t_first or 0.0), 1e-9)
             if n_steps > 1 else n_total / max(total_s, 1e-9)),
+        # Pipeline accounting: host_merge_s is time spent in the exact
+        # merges/buffering; device_wait_s is time blocked fetching chunk
+        # survivors (≈ un-hidden device compute).  prefetch > 0 shrinks
+        # device_wait_s toward the critical path.
+        "host_merge_s": t_host,
+        "device_wait_s": t_wait,
+        "prefetch": float(prefetch),
+        "fallback_chunks": float(n_fallback),
     }
+
+    # Normalize the top-k table: entries past the feasible count keep the
+    # +inf sentinel value — point their indices at n_total too.
+    topk_val = carry["topk_val"] * sign[:, None]
+    topk_idx = np.where(np.isfinite(carry["topk_val"]), carry["topk_idx"],
+                        n_total)
 
     hist_out = None
     if hist_bins:
-        hist_out = {f: (hist_counts[oi].copy(), hist_edges[oi].copy())
+        hist_out = {f: (np.asarray(carry["hist"][oi]), hist_edges[oi].copy())
                     for oi, f in enumerate(objectives)}
     visible_axis_valid = (axis_valid[1:] if len(axis_valid) == len(axes) + 1
                           else axis_valid)     # drop hidden model axis
@@ -683,21 +911,34 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
         channel_max={f: float(carry["fmax"][i])
                      for i, f in enumerate(fields)},
         axis_valid=OrderedDict(zip(axes, visible_axis_valid)),
-        topk_val=topk.val * sign[:, None],
-        topk_idx=topk.idx,
+        topk_val=topk_val,
+        topk_idx=topk_idx,
         front_indices=front_idx, front_values=front_vals,
-        hist=hist_out, stats=stats)
+        hist=hist_out, stats=stats, constraints=cons)
 
 
-def _merge_device_carries(carry):
+def _merge_device_carries(carry, k):
     """Fold per-device reduction carries into one (host side, exact)."""
     mv, mi = carry["min_val"], carry["min_idx"]     # (ndev, nf)
     order = np.lexsort((mi, mv), axis=0)[0]         # per-field best device
     nf = mv.shape[1]
-    return {
+    merged = {
         "min_val": mv[order, np.arange(nf)],
         "min_idx": mi[order, np.arange(nf)],
         "finite": carry["finite"].sum(axis=0),
         "fmin": carry["fmin"].min(axis=0),
         "fmax": carry["fmax"].max(axis=0),
     }
+    tv, ti = carry["topk_val"], carry["topk_idx"]   # (ndev, d, k)
+    d = tv.shape[1]
+    cat_v = tv.transpose(1, 0, 2).reshape(d, -1)
+    cat_i = ti.transpose(1, 0, 2).reshape(d, -1)
+    out_v = np.empty((d, k))
+    out_i = np.empty((d, k), np.int64)
+    for oi in range(d):
+        order = np.lexsort((cat_i[oi], cat_v[oi]))[:k]
+        out_v[oi], out_i[oi] = cat_v[oi][order], cat_i[oi][order]
+    merged["topk_val"], merged["topk_idx"] = out_v, out_i
+    if "hist" in carry:
+        merged["hist"] = carry["hist"].sum(axis=0)
+    return merged

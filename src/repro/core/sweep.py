@@ -44,6 +44,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import operator
+import re
 from collections import OrderedDict
 from typing import Iterable, Mapping, Optional, Sequence
 
@@ -73,6 +75,85 @@ MODEL_AXIS = "model"
 FIELDS = ("avg_power", "camera", "utsv", "mipi", "sensor_compute",
           "sensor_memory", "agg_compute", "agg_memory", "mipi_bytes_per_s",
           "sensor_macs_per_s", "latency")
+
+#: Comparison operators a constraint predicate may use (see
+#: :func:`parse_constraints`), mapped to their array-compatible callables
+#: — ``operator.le`` etc. dispatch identically on numpy arrays and traced
+#: jax values, so the host post-filter and the streaming executor's
+#: in-kernel mask evaluate the same expression.
+CONSTRAINT_OPS: Mapping[str, callable] = {
+    "<=": operator.le, ">=": operator.ge, "<": operator.lt, ">": operator.gt}
+
+_CONSTRAINT_RE = re.compile(
+    r"\s*(\w+)\s*(<=|>=|<|>)\s*([-+]?[\d.]+(?:[eE][-+]?\d+)?)\s*")
+
+
+def parse_constraints(constraints) -> tuple[tuple[str, str, float], ...]:
+    """Canonicalize a constraint spec into ``((field, op, bound), ...)``.
+
+    Accepted forms (freely mixable in the iterable variants):
+
+    * a mapping ``{field: bound}`` — upper bounds, i.e. ``field <= bound``
+      (the common case: latency budgets, link caps);
+    * a mapping ``{field: (op, bound)}`` with ``op`` one of
+      :data:`CONSTRAINT_OPS`;
+    * an iterable of ``"field <= bound"`` strings or ``(field, op,
+      bound)`` tuples.
+
+    Fields must be kernel channels (:data:`FIELDS`).  A configuration is
+    *feasible* iff every predicate holds; NaN channel values (invalid
+    configurations) never satisfy a predicate, so infeasible and invalid
+    configurations are excluded identically.
+    """
+    if not constraints:
+        return ()
+    items: list[tuple[str, str, float]] = []
+    if isinstance(constraints, Mapping):
+        for field, spec in constraints.items():
+            if isinstance(spec, (tuple, list)):
+                if len(spec) != 2:
+                    raise ValueError(f"constraint {field!r}: expected "
+                                     f"(op, bound), got {spec!r}")
+                op, bound = spec
+            else:
+                op, bound = "<=", spec
+            items.append((field, op, bound))
+    else:
+        for c in constraints:
+            if isinstance(c, str):
+                m = _CONSTRAINT_RE.fullmatch(c)
+                if not m:
+                    raise ValueError(
+                        f"cannot parse constraint {c!r}; expected "
+                        f"'<field> <op> <value>' with op in "
+                        f"{tuple(CONSTRAINT_OPS)}")
+                items.append((m.group(1), m.group(2), m.group(3)))
+            else:
+                field, op, bound = c
+                items.append((field, op, bound))
+    out = []
+    for field, op, bound in items:
+        if field not in FIELDS:
+            raise ValueError(f"unknown constraint channel {field!r}; "
+                             f"have {FIELDS}")
+        if op not in CONSTRAINT_OPS:
+            raise ValueError(f"unknown constraint op {op!r}; "
+                             f"have {tuple(CONSTRAINT_OPS)}")
+        out.append((field, op, float(bound)))
+    return tuple(out)
+
+
+def constraint_mask(data: Mapping[str, np.ndarray],
+                    constraints) -> np.ndarray:
+    """Boolean feasibility mask of a channel dict under a constraint spec
+    (the host twin of the streaming executor's in-kernel predicate mask).
+    NaN channel values fail every predicate."""
+    cons = parse_constraints(constraints)
+    mask = np.ones(np.shape(next(iter(data.values()))), bool)
+    with np.errstate(invalid="ignore"):
+        for field, op, bound in cons:
+            mask &= CONSTRAINT_OPS[op](np.asarray(data[field]), bound)
+    return mask
 
 
 # ---------------------------------------------------------------------------
@@ -433,7 +514,15 @@ class SweepResult:
                 field, _fully_invalid_axis_values(np.isnan(self.data[field]),
                                                   self.axes)))
         vals[nan] = np.inf
-        order = np.argsort(vals, kind="stable")[:k]
+        if k * 4 < vals.size and vals.size > 4096:
+            # Selection instead of a full stable sort on big grids; ties
+            # at the k-th value resolve by flat index via the lexsort,
+            # identical to the stable-argsort path below.
+            kth = np.partition(vals, k - 1)[k - 1]
+            sel = np.flatnonzero(vals <= kth)
+            order = sel[np.lexsort((sel, vals[sel]))][:k]
+        else:
+            order = np.argsort(vals, kind="stable")[:k]
         out = []
         for flat in order:
             if not np.isfinite(vals[flat]):
@@ -455,6 +544,24 @@ class SweepResult:
 
     def breakdown_at(self, flat_index: int) -> dict[str, float]:
         return {f: float(self.data[f].ravel()[flat_index]) for f in FIELDS}
+
+    def constrain(self, constraints) -> "SweepResult":
+        """Dense post-filter twin of ``stream_grid(constraints=...)``.
+
+        Returns a new :class:`SweepResult` with *every* channel NaN
+        wherever any predicate fails (see :func:`parse_constraints`), so
+        ``argmin``/``top_k``/``channel_bounds`` and
+        :func:`repro.core.pareto.pareto_front` all run over the feasible
+        set only — exactly what the streaming executor computes when the
+        same constraints are compiled into its chunk step.
+        """
+        cons = parse_constraints(constraints)
+        if not cons:
+            return self
+        mask = constraint_mask(self.data, cons)
+        data = {f: np.where(mask, a, np.nan)
+                for f, a in self.data.items()}
+        return SweepResult(axes=self.axes, data=data)
 
 
 def _node_axis(S: A.StackedModelArrays,

@@ -206,3 +206,51 @@ class TestHypervolume:
     def test_rejects_mismatched_ref(self):
         with pytest.raises(ValueError):
             pareto.hypervolume([[1.0, 2.0]], [3.0, 3.0, 3.0])
+
+
+class TestLargeGridPreCull:
+    """The sampled dominance-filter pre-cull in pareto_front (engaged
+    above 2^16 rows) must be invisible: exactly the direct mask's front."""
+
+    class _FakeResult:
+        def __init__(self, V):
+            self.data = {"a": V[:, 0], "b": V[:, 1], "c": V[:, 2]}
+            self.shape = (V.shape[0],)
+            self.axes = {"x": tuple(range(V.shape[0]))}
+
+        def config_at(self, i):
+            return {"x": i}
+
+    @pytest.fixture(scope="class")
+    def big(self):
+        rng = np.random.default_rng(11)
+        V = rng.random((150_000, 3)) ** 2
+        V[rng.random(150_000) < 0.02] = np.nan
+        return V
+
+    def test_matches_direct_mask(self, big):
+        front = pareto.pareto_front(self._FakeResult(big),
+                                    objectives=("a", "b", "c"))
+        ref = np.flatnonzero(pareto.non_dominated_mask(big))
+        order = np.argsort(big[ref][:, 0], kind="stable")
+        assert np.array_equal(front.indices, ref[order])
+        assert np.array_equal(front.values, big[ref][order])
+
+    def test_matches_direct_mask_maximize(self, big):
+        front = pareto.pareto_front(self._FakeResult(big),
+                                    objectives=("a", "b", "c"),
+                                    maximize=("b",))
+        sgn = np.array([1.0, -1.0, 1.0])
+        ref = np.flatnonzero(pareto.non_dominated_mask(big * sgn))
+        order = np.argsort(big[ref][:, 0], kind="stable")
+        assert np.array_equal(front.indices, ref[order])
+
+    def test_duplicate_heavy_ties_survive(self):
+        rng = np.random.default_rng(3)
+        base = rng.random((5_000, 3))
+        V = np.repeat(base, 16, axis=0)          # 80_000 rows, 16x dups
+        V = np.concatenate([V, base])            # > 2^16 engages pre-cull
+        front = pareto.pareto_front(self._FakeResult(V),
+                                    objectives=("a", "b", "c"))
+        ref = np.flatnonzero(pareto.non_dominated_mask(V))
+        assert set(front.indices.tolist()) == set(ref.tolist())

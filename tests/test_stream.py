@@ -366,6 +366,160 @@ class TestOptimalPartitionRouting:
                                         detnet_fps=(5.0, 10.0))
 
 
+class TestAsyncPipeline:
+    """Satellite: the double-buffered pipeline must change nothing —
+    exact argmin/top-k/front/count parity across prefetch depths
+    {0, 1, 4} (0 = fully synchronous reference path) with a non-dividing
+    chunk size."""
+
+    @pytest.fixture(scope="class", params=(0, 1, 4))
+    def piped(self, request):
+        return stream.stream_grid(**REFERENCE_GRID, chunk_size=997,
+                                  top_k=TOP_K, track="all",
+                                  prefetch=request.param)
+
+    def test_argmin_and_topk_exact(self, piped, dense):
+        for field in sweep.FIELDS:
+            assert piped.argmin(field) == dense.argmin(field), field
+        for obj in piped.objectives:
+            assert piped.top_k(obj) == dense.top_k(obj, TOP_K), obj
+
+    def test_front_and_counts_exact(self, piped, dense, dense_front):
+        sf = piped.pareto_front()
+        assert np.array_equal(sf.indices, dense_front.indices)
+        assert np.array_equal(sf.values, dense_front.values)
+        for field in sweep.FIELDS:
+            assert piped.finite_counts[field] == \
+                int(np.isfinite(dense.data[field]).sum()), field
+
+    def test_prefetch_recorded_in_stats(self, piped):
+        assert piped.stats["prefetch"] in (0.0, 1.0, 4.0)
+        assert "host_merge_s" in piped.stats
+        assert "device_wait_s" in piped.stats
+
+    def test_consumer_exception_reaps_producer(self, monkeypatch):
+        """A host-merge failure must propagate promptly and must not
+        leave the producer thread wedged in q.put."""
+        import threading
+
+        def boom(*a, **k):
+            raise RuntimeError("merge exploded")
+
+        monkeypatch.setattr(stream, "_merge_into_front", boom)
+        with pytest.raises(RuntimeError, match="merge exploded"):
+            stream.stream_grid(**REFERENCE_GRID, chunk_size=997,
+                               prefetch=2)
+        assert not [t for t in threading.enumerate()
+                    if t.name == "stream-producer" and t.is_alive()]
+
+
+class TestConstraints:
+    """Satellite: device-masked constraint predicates must equal a host
+    post-filter of the dense grid (``SweepResult.constrain``) exactly."""
+
+    @pytest.fixture(scope="class")
+    def budgets(self, dense):
+        return {
+            "latency":
+                float(np.nanquantile(dense.data["latency"], 0.4)),
+            "mipi_bytes_per_s":
+                ("<=",
+                 float(np.nanquantile(dense.data["mipi_bytes_per_s"],
+                                      0.7))),
+        }
+
+    @pytest.fixture(scope="class")
+    def constrained(self, budgets):
+        return stream.stream_grid(**REFERENCE_GRID, chunk_size=997,
+                                  constraints=budgets, prefetch=4)
+
+    @pytest.fixture(scope="class")
+    def dense_constrained(self, dense, budgets):
+        return dense.constrain(budgets)
+
+    def test_front_matches_host_postfilter(self, constrained,
+                                           dense_constrained):
+        df = pareto.pareto_front(dense_constrained)
+        sf = constrained.pareto_front()
+        assert np.array_equal(df.indices, sf.indices)
+        assert np.array_equal(df.values, sf.values)
+
+    def test_argmin_topk_bounds_feasible_only(self, constrained,
+                                              dense_constrained):
+        for obj in constrained.objectives:
+            assert constrained.argmin(obj) == dense_constrained.argmin(obj)
+            assert constrained.top_k(obj) == \
+                dense_constrained.top_k(obj, 4), obj
+            assert constrained.channel_bounds(obj) == \
+                dense_constrained.channel_bounds(obj), obj
+
+    def test_feasible_counts_exact(self, constrained, dense_constrained):
+        for obj in constrained.objectives:
+            expect = int(np.isfinite(dense_constrained.data[obj]).sum())
+            assert constrained.finite_counts[obj] == expect, obj
+        n = constrained.n_configs
+        assert 0 < constrained.finite_counts["avg_power"] < n
+
+    def test_constraint_channels_tracked_automatically(self):
+        res = stream.stream_grid(cuts=(0, 17, 33),
+                                 objectives=("avg_power",),
+                                 constraints={"latency": 1.0})
+        assert "latency" in res.min_val     # auto-tracked for the mask
+        assert res.constraints == (("latency", "<=", 1.0),)
+
+    def test_spec_forms_equivalent(self):
+        a = sweep.parse_constraints({"latency": 1e-3})
+        b = sweep.parse_constraints([("latency", "<=", 1e-3)])
+        c = sweep.parse_constraints(["latency <= 1e-3"])
+        assert a == b == c == (("latency", "<=", 0.001),)
+        assert sweep.parse_constraints(None) == ()
+
+    def test_rejects_bad_specs(self):
+        with pytest.raises(ValueError, match="unknown constraint"):
+            sweep.parse_constraints({"nope": 1.0})
+        with pytest.raises(ValueError, match="op"):
+            sweep.parse_constraints([("latency", "==", 1.0)])
+        with pytest.raises(ValueError, match="parse"):
+            sweep.parse_constraints(["latency ?? 3"])
+
+    def test_all_infeasible_raises_naming_constraints(self):
+        res = stream.stream_grid(cuts=(0, 1, 2),
+                                 constraints={"latency": -1.0})
+        with pytest.raises(ValueError, match="constraint"):
+            res.argmin()
+        with pytest.raises(ValueError, match="constraint"):
+            res.channel_bounds("avg_power")
+
+    def test_optimal_partition_constraint_plumbing(self, dense, budgets):
+        best = partition.optimal_partition(
+            sensor_node=("7nm", "16nm"),
+            constraints={"latency": budgets["latency"]})
+        grid = sweep.evaluate_grid(sensor_nodes=("7nm", "16nm"))
+        win = grid.constrain({"latency": budgets["latency"]}).argmin()
+        assert best.cut == win["cut"]
+        assert best.latency <= budgets["latency"]
+
+    def test_optimal_partition_infeasible_raises(self):
+        with pytest.raises(ValueError, match="constraint"):
+            partition.optimal_partition(constraints={"latency": -1.0})
+        with pytest.raises(ValueError, match="constraint"):
+            partition.optimal_partition(detnet_fps=(5.0, 10.0),
+                                        constraints={"latency": -1.0})
+
+
+class TestSurvivorOverflowFallback:
+    def test_tiny_cap_forces_exact_host_fallback(self, dense_front,
+                                                 monkeypatch):
+        """A survivor-capacity overflow must fall back to an exact host
+        re-derivation of the chunk, never silently truncate the front."""
+        monkeypatch.setattr(stream, "_SURVIVOR_CAP", 8)
+        res = stream.stream_grid(**REFERENCE_GRID, chunk_size=2048)
+        assert res.stats["fallback_chunks"] > 0
+        sf = res.pareto_front()
+        assert np.array_equal(sf.indices, dense_front.indices)
+        assert np.array_equal(sf.values, dense_front.values)
+
+
 class TestDecodeHelper:
     def test_roundtrip_against_unravel_index(self):
         shape = (3, 5, 2, 7)

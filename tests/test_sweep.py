@@ -332,3 +332,51 @@ class TestEngineMechanics:
             expect = {name: vals[i] for (name, vals), i
                       in zip(grid.axes.items(), idx)}
             assert grid.config_at(flat) == expect
+
+
+class TestConstraintHelpers:
+    """Dense-side constraint machinery (the host twin of the streaming
+    executor's compiled predicates)."""
+
+    @pytest.fixture(scope="class")
+    def grid(self):
+        return sweep.evaluate_grid(sensor_nodes=("7nm", "16nm"),
+                                   weight_mems=("sram", "mram"),
+                                   detnet_fps=(5.0, 30.0))
+
+    def test_constrain_masks_every_channel(self, grid):
+        budget = float(np.nanmedian(grid.data["latency"]))
+        con = grid.constrain({"latency": budget})
+        with np.errstate(invalid="ignore"):
+            feas = grid.data["latency"] <= budget
+        for field in sweep.FIELDS:
+            expect = feas & np.isfinite(grid.data[field])
+            assert np.array_equal(np.isfinite(con.data[field]), expect), \
+                field
+
+    def test_constrain_argmin_is_feasible_best(self, grid):
+        budget = float(np.nanquantile(grid.data["avg_power"], 0.5))
+        con = grid.constrain([("avg_power", ">=", budget)])
+        best = con.argmin("avg_power")
+        assert best["avg_power"] >= budget
+        vals = grid.avg_power.ravel()
+        with np.errstate(invalid="ignore"):
+            feasible = vals[vals >= budget]
+        assert best["avg_power"] == float(feasible.min())
+
+    def test_empty_constraints_identity(self, grid):
+        assert grid.constrain(None) is grid
+        assert grid.constrain(()) is grid
+
+    def test_constraint_mask_matches_ops(self, grid):
+        mask = sweep.constraint_mask(grid.data,
+                                     ["mipi_bytes_per_s < 1e7",
+                                      ("latency", ">", 0.0)])
+        with np.errstate(invalid="ignore"):
+            expect = ((grid.data["mipi_bytes_per_s"] < 1e7)
+                      & (grid.data["latency"] > 0.0))
+        assert np.array_equal(mask, expect)
+
+    def test_nan_rows_never_feasible(self, grid):
+        mask = sweep.constraint_mask(grid.data, {"latency": np.inf})
+        assert not mask[np.isnan(grid.data["latency"])].any()

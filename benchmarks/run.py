@@ -17,10 +17,11 @@ Emits ``name,value,derived`` CSV rows:
 
 ``--smoke`` runs the fast CI gate instead: tiny grids, asserting exact
 streaming/dense parity (argmin, top-k, Pareto front, counts), async
-double-buffered pipeline parity across prefetch depths, compiled
-``constraints=`` masking vs the dense host post-filter, and stacked-
-workload parity end-to-end — perf-path regressions fail CI, not just
-benchmark runs.
+double-buffered pipeline parity across prefetch depths, the backend
+registry (``backend="pallas"`` in interpret mode and ``scan_chunks=4``
+fused dispatch, both exact vs dense), compiled ``constraints=`` masking
+vs the dense host post-filter, and stacked-workload parity end-to-end —
+perf-path regressions fail CI, not just benchmark runs.
 """
 
 from __future__ import annotations
@@ -101,6 +102,29 @@ def smoke_rows():
         int(np.isfinite(dense_con.data["latency"]).sum()), \
         "feasible counts drifted"
 
+    # Backend registry: the Pallas backend (interpret mode on CPU) and
+    # scan-fused dispatch must reproduce the same grid exactly.
+    pallas = stream.stream_grid(**grid_kw, chunk_size=97, track="all",
+                                backend="pallas")
+    assert all(pallas.argmin(f) == dense.argmin(f)
+               for f in sweep.FIELDS), "pallas backend argmin drifted"
+    assert all(pallas.top_k(o) == dense.top_k(o, 4)
+               for o in pallas.objectives), "pallas backend top-k drifted"
+    pf = pallas.pareto_front()
+    assert np.array_equal(pf.indices, df.indices) and \
+        np.array_equal(pf.values, df.values), "pallas front drifted"
+    dense_pallas = sweep.evaluate_grid(**grid_kw, backend="pallas")
+    assert all(np.array_equal(dense.data[f], dense_pallas.data[f],
+                              equal_nan=True)
+               for f in sweep.FIELDS), "pallas dense eval drifted"
+    scanned = stream.stream_grid(**grid_kw, chunk_size=97, scan_chunks=4,
+                                 prefetch=4)
+    assert all(scanned.argmin(o) == dense.argmin(o)
+               for o in scanned.objectives), "scan-fused argmin drifted"
+    sc = scanned.pareto_front()
+    assert np.array_equal(sc.indices, df.indices) and \
+        np.array_equal(sc.values, df.values), "scan-fused front drifted"
+
     # Stacked-workload axis: every model row reproduces its own grid.
     det, key = build_detnet(), build_keynet()
     pairs = ((det, key), (det.scaled(0.5), key))
@@ -123,6 +147,10 @@ def smoke_rows():
          f"argmin/top-k/front/counts exact on {dense.n_configs} configs"),
         ("smoke.async_pipeline_parity", 1.0,
          "prefetch 0/4 exact vs dense (double-buffered path)"),
+        ("smoke.pallas_backend_parity", 1.0,
+         "backend='pallas' (interpret) exact vs dense: stream + grid"),
+        ("smoke.scan_fused_parity", 1.0,
+         "scan_chunks=4 fused dispatch exact vs dense"),
         ("smoke.constrained_parity", 1.0,
          f"compiled latency<= {lat_budget:.3g} mask == dense post-filter"),
         ("smoke.stacked_parity", 1.0,

@@ -16,8 +16,15 @@ own subprocess so peak RSS is attributable per (mode, size) — dense
 memory grows O(grid) (unrunnable at 10^7 on small hosts) while
 streaming stays flat at O(chunk + front).  Exact argmin/top-k/
 Pareto-front parity on the 10,880-config reference grid is asserted and
-recorded.  Emits ``name,value,derived`` rows and snapshots
-``BENCH_stream.json`` at the repo root.
+recorded.
+
+Scan-fused dispatch (``stream_grid(scan_chunks=)``, the backend layer's
+``lax.scan`` over K chunk carries per device dispatch) is measured at
+10^7 and a streaming-only 10^8-config point: per-chunk ``dispatch_s``
+and ``steps_per_s`` are recorded alongside the merge-stall fields, with
+the forced ``scan_chunks=1`` per-chunk baseline for the overhead ratio.
+Emits ``name,value,derived`` rows and snapshots ``BENCH_stream.json``
+at the repo root.
 """
 
 from __future__ import annotations
@@ -45,7 +52,11 @@ from benchmarks.sweep_bench import GRID as REFERENCE_GRID  # noqa: E402
 def _grid_for(n: int) -> dict:
     """Reference grid widened along the rate axes to ~n configurations."""
     g = dict(REFERENCE_GRID)
-    if n >= 10_000_000:
+    if n >= 100_000_000:
+        g["detnet_fps"] = tuple(np.linspace(5.0, 30.0, 50))
+        g["keynet_fps"] = tuple(np.linspace(15.0, 30.0, 20))
+        g["camera_fps"] = tuple(np.linspace(20.0, 60.0, 92))   # 100,096,000
+    elif n >= 10_000_000:
         g["detnet_fps"] = tuple(np.linspace(5.0, 30.0, 50))
         g["camera_fps"] = tuple(np.linspace(20.0, 60.0, 92))   # 10,009,600
     elif n >= 1_000_000:
@@ -70,20 +81,23 @@ def _mem_available_mb() -> float:
     return float("inf")
 
 
-def _worker(mode: str, n: int) -> dict:
+def _worker(mode: str, n: int, scan: int | None = None) -> dict:
     from repro.core import stream, sweep
 
     grid = _grid_for(n)
     # Short runs are scheduler/frequency-noise dominated on small hosts:
     # take the best of more repetitions there (runs at these sizes are
     # tens of ms, so the extra reps are free next to the jit compile).
-    reps = 8 if n <= 1_000_000 else 3
+    reps = 8 if n <= 1_000_000 else (3 if n <= 10_000_000 else 1)
     if mode == "dense":
         import numpy as np
 
         from repro.core import pareto
 
-        # 11 channels + 10 meshgrid coordinate arrays, all float64.
+        # 11 host channel grids + their device twins, minus what XLA
+        # frees early — the meshgrid coordinate arrays are gone (the
+        # dense engine decodes flat indices on device now), but the
+        # gathered per-lane kernel inputs still exist transiently.
         need_mb = n * 8 * 21 / 2**20 * 1.5
         if need_mb > _mem_available_mb():
             return {"mode": mode, "n": n, "skipped":
@@ -118,10 +132,13 @@ def _worker(mode: str, n: int) -> dict:
                 "front_size": int(front.size),
                 "peak_rss_mb": round(_rss_mb(), 1),
                 "best_power_mw": round(res.argmin()["avg_power"] * 1e3, 4)}
-    res = stream.stream_grid(**grid)               # compile + first run
+    kw = dict(grid)
+    if scan is not None:
+        kw["scan_chunks"] = scan
+    res = stream.stream_grid(**kw)                 # compile + first run
     best_stats = None
     for _ in range(reps):                          # post-compile, best-of
-        res = stream.stream_grid(**grid)
+        res = stream.stream_grid(**kw)
         if (best_stats is None
                 or res.stats["total_s"] < best_stats["total_s"]):
             best_stats = res.stats
@@ -137,10 +154,17 @@ def _worker(mode: str, n: int) -> dict:
             # device results — the overlap the async pipeline buys.
             "host_merge_s": round(best_stats["host_merge_s"], 4),
             "device_wait_s": round(best_stats["device_wait_s"], 4),
+            # Dispatch accounting: time spent invoking the compiled
+            # step (post-warmup: pure per-step overhead) and dispatches
+            # per second — scan fusion's target quantities.
+            "dispatch_s": round(best_stats["dispatch_s"], 4),
+            "steps_per_s": round(best_stats["steps_per_s"], 2),
+            "n_steps": int(best_stats["n_chunks"]),
+            "scan_chunks": int(best_stats["scan_chunks"]),
             "best_power_mw": round(res.argmin()["avg_power"] * 1e3, 4)}
 
 
-def _spawn(mode: str, n: int) -> dict:
+def _spawn(mode: str, n: int, scan: int | None = None) -> dict:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         [str(SRC)] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep)
@@ -156,10 +180,12 @@ def _spawn(mode: str, n: int) -> dict:
         env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
                             + " --xla_force_host_platform_device_count="
                             + str(os.cpu_count() or 1))
+    cmd = [sys.executable, "-m", "benchmarks.stream_bench", "--worker",
+           mode, str(n)]
+    if scan is not None:
+        cmd.append(str(scan))
     out = subprocess.run(
-        [sys.executable, "-m", "benchmarks.stream_bench", "--worker",
-         mode, str(n)],
-        capture_output=True, text=True, timeout=1800,
+        cmd, capture_output=True, text=True, timeout=3600,
         cwd=str(SRC.parent), env=env)
     if out.returncode != 0:
         return {"mode": mode, "n": n,
@@ -234,6 +260,49 @@ def rows():
             out.append((f"dense.{tag}.skipped", 0.0,
                         d.get("skipped", d.get("failed", "?"))))
 
+    # Scan-fused dispatch: stream-only points comparing auto-fused
+    # (scan_chunks chosen from the step count) against forced per-chunk
+    # dispatch (scan_chunks=1) at 10^7 and 10^8 configs — the dense
+    # path cannot run 10^8 (the full channel grids alone are ~9 GB).
+    # Each chunk's share of the per-dispatch fixed cost falls K-fold,
+    # so the robust signal is the *dispatch count* (and dispatch_s per
+    # step); note XLA CPU dispatch is synchronous, so dispatch_s also
+    # absorbs blocked device compute — on accelerator backends it
+    # isolates the launch overhead scan fusion amortizes.  1e7 runs are
+    # noise-dominated on small hosts: alternate pairs, report medians.
+    scan_fused = {}
+    for n, tag, pairs, k_fused in ((10_000_000, "1e7", 2, 4),
+                                   (100_000_000, "1e8", 1, 8)):
+        # Explicit K for the fused arm: auto-K depends on the per-device
+        # step count, so on many-core hosts it could resolve to 1 and
+        # this comparison would silently measure nothing.
+        f_runs, p_runs = [], []
+        for _ in range(pairs):
+            f_runs.append(_spawn("stream", n, scan=k_fused))
+            p_runs.append(_spawn("stream", n, scan=1))
+        fused = median_worker(f_runs)
+        per_chunk = median_worker(p_runs)
+        scan_fused[tag] = {"fused": fused, "per_chunk": per_chunk}
+        if "configs_per_s" not in fused or "configs_per_s" not in per_chunk:
+            out.append((f"stream.{tag}.scan_fused.FAILED", 0.0,
+                        str(fused if 'configs_per_s' not in fused
+                            else per_chunk)))
+            continue
+        out.append((
+            f"stream.{tag}.scan_fused_configs_per_s",
+            fused["configs_per_s"],
+            f"K={fused.get('scan_chunks')} "
+            f"{fused.get('n_steps')} dispatches "
+            f"(vs {per_chunk.get('n_steps')} per-chunk) "
+            f"rss {fused.get('peak_rss_mb', 0):.0f}MB"))
+        out.append((
+            f"stream.{tag}.dispatches_cut",
+            round(per_chunk["n_steps"] / max(fused["n_steps"], 1), 2),
+            f"per-chunk {per_chunk['n_steps']} dispatches "
+            f"({per_chunk['dispatch_s']:.2f}s in-call) -> fused "
+            f"{fused['n_steps']} ({fused['dispatch_s']:.2f}s); "
+            f"throughput {fused['configs_per_s'] / per_chunk['configs_per_s']:.2f}x"))
+
     def ratio_at(n):
         p = next((p for p in points if p["n"] == n), None)
         if (p and "configs_per_s" in p["stream"]
@@ -247,6 +316,9 @@ def rows():
     snapshot = {
         "parity_10880": parity,
         "points": points,
+        # Per-chunk dispatch overhead vs lax.scan-fused multi-chunk
+        # dispatch (exact parity preserved; see tests/test_backend.py).
+        "scan_fused": scan_fused,
         "stream_rss_growth_1e5_to_1e7":
             (round(s_big / s_small, 2) if s_small and s_big else None),
         # The regression PR 4 fixed (fused on-device reductions + async
@@ -277,7 +349,8 @@ def rows():
 
 def main() -> None:
     if len(sys.argv) >= 4 and sys.argv[1] == "--worker":
-        print(json.dumps(_worker(sys.argv[2], int(sys.argv[3]))))
+        scan = int(sys.argv[4]) if len(sys.argv) >= 5 else None
+        print(json.dumps(_worker(sys.argv[2], int(sys.argv[3]), scan)))
         return
     print("name,value,derived")
     for name, val, derived in rows():

@@ -1,0 +1,475 @@
+"""Unified evaluation-backend layer: one chunk kernel for every engine.
+
+Before this module existed the Eq. 1-11 evaluate-and-reduce logic lived
+in three divergent copies — the scalar path of
+:mod:`repro.core.partition`, the dense ``sweep.evaluate_grid`` meshgrid
+path, and the streaming executor's private ``_build_step``.  All three
+engines now run through the single **chunk-evaluation contract** defined
+here::
+
+    decode flat indices -> evaluate tracked channels
+                        -> fold block reductions into a donated carry
+
+* :class:`EvalBackend` — the backend protocol.  ``build_dense_eval``
+  covers the first arrow only (``fn(axvals, flat) -> {field: values}``):
+  the dense engine runs the whole grid as *one big chunk* through it,
+  and the streaming probe / survivor-overflow fallback reuse it
+  chunk-wise.  ``build_chunk_eval`` adds constraint masking, the Pareto
+  dominance pre-filter, and the **block-level reductions** (per-block
+  min / first-min index / valid count / max, signed block mins for the
+  top-k block select, survivor keep mask) that :func:`fold_chunk`
+  consumes.
+* :func:`fold_chunk` — backend-independent: folds one chunk's block
+  partials into the donated running carry (argmin with exact
+  first-minimum tie-breaking, feasibility counts, channel bounds, the
+  exact per-objective top-k merge, optional histograms) and compacts
+  the dominance survivors to an O(survivors) device->host transfer.
+  This is the *only* copy of the reduction code — the XLA backend
+  traces it behind its inline evaluation, the Pallas backend feeds it
+  from the fused ``pallas_call`` of :mod:`repro.kernels.sweep_grid`.
+* :func:`build_step` / :func:`cached_step` — assemble ``eval + fold``
+  into the compiled chunk step the streaming executor drives, with
+  optional **scan fusion** (``scan_chunks > 1`` runs ``lax.scan`` over
+  K chunk carries inside one device dispatch, cutting per-step dispatch
+  overhead on 10^8-config spaces) and ``pmap`` sharding across devices.
+* The **registry** (:func:`register_backend` / :func:`get_backend`) —
+  the ``backend=`` knob of ``sweep.evaluate_grid``,
+  ``stream.stream_grid`` and ``partition.optimal_partition``.  The
+  ``"pallas"`` backend registers lazily on first request from
+  :mod:`repro.kernels.sweep_grid`.
+
+Everything here runs under the caller's scoped ``enable_x64`` context;
+flat indices are int64 whenever the index space could overflow int32
+(see :func:`repro.core.sweep.decode_flat_index`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import importlib
+from collections import OrderedDict
+from typing import Callable, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import pareto as P
+from . import sweep as SW
+
+#: Backend used when the ``backend=`` knob is ``None``.
+DEFAULT_BACKEND = "xla"
+
+_REGISTRY: "OrderedDict[str, EvalBackend]" = OrderedDict()
+
+#: Backends that register themselves on first request (import-cost /
+#: optional-dependency gating): name -> providing module.
+_LAZY = {"pallas": "repro.kernels.sweep_grid"}
+
+
+class EvalBackend:
+    """Protocol of an evaluation backend (see the module docstring).
+
+    Subclasses implement the two builders; ``supports_pmap`` gates the
+    multi-device ``pmap`` path of :func:`build_step`.
+    """
+
+    name: str = "?"
+    supports_pmap: bool = True
+
+    def build_dense_eval(self, S, shape: tuple[int, ...],
+                         fields: Sequence[str]) -> Callable:
+        """``fn(axvals, flat) -> {field: (n,) array}``: decode flat
+        C-order indices into per-axis coordinates, gather the axis
+        values, evaluate the requested channels.  ``axvals`` is the
+        tuple of per-axis kernel index/value arrays (leading model
+        axis included), ``flat`` any int array of grid indices."""
+        raise NotImplementedError
+
+    def build_chunk_eval(self, spec: "ChunkSpec") -> Callable:
+        """``fn(axvals, aux, start) -> partials``: evaluate the chunk
+        ``[start, start + spec.chunk)`` and return the block partials
+        of :func:`chunk_partials` for :func:`fold_chunk` to fold."""
+        raise NotImplementedError
+
+
+def register_backend(backend: EvalBackend) -> EvalBackend:
+    """Register ``backend`` under ``backend.name`` (last one wins)."""
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def available_backends() -> tuple[str, ...]:
+    """Names accepted by the ``backend=`` knob (registered + lazy)."""
+    return tuple(dict.fromkeys((*_REGISTRY, *_LAZY)))
+
+
+def get_backend(name: str | None = None) -> EvalBackend:
+    """Resolve a backend name (``None`` -> :data:`DEFAULT_BACKEND`).
+
+    Lazily imports the providing module for deferred backends (the
+    Pallas backend lives in ``repro.kernels.sweep_grid`` and registers
+    on import).  Raises :class:`ValueError` naming the available
+    backends for unknown names.
+    """
+    name = name or DEFAULT_BACKEND
+    if name not in _REGISTRY and name in _LAZY:
+        try:
+            importlib.import_module(_LAZY[name])
+        except ImportError as e:  # pragma: no cover - env-dependent
+            raise ValueError(
+                f"evaluation backend {name!r} is unavailable "
+                f"({e}); available: {tuple(_REGISTRY)}") from e
+    be = _REGISTRY.get(name)
+    if be is None:
+        raise ValueError(f"unknown evaluation backend {name!r}; "
+                         f"available: {available_backends()}")
+    return be
+
+
+# ---------------------------------------------------------------------------
+# The chunk contract
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkSpec:
+    """Static description of one chunk-evaluation problem.
+
+    This is the compiled-step cache key: everything that shapes the
+    traced computation (chunk geometry, tracked channels, constraint
+    structure, filter geometry) is here; axis values, constraint bounds
+    and the filter *state* are runtime arguments so compiled steps are
+    reusable across grids with the same axis sizes and across filter
+    refreshes.  ``S`` hashes by identity (frozen, ``eq=False``); keying
+    on the object itself keeps it alive so a recycled id can never
+    alias a stale compiled step.
+    """
+
+    S: object                          # arrays.StackedModelArrays
+    shape: tuple[int, ...]             # full axis sizes (incl. model axis)
+    n_total: int
+    chunk: int
+    fields: tuple[str, ...]            # tracked channels; first d objectives
+    d: int                             # number of objective channels
+    k: int                             # top-k table width
+    sign: tuple[float, ...]            # +1 minimize / -1 maximize per obj
+    cons_static: tuple[tuple[int, str], ...]   # (field index, op) pairs
+    hist_bins: int
+    survivor_cap: int
+    small_index: bool                  # int32 decode arithmetic is safe
+    filter_rows: int = 24              # dominance-filter explicit rows
+    filter_bins: int = 256             # ... and prefix-min table bins
+
+    # Block layout of the two-stage reductions: XLA CPU lowers a plain
+    # full-axis reduce (and especially lax.top_k) over 2^18 lanes as a
+    # scalar loop; reducing (B, W) blocks stage-wise vectorizes, and
+    # the exact top-k needs only the k best blocks.
+    @property
+    def block(self) -> int:            # W — lanes per block
+        return min(512, self.chunk)
+
+    @property
+    def n_blocks(self) -> int:         # B
+        return -(-self.chunk // self.block)
+
+    @property
+    def padded(self) -> int:           # CP — lanes incl. block padding
+        return self.n_blocks * self.block
+
+    @property
+    def nb(self) -> int:               # blocks gathered by the top-k select
+        return min(self.k, self.n_blocks)
+
+
+def decode_gather(shape: Sequence[int], axvals, flat):
+    """Decode flat C-order indices and gather the per-axis kernel
+    arguments — the one place "flat index -> kernel inputs" is written
+    (both backends and the dense engine trace through it)."""
+    coords = SW.decode_flat_index(shape, flat)
+    return [v[c] for v, c in zip(axvals, coords)]
+
+
+def chunk_partials(spec: ChunkSpec, F, flat, ingrid, aux) -> dict:
+    """Constraint masking + block reductions of one evaluated chunk.
+
+    The backend-independent reference expression: the XLA backend
+    traces it directly behind its inline evaluation; the Pallas kernel
+    of :mod:`repro.kernels.sweep_grid` computes the same quantities
+    per-block inside its ``pallas_call`` (and is parity-tested against
+    this).  ``F`` is the ``(n_fields, chunk)`` raw channel matrix,
+    ``flat`` the chunk's flat indices, ``ingrid`` the in-grid lane
+    mask.  Returns the partials dict :func:`fold_chunk` consumes, all
+    lane axes padded to ``spec.padded``.
+    """
+    d, B, W = spec.d, spec.n_blocks, spec.block
+    feas = ingrid
+    for ci, (fi, op) in enumerate(spec.cons_static):
+        # NaN channel values compare False, so invalid configurations
+        # are infeasible under any predicate.
+        feas = feas & SW.CONSTRAINT_OPS[op](F[fi], aux["cons"][ci])
+    valid = jnp.isfinite(F) & feas[None, :]
+    Fm = jnp.where(valid, F, jnp.inf)
+    sign = np.asarray(spec.sign)
+    if (sign == 1.0).all():
+        Fsg = Fm[:d]
+    else:
+        Fsg = jnp.where(valid[:d], F[:d] * sign[:, None], jnp.inf)
+    keep = P.dominance_filter_mask(aux["filter"], Fsg, xp=jnp)
+
+    lane_pad = spec.padded - spec.chunk
+
+    def pad2(x, fill):
+        return (jnp.pad(x, ((0, 0), (0, lane_pad)), constant_values=fill)
+                if lane_pad else x)
+
+    def pad1(x, fill):
+        return (jnp.pad(x, (0, lane_pad), constant_values=fill)
+                if lane_pad else x)
+
+    Fb = pad2(Fm, jnp.inf).reshape(-1, B, W)
+    bmin = Fb.min(axis=2)
+    flatb = pad1(flat, spec.n_total).reshape(B, W)
+    bidx = jnp.where(Fb == bmin[:, :, None], flatb[None], spec.n_total
+                     ).min(axis=2)
+    return {
+        "Fd": pad2(F[:d], jnp.nan),
+        "Fsg": pad2(Fsg, jnp.inf),
+        "valid": pad2(valid[:d], False),
+        "keep": pad1(keep, False),
+        "bmin": bmin,
+        "bidx": bidx,
+        "cnt": pad2(valid.astype(jnp.int32), 0).reshape(-1, B, W
+                                                        ).sum(axis=2),
+        "bmax": pad2(jnp.where(valid, F, -jnp.inf), -jnp.inf
+                     ).reshape(-1, B, W).max(axis=2),
+        "sgmin": pad2(Fsg, jnp.inf).reshape(d, B, W).min(axis=2),
+    }
+
+
+def init_carry(spec: ChunkSpec) -> dict:
+    """Fresh running-reduction carry (numpy; the executor ships it with
+    one batched ``device_put``) — strong dtypes throughout: a weak-typed
+    init carry would retrace the step on its second call (outputs come
+    back strong-typed)."""
+    nf = len(spec.fields)
+    carry = {
+        "min_val": np.full((nf,), np.inf),
+        "min_idx": np.full((nf,), spec.n_total, np.int64),
+        "finite": np.zeros((nf,), np.int64),
+        "fmin": np.full((nf,), np.inf),
+        "fmax": np.full((nf,), -np.inf),
+        "topk_val": np.full((spec.d, spec.k), np.inf),
+        "topk_idx": np.full((spec.d, spec.k), spec.n_total, np.int64),
+    }
+    if spec.hist_bins:
+        carry["hist"] = np.zeros((spec.d, spec.hist_bins), np.int64)
+    return carry
+
+
+def fold_chunk(spec: ChunkSpec, carry, partials, aux, start):
+    """Fold one chunk's block partials into the donated running carry.
+
+    The single copy of the reduction fold shared by every backend:
+
+    * running argmin per channel — lexicographic ``(value, index)`` min
+      over the block partials, so ties break toward the lower flat
+      index exactly like ``np.nanargmin``'s first-minimum rule;
+    * feasibility counts and channel bounds;
+    * the fused exact top-k: the k best (value, flat index) pairs of
+      the chunk live in the k best blocks ranked by (block min, block
+      index) — any element of a lower-ranked block is beaten by >= k
+      strictly smaller pairs.  ``lax.top_k`` over the signed block
+      mins breaks ties toward the lower block; the gathered k*W
+      candidates merge against the running ``(d, k)`` table with an
+      exact two-key sort;
+    * optional histograms;
+    * survivor compaction: a binary search over the keep-count prefix
+      sum (an order of magnitude faster than an XLA CPU scatter); the
+      count is returned so the host can detect (rare) capacity
+      overflow and re-derive that chunk's survivors exactly.
+    """
+    d, k, W = spec.d, spec.k, spec.block
+    n_total = spec.n_total
+
+    lv = partials["bmin"].min(axis=1)
+    li = jnp.where(partials["bmin"] == lv[:, None], partials["bidx"],
+                   n_total).min(axis=1)
+    # isfinite guard: an all-invalid chunk ties at inf == inf and must
+    # not swap the sentinel min_idx for an invalid config's index.
+    better = (lv < carry["min_val"]) | ((lv == carry["min_val"])
+                                        & jnp.isfinite(lv)
+                                        & (li < carry["min_idx"]))
+    new_carry = {
+        "min_val": jnp.where(better, lv, carry["min_val"]),
+        "min_idx": jnp.where(better, li, carry["min_idx"]),
+        "finite": carry["finite"] + partials["cnt"].sum(axis=1,
+                                                        dtype=jnp.int64),
+        "fmin": jnp.minimum(carry["fmin"], lv),
+        "fmax": jnp.maximum(carry["fmax"], partials["bmax"].max(axis=1)),
+    }
+
+    _, bsel = jax.lax.top_k(-partials["sgmin"], spec.nb)       # (d, nb)
+    sgb = partials["Fsg"].reshape(d, spec.n_blocks, W)
+    gath = jnp.take_along_axis(sgb, bsel[:, :, None], axis=1)
+    gpos = (bsel[:, :, None] * W
+            + jnp.arange(W, dtype=jnp.int64)[None, None, :])
+    cand_v = jnp.concatenate(
+        [carry["topk_val"], gath.reshape(d, spec.nb * W)], axis=1)
+    cand_i = jnp.concatenate(
+        [carry["topk_idx"], start + gpos.reshape(d, spec.nb * W)], axis=1)
+    sv, si = jax.lax.sort((cand_v, cand_i), dimension=-1, num_keys=2)
+    new_carry["topk_val"] = sv[:, :k]
+    new_carry["topk_idx"] = si[:, :k]
+
+    if spec.hist_bins:
+        he = aux["hist_edges"]                                 # (d, bins+1)
+        hist = carry["hist"]
+        for oi in range(d):
+            col = jnp.clip(partials["Fd"][oi], he[oi, 0], he[oi, -1])
+            b = jnp.clip(
+                jnp.searchsorted(he[oi], col, side="right") - 1,
+                0, spec.hist_bins - 1)
+            hist = hist.at[oi, b].add(
+                partials["valid"][oi].astype(hist.dtype))
+        new_carry["hist"] = hist
+
+    csum = jnp.cumsum(partials["keep"].astype(jnp.int32))
+    pos = jnp.minimum(
+        jnp.searchsorted(csum,
+                         jnp.arange(1, spec.survivor_cap + 1,
+                                    dtype=jnp.int32), side="left"),
+        spec.padded - 1)
+    surv = (start + pos.astype(jnp.int64), partials["Fd"][:, pos].T,
+            csum[-1])
+    return new_carry, surv
+
+
+# ---------------------------------------------------------------------------
+# The XLA backend (default)
+# ---------------------------------------------------------------------------
+
+
+class XlaBackend(EvalBackend):
+    """Pure-XLA backend: decode + evaluate traced inline so the whole
+    chunk step fuses into one compiled computation."""
+
+    name = "xla"
+    supports_pmap = True
+
+    def build_dense_eval(self, S, shape, fields):
+        kernel = SW.vmapped_kernel(S)
+        fields = tuple(fields)
+
+        @jax.jit
+        def evalfn(axvals, flat):
+            out = kernel(*decode_gather(shape, axvals, flat))
+            return {f: out[f] for f in fields}
+
+        return evalfn
+
+    def build_chunk_eval(self, spec: ChunkSpec):
+        kernel = SW.vmapped_kernel(spec.S)
+
+        def evalfn(axvals, aux, start):
+            flat = start + jnp.arange(spec.chunk, dtype=jnp.int64)
+            ingrid = flat < spec.n_total
+            # int32 decode arithmetic when the flat index space fits —
+            # int64 div/mod is measurably slower on CPU.
+            fdec = flat.astype(jnp.int32) if spec.small_index else flat
+            out = kernel(*decode_gather(spec.shape, axvals, fdec))
+            F = jnp.stack([out[f] for f in spec.fields])
+            # Without the barrier XLA fuses the (expensive) kernel body
+            # into every reduction that consumes F, re-evaluating it
+            # several times per chunk; the barrier forces one
+            # materialization.
+            F = jax.lax.optimization_barrier(F)
+            return chunk_partials(spec, F, flat, ingrid, aux)
+
+        return evalfn
+
+
+register_backend(XlaBackend())
+
+
+# ---------------------------------------------------------------------------
+# Step assembly (chunk eval + fold, scan fusion, sharding) and caches
+# ---------------------------------------------------------------------------
+
+
+def build_step(spec: ChunkSpec, backend: str | None = None,
+               scan_chunks: int = 1, n_dev: int = 1, devices=None):
+    """Compile the chunk step ``(carry, axvals, aux, start) -> (carry,
+    survivors)`` for one backend.
+
+    ``scan_chunks > 1`` fuses that many consecutive chunk folds into a
+    single device dispatch via ``lax.scan`` (the carry threads through;
+    survivor outputs gain a leading K axis) — per-chunk Python/dispatch
+    overhead is paid once per K chunks, which matters at 10^7+ configs
+    where the step count runs into the hundreds.  With ``n_dev > 1``
+    the step is ``pmap``-sharded (one carry per device; every argument
+    device-mapped — the executor pre-replicates broadcast state).
+    Results are bitwise identical across ``scan_chunks`` values: the
+    fold is applied to the same chunks in the same order.
+    """
+    be = get_backend(backend)
+    if n_dev > 1 and not be.supports_pmap:
+        raise ValueError(f"backend {be.name!r} does not support the "
+                         f"multi-device pmap path; pass devices= with a "
+                         f"single device")
+    evalfn = be.build_chunk_eval(spec)
+
+    def one(carry, axvals, aux, start):
+        partials = evalfn(axvals, aux, start)
+        return fold_chunk(spec, carry, partials, aux, start)
+
+    if scan_chunks > 1:
+        def step(carry, axvals, aux, start):
+            starts = start + spec.chunk * jnp.arange(scan_chunks,
+                                                     dtype=jnp.int64)
+            return jax.lax.scan(lambda c, s: one(c, axvals, aux, s),
+                                carry, starts)
+    else:
+        step = one
+
+    if n_dev > 1:
+        return jax.pmap(step, donate_argnums=(0,),
+                        in_axes=(0, 0, 0, 0), devices=devices)
+    return jax.jit(step, donate_argnums=(0,))
+
+
+_STEP_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
+_STEP_CACHE_MAX = 32
+
+
+def cached_step(spec: ChunkSpec, backend: str | None = None,
+                scan_chunks: int = 1, n_dev: int = 1, devices=None):
+    """LRU-cached :func:`build_step` — repeated sweeps over same-shaped
+    grids are compile-free."""
+    key = (spec, backend or DEFAULT_BACKEND, scan_chunks, n_dev,
+           tuple(str(dv) for dv in devices or ()))
+    fn = _STEP_CACHE.get(key)
+    if fn is None:
+        fn = build_step(spec, backend, scan_chunks, n_dev, devices)
+        _STEP_CACHE[key] = fn
+        while len(_STEP_CACHE) > _STEP_CACHE_MAX:
+            _STEP_CACHE.popitem(last=False)
+    return fn
+
+
+def cached_dense_eval(backend: str | None, S, shape: tuple[int, ...],
+                      fields: tuple[str, ...]):
+    """LRU-cached :meth:`EvalBackend.build_dense_eval` (keyed by backend
+    name, stacked lowering identity, grid shape and field tuple).
+    ``None`` normalizes to :data:`DEFAULT_BACKEND` *before* the cache
+    key, so the dense engine's default path and the streamer's
+    probe/overflow-fallback share one compiled evaluator."""
+    return _cached_dense_eval(backend or DEFAULT_BACKEND, S, tuple(shape),
+                              tuple(fields))
+
+
+@functools.lru_cache(maxsize=32)
+def _cached_dense_eval(backend: str, S, shape, fields):
+    return get_backend(backend).build_dense_eval(S, shape, fields)

@@ -226,7 +226,8 @@ def _is_axis(v) -> bool:
 
 def optimal_partition(engine: str = "array",
                       objective: str = "avg_power",
-                      constraints=None, **kw) -> PartitionPoint:
+                      constraints=None, backend: str | None = None,
+                      **kw) -> PartitionPoint:
     """Optimal partition point along one objective (Fig. 2 generalized).
 
     ``objective`` selects which channel is minimized over the cut axis —
@@ -259,10 +260,23 @@ def optimal_partition(engine: str = "array",
     axis with the vectorized grid engine; ``engine="scalar"`` forces the
     full scalar sweep.  Custom ``TechNode`` objects outside the registry
     fall back to the scalar engine automatically.
+
+    ``backend`` selects the evaluation backend for the array engines —
+    any name in :func:`repro.core.backend.available_backends` (``None``
+    -> ``"xla"``; ``"pallas"`` routes through the fused Pallas grid
+    kernel).  Every engine choice resolves through that registry, so an
+    unknown backend raises immediately naming the available ones;
+    ``engine="scalar"`` evaluates no grids and rejects an explicit
+    backend.
     """
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown objective {objective!r}; "
                          f"have {OBJECTIVES}")
+    from . import backend as _backend
+    if backend is not None and engine == "scalar":
+        raise ValueError("backend= applies to the array/streaming "
+                         "engines; engine='scalar' evaluates none")
+    _backend.get_backend(backend)   # fail fast, naming available backends
     known = set(_AXIS_TO_KWARG.values()) | {"detnet", "keynet", "cuts"}
     unknown_kw = sorted(set(kw) - known)
     if unknown_kw:
@@ -322,9 +336,10 @@ def optimal_partition(engine: str = "array",
             from . import stream as _stream
             win = _stream.stream_grid(
                 cuts=cuts, objectives=(objective,), constraints=cons,
-                **axes).argmin(objective)
+                backend=backend, **axes).argmin(objective)
         else:
-            win = constrained_argmin(_sweep.evaluate_grid(cuts=cuts, **axes))
+            win = constrained_argmin(_sweep.evaluate_grid(
+                cuts=cuts, backend=backend, **axes))
         scalar_kw = {_AXIS_TO_KWARG[name]: win[name]
                      for name in _AXIS_TO_KWARG}
         scalar_kw["num_cameras"] = int(scalar_kw["num_cameras"])
@@ -343,8 +358,15 @@ def optimal_partition(engine: str = "array",
             f"no MRAM test vehicle at "
             f"{_resolve_node(kw.get('sensor_node', '7nm')).name}")
     if engine == "array" and agg is not None and sen is not None:
-        res = _sweep.evaluate_grid(**_sweep.scalar_axes(kw))
+        res = _sweep.evaluate_grid(backend=backend, **_sweep.scalar_axes(kw))
         return evaluate_cut(constrained_argmin(res)["cut"], **kw)
+    if backend is not None:
+        # Custom TechNodes outside the registry fall back to the scalar
+        # engine, which evaluates no grids — an explicit backend request
+        # must not be silently ignored there.
+        raise ValueError(
+            "backend= cannot be honored: these knobs fall back to the "
+            "scalar engine (custom TechNode outside the registry)")
     points = sweep_partitions(**kw)
     if cons:
         # The scalar path only carries the objective scalars, so

@@ -39,6 +39,14 @@ device step so the host never sees a full channel array:
   across devices via ``jax.pmap`` (one carry per device, merged once at
   the end), with the same prefetch pipeline, so kernel throughput scales
   with the device count.
+* **Unified backend layer** — the chunk step is assembled by
+  :mod:`repro.core.backend` from the same decode→evaluate→fold contract
+  the dense engine runs: ``backend=`` picks the evaluation backend
+  (``"xla"`` default; ``"pallas"`` fuses decode + Eq. 1-11 + block
+  reductions into one ``pallas_call``, :mod:`repro.kernels.sweep_grid`)
+  and ``scan_chunks=`` fuses K chunk folds per device dispatch via
+  ``lax.scan`` — cutting per-step dispatch overhead at 10⁷–10⁸ configs
+  with bitwise-identical results.
 * **Batched workload axis** — ``models=`` stacks architecture variants
   (see :func:`repro.core.arrays.stacked_model_arrays`) into a leading
   grid axis evaluated inside the same kernel, for SplitNets-style
@@ -70,6 +78,7 @@ import jax.numpy as jnp
 from jax.experimental import enable_x64
 
 from . import arrays as A
+from . import backend as B
 from . import pareto as P
 from . import sweep as SW
 from .constants import (CAMERA_FPS, DETNET_FPS, KEYNET_FPS, NUM_CAMERAS,
@@ -92,8 +101,8 @@ _SURVIVOR_CAP = 16384  # per-chunk compacted-survivor capacity
 _PROBE = 4096          # strided probe (front seed + histogram ranges)
 _MERGE_EVERY = 4096    # candidate-buffer size that triggers an exact merge
 _CHUNK_QUANTUM = 4096  # chunk sizes are clamped to multiples of this
-_STEP_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
-_STEP_CACHE_MAX = 32
+_SCAN_MAX = 8          # auto scan fusion: at most this many chunks/dispatch
+_SCAN_PER = 16         # ... one fused chunk per this many raw steps
 
 
 # ---------------------------------------------------------------------------
@@ -240,190 +249,6 @@ class StreamResult:
 
 
 # ---------------------------------------------------------------------------
-# The compiled chunk step (cached across stream_grid calls)
-# ---------------------------------------------------------------------------
-
-
-def _build_step(S, shape, n_total, chunk, fields, d, k, sign, cons_static,
-                hist_bins, n_dev, devices):
-    """Evaluate one decoded chunk and fold every reduction into the
-    device carry.
-
-    All per-chunk work is fused here: constraint masking, argmin /
-    feasibility counts / channel bounds, the running per-objective top-k
-    table, optional histograms, and the Pareto dominance pre-filter.
-    The step returns only the compacted survivor set ``(flat indices,
-    objective rows, count)`` — O(survivors), not O(chunk), leaves the
-    device.  Axis values, constraint bounds and the filter state are
-    *arguments* (not closure constants), so the compiled step is
-    reusable across grids with the same axis sizes and across filter
-    refreshes — the cache below makes repeated sweeps compile-free.
-    """
-    kernel = SW.vmapped_kernel(S)
-    # int32 decode arithmetic when the flat index space fits — int64
-    # div/mod is measurably slower on CPU.
-    small = n_total + chunk * n_dev < 2**31
-    sign_j = np.asarray(sign)
-    cap = min(_SURVIVOR_CAP, chunk)
-    # Block layout for the two-stage reductions: XLA CPU lowers a plain
-    # full-axis reduce (and especially lax.top_k) over 2¹⁸ lanes as a
-    # scalar loop; reducing (B, W) blocks stage-wise vectorizes, and the
-    # exact top-k needs only the k best blocks (~100× faster than
-    # lax.top_k on the whole chunk, measured).
-    W = min(512, chunk)
-    B = -(-chunk // W)
-    pad = B * W - chunk
-    nb = min(k, B)
-
-    def blocks(x, fill):
-        if pad:
-            x = jnp.pad(x, ((0, 0), (0, pad)), constant_values=fill)
-        return x.reshape(x.shape[0], B, W)
-
-    def step(carry, axvals, aux, start):
-        flat = start + jnp.arange(chunk, dtype=jnp.int64)
-        ingrid = flat < n_total
-        # Mixed-radix decode (the shared sweep.decode_flat_index, traced
-        # on-device) + axis-value gather: the coordinates for this chunk
-        # never exist as host arrays, and XLA fuses the decode straight
-        # into the kernel body.
-        fdec = flat.astype(jnp.int32) if small else flat
-        coords = SW.decode_flat_index(shape, fdec)
-        out = kernel(*[v[c] for v, c in zip(axvals, coords)])
-
-        F = jnp.stack([out[f] for f in fields])            # (nf, chunk)
-        # Without the barrier XLA fuses the (expensive) kernel body into
-        # every reduction that consumes F, re-evaluating it several times
-        # per chunk; the barrier forces one materialization.
-        F = jax.lax.optimization_barrier(F)
-        feas = ingrid
-        for ci, (fi, op) in enumerate(cons_static):
-            # NaN channel values compare False, so invalid configurations
-            # are infeasible under any predicate.
-            feas = feas & SW.CONSTRAINT_OPS[op](F[fi], aux["cons"][ci])
-        valid = jnp.isfinite(F) & feas[None, :]
-        Fm = jnp.where(valid, F, jnp.inf)
-
-        # Running argmin per channel; ties toward the lower flat index
-        # (the flat-index min over the minima, matching np.nanargmin's
-        # first-minimum rule).
-        lv = blocks(Fm, jnp.inf).min(axis=2).min(axis=1)
-        li = blocks(jnp.where(Fm == lv[:, None], flat[None, :], n_total),
-                    n_total).min(axis=2).min(axis=1)
-        # isfinite guard: an all-invalid chunk ties at inf == inf and must
-        # not swap the sentinel min_idx for an invalid config's index.
-        better = (lv < carry["min_val"]) | ((lv == carry["min_val"])
-                                            & jnp.isfinite(lv)
-                                            & (li < carry["min_idx"]))
-        new_carry = {
-            "min_val": jnp.where(better, lv, carry["min_val"]),
-            "min_idx": jnp.where(better, li, carry["min_idx"]),
-            "finite": carry["finite"] + blocks(
-                valid.astype(jnp.int32), 0).sum(axis=2).sum(axis=1),
-            "fmin": jnp.minimum(carry["fmin"], lv),
-            "fmax": jnp.maximum(
-                carry["fmax"],
-                blocks(jnp.where(valid, F, -jnp.inf),
-                       -jnp.inf).max(axis=2).max(axis=1)),
-        }
-
-        # Fused exact top-k.  The k best (value, flat index) pairs of the
-        # chunk live in the k best blocks ranked by (block min, block
-        # index): any element of a lower-ranked block is beaten by >= k
-        # strictly smaller pairs (each better block's min element — lower
-        # value, or equal value at a strictly lower flat index, since
-        # blocks are contiguous index ranges).  lax.top_k over the B
-        # block-mins breaks ties toward the lower block, the gathered
-        # k·W candidates merge against the running (d, k) table with an
-        # exact two-key sort.
-        Fsg = (Fm[:d] if (sign_j == 1.0).all()
-               else jnp.where(valid[:d], F[:d] * sign_j[:, None], jnp.inf))
-        Mb = blocks(Fsg, jnp.inf)                          # (d, B, W)
-        _, bidx = jax.lax.top_k(-Mb.min(axis=2), nb)       # (d, nb)
-        gath = jnp.take_along_axis(Mb, bidx[:, :, None], axis=1)
-        gpos = (bidx[:, :, None] * W
-                + jnp.arange(W, dtype=jnp.int64)[None, None, :])
-        cand_v = jnp.concatenate(
-            [carry["topk_val"], gath.reshape(d, nb * W)], axis=1)
-        cand_i = jnp.concatenate(
-            [carry["topk_idx"], start + gpos.reshape(d, nb * W)], axis=1)
-        sv, si = jax.lax.sort((cand_v, cand_i), dimension=-1, num_keys=2)
-        new_carry["topk_val"] = sv[:, :k]
-        new_carry["topk_idx"] = si[:, :k]
-
-        if hist_bins:
-            he = aux["hist_edges"]                         # (d, bins+1)
-            hist = carry["hist"]
-            for oi in range(d):
-                col = jnp.clip(F[oi], he[oi, 0], he[oi, -1])
-                b = jnp.clip(
-                    jnp.searchsorted(he[oi], col, side="right") - 1,
-                    0, hist_bins - 1)
-                hist = hist.at[oi, b].add(valid[oi].astype(hist.dtype))
-            new_carry["hist"] = hist
-
-        # Device-side dominance pre-filter + compaction: only the rows
-        # the filter cannot prove dominated leave the device.  Compaction
-        # is a binary search over the keep-count prefix sum (an order of
-        # magnitude faster than an XLA CPU scatter); the count is
-        # returned so the host can detect (rare) capacity overflow and
-        # re-derive that chunk's survivors exactly.
-        keep = P.dominance_filter_mask(aux["filter"], Fsg, xp=jnp)
-        csum = jnp.cumsum(keep.astype(jnp.int32))
-        pos = jnp.minimum(
-            jnp.searchsorted(csum, jnp.arange(1, cap + 1, dtype=jnp.int32),
-                             side="left"),
-            chunk - 1)
-        surv = (start + pos.astype(jnp.int64), F[:d, pos].T, csum[-1])
-        return new_carry, surv
-
-    if n_dev > 1:
-        # Every argument is device-mapped: the executor pre-replicates
-        # the axis values and filter state (device_put_replicated), so no
-        # argument is re-sharded per call.
-        return jax.pmap(step, donate_argnums=(0,),
-                        in_axes=(0, 0, 0, 0), devices=devices)
-    return jax.jit(step, donate_argnums=(0,))
-
-
-def _cached_step(S, shape, n_total, chunk, fields, d, k, sign, cons_static,
-                 hist_bins, n_dev, devices):
-    # S is hashed by identity (frozen, eq=False); keying on the object
-    # itself (not id()) keeps it alive so a recycled id can never alias
-    # a stale compiled step.
-    key = (S, shape, chunk, fields, d, k, tuple(sign), cons_static,
-           hist_bins, min(_SURVIVOR_CAP, chunk), n_dev,
-           tuple(str(dv) for dv in devices or ()))
-    fn = _STEP_CACHE.get(key)
-    if fn is None:
-        fn = _build_step(S, shape, n_total, chunk, fields, d, k, sign,
-                         cons_static, hist_bins, n_dev, devices)
-        _STEP_CACHE[key] = fn
-        while len(_STEP_CACHE) > _STEP_CACHE_MAX:
-            _STEP_CACHE.popitem(last=False)
-    return fn
-
-
-def _init_carry(n_total, n_fields, d, k, hist_bins):
-    # Built as numpy and shipped with one batched device_put by the
-    # caller — and with strong dtypes throughout: a weak-typed init carry
-    # would retrace the step on its second call (outputs come back
-    # strong-typed).
-    carry = {
-        "min_val": np.full((n_fields,), np.inf),
-        "min_idx": np.full((n_fields,), n_total, np.int64),
-        "finite": np.zeros((n_fields,), np.int64),
-        "fmin": np.full((n_fields,), np.inf),
-        "fmax": np.full((n_fields,), -np.inf),
-        "topk_val": np.full((d, k), np.inf),
-        "topk_idx": np.full((d, k), n_total, np.int64),
-    }
-    if hist_bins:
-        carry["hist"] = np.zeros((d, hist_bins), np.int64)
-    return carry
-
-
-# ---------------------------------------------------------------------------
 # Host-side exact merges
 # ---------------------------------------------------------------------------
 
@@ -495,10 +320,12 @@ def _probe(S, axis_vals, shape, n_total, obj_fields, sign, cons, hist_bins,
     """
     m = int(min(_PROBE, max(256, n_total // 128), n_total))
     flat = np.unique(np.linspace(0, n_total - 1, m).astype(np.int64))
-    coords = SW.decode_flat_index(shape, flat)
-    out = SW._compiled_kernel(S)(
-        *[a[c] for a, c in zip(axis_vals, coords)])
+    fields = obj_fields + tuple(f for f, _, _ in cons
+                                if f not in obj_fields)
+    out = B.cached_dense_eval("xla", S, shape, fields)(
+        tuple(map(jnp.asarray, axis_vals)), jnp.asarray(flat))
     O = np.stack([np.asarray(out[f]) for f in obj_fields], axis=1)
+    coords = SW.decode_flat_index(shape, flat)
     feas = np.ones(flat.size, bool)
     with np.errstate(invalid="ignore"):
         for f, op, v in cons:
@@ -562,7 +389,9 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                 prefetch: int = DEFAULT_PREFETCH,
                 hist_bins: int = 0,
                 hist_ranges: Optional[Mapping] = None,
-                devices: Optional[Sequence] = None) -> StreamResult:
+                devices: Optional[Sequence] = None,
+                backend: Optional[str] = None,
+                scan_chunks: Optional[int] = None) -> StreamResult:
     """Stream Eqs. 1-11 over an arbitrarily large cartesian grid.
 
     Same axes (and ``models=`` workload batch) as
@@ -588,6 +417,18 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
     histograms (ranges from ``hist_ranges`` or a strided probe pass, with
     out-of-range values clamped into the end bins).  ``devices`` shards
     the chunk stream across multiple JAX devices via ``pmap``.
+
+    ``backend`` selects the evaluation backend of the chunk step
+    (:func:`repro.core.backend.get_backend`; ``None`` -> ``"xla"``,
+    ``"pallas"`` fuses decode + Eq. 1-11 + block reductions into the
+    Pallas grid kernel of :mod:`repro.kernels.sweep_grid`).
+    ``scan_chunks`` fuses that many consecutive chunk folds into one
+    device dispatch via ``lax.scan``, cutting per-chunk dispatch
+    overhead on 10^7+-config spaces (``None`` auto-scales with the step
+    count; 1 disables).  Both knobs are bitwise result-preserving —
+    every backend and every scan depth reproduces the dense-path
+    argmin/top-k/front exactly (the parity matrix of
+    ``tests/test_backend.py``).
     """
     S, axis_vals, axes = SW.build_axes(
         cuts, agg_nodes, sensor_nodes, weight_mems, detnet_fps, keynet_fps,
@@ -620,7 +461,13 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
     cons_static = tuple((fields.index(f), op) for f, op, _ in cons)
     prefetch = max(0, int(prefetch))
 
+    be = B.get_backend(backend)          # fail fast on unknown backends
     dev_list = list(devices) if devices is not None else jax.local_devices()
+    if devices is None and len(dev_list) > 1 and not be.supports_pmap:
+        # Auto-derived device lists must not crash a non-pmap backend —
+        # fall back to one device; an *explicit* multi-device devices=
+        # still raises clearly in backend.build_step.
+        dev_list = dev_list[:1]
     n_dev = max(1, len(dev_list))
     k = max(1, min(int(top_k), n_total))
     # Clamp the chunk to the quantized per-device need: a 10⁵-config grid
@@ -630,7 +477,18 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
     per_dev = -(-n_total // n_dev)
     chunk = min(chunk, -(-per_dev // _CHUNK_QUANTUM) * _CHUNK_QUANTUM)
     cap = min(_SURVIVOR_CAP, chunk)
-    per_step = chunk * n_dev
+    # Scan fusion: fold K consecutive chunks per device dispatch
+    # (lax.scan threads the carry), so per-step dispatch overhead is
+    # paid once per K chunks.  Auto mode scales K with the raw step
+    # count — small grids keep K=1 (nothing to amortize, and the filter
+    # refresh cadence stays fine-grained).
+    raw_steps = -(-per_dev // chunk)
+    if scan_chunks is None:
+        scan = max(1, min(_SCAN_MAX, raw_steps // _SCAN_PER))
+    else:
+        scan = max(1, int(scan_chunks))
+    scan = min(scan, raw_steps)
+    per_step = chunk * scan * n_dev
     n_steps = math.ceil(n_total / per_step)
 
     t0 = time.perf_counter()
@@ -639,9 +497,15 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
             S, axis_vals, full_shape, n_total, objectives, sign, cons,
             hist_bins, hist_ranges)
 
-        run = _cached_step(S, full_shape, n_total, chunk, fields, d, k,
-                           sign, cons_static, hist_bins, n_dev,
-                           dev_list if n_dev > 1 else None)
+        spec = B.ChunkSpec(
+            S=S, shape=full_shape, n_total=n_total, chunk=chunk,
+            fields=fields, d=d, k=k, sign=tuple(sign),
+            cons_static=cons_static, hist_bins=hist_bins,
+            survivor_cap=cap,
+            small_index=n_total + per_step < 2**31,
+            filter_rows=_FILTER_ROWS, filter_bins=_FILTER_BINS)
+        run = B.cached_step(spec, be.name, scan, n_dev,
+                            dev_list if n_dev > 1 else None)
         # One batched device_put per pytree — per-leaf jnp.asarray calls
         # cost ~10 ms of pure dispatch per stream on small grids.  With
         # several devices, broadcast state is replicated up front so the
@@ -652,7 +516,7 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
             dev_target = dev_list[0] if devices is not None else None
             put = (lambda t: jax.device_put(t, dev_target))
         axvals_j = put(tuple(axis_vals))
-        carry = _init_carry(n_total, len(fields), d, k, hist_bins)
+        carry = B.init_carry(spec)
         if n_dev > 1:
             # Stacked on host; the first pmap call shards it, later calls
             # donate the already-sharded buffers.
@@ -687,6 +551,7 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
         t_first = None
         t_wait = 0.0
         t_host = 0.0
+        t_dispatch = 0.0
         n_fallback = 0
 
         def rebuild_filter():
@@ -723,12 +588,17 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
         def host_chunk_survivors(dstart, vlen):
             # Survivor-capacity overflow (warmup-only in practice): fetch
             # nothing from the device — re-derive this chunk's survivors
-            # exactly from a host re-evaluation through the dense kernel,
-            # with the same constraint mask and (host-mirror) pre-filter.
+            # exactly through the shared dense evaluator (the same
+            # decode + evaluate contract the chunk step runs), with the
+            # same constraint mask and (host-mirror) pre-filter.
             flat = np.arange(dstart, dstart + vlen, dtype=np.int64)
-            coords = SW.decode_flat_index(full_shape, flat)
-            out = SW._compiled_kernel(S)(
-                *[jnp.asarray(a[c]) for a, c in zip(axis_vals, coords)])
+            # Full-FIELDS evaluation on purpose: this is the *same*
+            # cached evaluator (same jaxpr) as sweep.evaluate_grid, so
+            # the re-derived survivor values are bitwise the dense
+            # path's — a narrower field set lowers differently and can
+            # drift in the last ulp.
+            out = B.cached_dense_eval("xla", S, full_shape, SW.FIELDS)(
+                tuple(map(jnp.asarray, axis_vals)), jnp.asarray(flat))
             O = np.stack([np.asarray(out[f]) for f in objectives])
             feas = np.ones(vlen, bool)
             with np.errstate(invalid="ignore"):
@@ -739,28 +609,34 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
             loc = np.flatnonzero(keep)
             return flat[loc], O[:, loc].T
 
+        n_sub = n_dev * scan            # chunks folded per dispatch
+
         def process(item):
+            # Survivor layout per dispatch: [device,][scan,] cap — both
+            # optional leading axes flatten device-major / scan-minor,
+            # which is exactly ascending chunk order (device di covers
+            # the scan contiguous chunks at start + di*scan*chunk).
             nonlocal buf_n, t_wait, t_host, t_first, n_fallback
             start, surv = item
             tw = time.perf_counter()
             flat_s, val_s, cnt_s = (np.asarray(x) for x in surv)
             t_wait += time.perf_counter() - tw
             th = time.perf_counter()
-            if n_dev == 1:
-                flat_s, val_s = flat_s[None], val_s[None]
-                cnt_s = cnt_s[None]
-            for di in range(n_dev):
-                dstart = start + chunk * di
+            flat_s = flat_s.reshape(n_sub, -1)
+            val_s = val_s.reshape(n_sub, -1, d)
+            cnt_s = cnt_s.reshape(n_sub)
+            for j in range(n_sub):
+                dstart = start + chunk * j
                 vlen = min(chunk, n_total - dstart)
                 if vlen <= 0:
                     break
-                cnt = int(cnt_s[di])
+                cnt = int(cnt_s[j])
                 if cnt > cap:
                     n_fallback += 1
                     fl, vv = host_chunk_survivors(dstart, vlen)
                 else:
-                    fl = flat_s[di][:cnt]
-                    vv = val_s[di][:cnt]
+                    fl = flat_s[j][:cnt]
+                    vv = val_s[j][:cnt]
                 if len(fl):
                     buf_idx.append(np.asarray(fl, np.int64))
                     buf_vals.append(np.asarray(vv, np.float64))
@@ -774,7 +650,7 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
         def make_starts(si):
             start = si * per_step
             if n_dev > 1:
-                return jnp.asarray(start + chunk * np.arange(n_dev),
+                return jnp.asarray(start + chunk * scan * np.arange(n_dev),
                                    jnp.int64)
             return jnp.int64(start)
 
@@ -783,7 +659,9 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
             # Fully synchronous reference path (and the single-chunk fast
             # path, where there is nothing to overlap).
             for si in range(n_steps):
+                td = time.perf_counter()
                 carry, surv = run(carry, axvals_j, aux, make_starts(si))
+                t_dispatch += time.perf_counter() - td
                 process((si * per_step, surv))
                 if si == 0 and n_steps > 1:
                     merge()
@@ -814,14 +692,20 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                 return False
 
             def produce():
-                nonlocal carry
+                # Time in run() is the per-step invocation cost scan
+                # fusion amortizes over `scan` chunks (on synchronous
+                # CPU dispatch it also absorbs device compute — see the
+                # dispatch_s stats note).
+                nonlocal carry, t_dispatch
                 try:
                     with enable_x64():
                         for si in range(n_steps):
                             if stop.is_set():
                                 break
+                            td = time.perf_counter()
                             carry, surv = run(carry, axvals_j, aux,
                                               make_starts(si))
+                            t_dispatch += time.perf_counter() - td
                             if not put_or_stop((si * per_step, surv)):
                                 break
                             if si == 0:
@@ -882,6 +766,16 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
         # device_wait_s toward the critical path.
         "host_merge_s": t_host,
         "device_wait_s": t_wait,
+        # Dispatch accounting: time spent inside step invocation.  On
+        # async accelerator backends this isolates the per-step launch
+        # overhead scan fusion amortizes (K chunks per dispatch); XLA
+        # CPU dispatch is synchronous, so here it also absorbs blocked
+        # device compute — the dispatch *count* (n_chunks) is the
+        # backend-independent signal, falling K-fold under scan_chunks.
+        # A cold step's first call additionally pays trace + compile.
+        "dispatch_s": t_dispatch,
+        "steps_per_s": n_steps / total_s if total_s else float("inf"),
+        "scan_chunks": float(scan),
         "prefetch": float(prefetch),
         "fallback_chunks": float(n_fallback),
     }

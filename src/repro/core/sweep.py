@@ -361,21 +361,16 @@ def config_kernel(model: A.ModelArrays | None = None):
     return functools.partial(fn, 0)
 
 
-@functools.lru_cache(maxsize=16)
-def _compiled_kernel(S: A.StackedModelArrays):
-    """One jit(vmap(kernel)) per stacked lowering (cached by identity).
+def vmapped_kernel(S: A.StackedModelArrays):
+    """The un-jitted vmapped kernel (for embedding in a larger jit — the
+    backend layer of :mod:`repro.core.backend` wraps it into both the
+    dense evaluator and the fused chunk-reduction step).
 
     The vmapped signature is ``(model_i, cut, agg_i, sen_i, wm_i,
     detnet_fps, keynet_fps, num_cameras, mipi_energy_scale, camera_fps)``
-    over equal-length flat arrays — exactly what both the dense meshgrid
-    path here and the chunked decode of :mod:`repro.core.stream` produce.
+    over equal-length flat arrays — exactly what the shared flat-index
+    decode of :func:`repro.core.backend.decode_gather` produces.
     """
-    return jax.jit(jax.vmap(_make_config_fn(S)))
-
-
-def vmapped_kernel(S: A.StackedModelArrays):
-    """The un-jitted vmapped kernel (for embedding in a larger jit, e.g.
-    the fused chunk-reduction step of :func:`repro.core.stream.stream_grid`)."""
     return jax.vmap(_make_config_fn(S))
 
 
@@ -389,9 +384,16 @@ def decode_flat_index(shape: Sequence[int], flat):
 
     Pure arithmetic — no coordinate meshes are ever materialized, so the
     cost is O(n_axes) per index regardless of grid size.  ``flat`` may be
-    a Python int, a numpy array, or a traced jax array (the streaming
-    executor runs this decode on-device per chunk); returns one index per
+    a Python int, a numpy array, or a traced jax array (the backend
+    layer runs this decode on-device per chunk); returns one index per
     axis, in axis order.
+
+    Index spaces beyond int32 (> 2^31-config grids) are guarded: a
+    narrow integer array input is promoted to int64 before the stride
+    arithmetic, so ``flat // stride`` can never overflow.  For traced
+    jax inputs the promotion needs the caller's scoped ``enable_x64``
+    context (which every engine here runs under) — without it the
+    astype would silently stay 32-bit.
     """
     strides = []
     s = 1
@@ -399,6 +401,10 @@ def decode_flat_index(shape: Sequence[int], flat):
         strides.append(s)
         s *= int(size)
     strides.reverse()
+    if s > np.iinfo(np.int32).max and hasattr(flat, "dtype"):
+        dt = np.dtype(flat.dtype)
+        if np.issubdtype(dt, np.integer) and dt.itemsize < 8:
+            flat = flat.astype(np.int64)
     return tuple((flat // stride) % size
                  for stride, size in zip(strides, shape))
 
@@ -648,7 +654,8 @@ def evaluate_grid(cuts: Optional[Iterable[int]] = None,
                   detnet: NNWorkload | None = None,
                   keynet: NNWorkload | None = None,
                   model: A.ModelArrays | None = None,
-                  models=None) -> SweepResult:
+                  models=None,
+                  backend: Optional[str] = None) -> SweepResult:
     """Evaluate Eqs. 1-11 over the cartesian product of the given axes.
 
     One compiled device call for the whole grid (post first-call jit
@@ -657,19 +664,31 @@ def evaluate_grid(cuts: Optional[Iterable[int]] = None,
     arrays are indexed ``[cut, agg, sensor, wmem, dfps, kfps, ncam,
     mipi_scale, cam_fps]`` — with a leading ``model`` axis when ``models``
     (a workload batch, see :func:`repro.core.arrays.stacked_model_arrays`)
-    is given.  Memory is O(grid); for spaces that do not fit, use the
-    streaming executor :func:`repro.core.stream.stream_grid`.
+    is given.
+
+    The grid runs as *one big chunk* of the shared evaluation-backend
+    contract (:mod:`repro.core.backend`): flat indices are decoded to
+    coordinates on-device, so no host coordinate meshes exist.
+    ``backend`` selects the evaluation backend (``None`` -> ``"xla"``;
+    ``"pallas"`` routes through the fused Pallas grid kernel of
+    :mod:`repro.kernels.sweep_grid`).  Output memory is O(grid); for
+    spaces that do not fit, use the streaming executor
+    :func:`repro.core.stream.stream_grid`.
     """
+    from . import backend as _backend   # import cycle: backend uses sweep
+
     S, axis_arrays, axes = build_axes(
         cuts, agg_nodes, sensor_nodes, weight_mems, detnet_fps, keynet_fps,
         num_cameras, mipi_energy_scale, camera_fps, detnet, keynet, model,
         models)
     shape = tuple(len(v) for v in axes.values())
-    grids = np.meshgrid(*axis_arrays, indexing="ij")
-    flat = [g.ravel() for g in grids]
+    full_shape = tuple(a.size for a in axis_arrays)
+    n = int(np.prod(full_shape))
 
     with enable_x64():
-        out = _compiled_kernel(S)(*map(jnp.asarray, flat))
+        evalfn = _backend.cached_dense_eval(backend, S, full_shape, FIELDS)
+        out = evalfn(tuple(map(jnp.asarray, axis_arrays)),
+                     jnp.arange(n, dtype=jnp.int64))
         data = {k: np.asarray(v).reshape(shape) for k, v in out.items()}
     return SweepResult(axes=axes, data=data)
 

@@ -9,5 +9,10 @@ lowering target.
   sliding window, logit softcap);
 * ``rbe_matmul``      — the paper's 8-bit RBE engine adapted to the MXU:
   int8 x int8 -> int32 blocked matmul with per-channel dequant;
-* ``rmsnorm``         — fused bandwidth-bound normalization.
+* ``rmsnorm``         — fused bandwidth-bound normalization;
+* ``sweep_grid``      — the ``backend="pallas"`` lowering of the
+  design-space engines: flat-index decode + Eq. 1-11 evaluation +
+  constraint mask + dominance pre-filter + block argmin/top-k/bounds/
+  count reductions fused into one pallas_call (registers itself with
+  ``repro.core.backend`` on import).
 """

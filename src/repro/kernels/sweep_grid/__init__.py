@@ -1,0 +1,3 @@
+from .kernel import build_chunk_call, sweep_grid_eval  # noqa: F401
+from .ops import PallasGridBackend  # noqa: F401  (registers "pallas")
+from .ref import chunk_partials_ref, sweep_grid_eval_ref  # noqa: F401

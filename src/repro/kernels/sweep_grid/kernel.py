@@ -1,0 +1,274 @@
+"""Fused design-space grid chunk kernel (Pallas).
+
+The ``backend="pallas"`` lowering of the evaluation-backend contract
+(:mod:`repro.core.backend`): one ``pl.pallas_call`` fuses
+
+* the mixed-radix **flat-index decode** (`sweep.decode_flat_index`,
+  traced per block) and the axis-value gather,
+* the **Eq. 1-11 evaluation** (the same vmapped kernel every engine
+  runs, `sweep.vmapped_kernel`),
+* the compiled **constraint mask** and the Pareto **dominance
+  pre-filter** (`pareto.dominance_filter_mask`, the identical
+  expression the XLA backend traces),
+* and the per-block **argmin / top-k / bounds / count reductions**
+  (block min, first-min flat index, valid count, max, signed block
+  mins for the exact top-k block select, survivor keep mask),
+
+so one kernel launch turns a chunk of flat indices into exactly the
+block partials :func:`repro.core.backend.fold_chunk` folds into the
+donated running carry.  Parity with the XLA backend is pinned by
+``tests/test_backend.py`` (and the :mod:`.ref` oracle).
+
+Grid: ``(n_blocks,)`` over the chunk; each program instance evaluates
+one ``W``-lane block (``W = spec.block``, 512 — a multiple of the
+128-wide VPU lanes; per-block partials land in ``(n_fields, 1)``
+blocks).  Grid geometry, tracked channels and the model tables are
+compile-time constants; axis values, constraint bounds, the filter
+state and the chunk start are runtime inputs, so the compiled call is
+reusable across filter refreshes and same-shaped grids (the same
+contract as the XLA backend).
+
+Validated on CPU with ``interpret=True`` (the CI parity gate); TPU is
+the lowering target.  The kernel body sticks to elementwise math,
+small-table gathers and lane-axis reductions — the pieces that lower
+to the VPU — but the gathers over the layer tables mean a compiled
+TPU build wants the tables staged through SMEM/VMEM scalar prefetch;
+interpret mode sidesteps that.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import pareto as P
+from repro.core import sweep as SW
+
+
+def _full_spec(shape):
+    """BlockSpec mapping the whole array into every program instance."""
+    nd = len(shape)
+    return pl.BlockSpec(shape, lambda i, _nd=nd: (0,) * _nd)
+
+
+def _split_tables(S):
+    """Lift every ndarray field out of the (nested) model-table
+    dataclasses.
+
+    Pallas kernels may not capture array constants — the Eq. 1-11 kernel
+    closes over the layer/payload/technology tables, so they must enter
+    the ``pallas_call`` as explicit inputs.  Returns ``(leaves, spec)``:
+    the arrays in deterministic field order plus a nested name->index
+    spec :func:`_rebuild_tables` uses to reassemble an identical
+    dataclass whose array fields are the kernel-loaded refs.
+    """
+    leaves: list[np.ndarray] = []
+
+    def collect(obj):
+        spec = {}
+        for f in dataclasses.fields(obj):
+            v = getattr(obj, f.name)
+            if isinstance(v, np.ndarray):
+                spec[f.name] = len(leaves)
+                leaves.append(v)
+            elif dataclasses.is_dataclass(v):
+                spec[f.name] = collect(v)
+        return spec
+
+    return leaves, collect(S)
+
+
+def _rebuild_tables(obj, spec, arrays):
+    """Reassemble a table dataclass with array fields replaced by the
+    given (loaded) arrays — the trace-time inverse of
+    :func:`_split_tables`."""
+    repl = {}
+    for name, v in spec.items():
+        repl[name] = (_rebuild_tables(getattr(obj, name), v, arrays)
+                      if isinstance(v, dict) else arrays[v])
+    return dataclasses.replace(obj, **repl)
+
+
+def build_chunk_call(spec, interpret: bool = True):
+    """Compile the fused chunk kernel for one :class:`~repro.core.
+    backend.ChunkSpec`.
+
+    Returns ``fn(axvals, aux, start) -> partials`` — the
+    ``build_chunk_eval`` contract: ``axvals`` is the tuple of per-axis
+    index/value arrays, ``aux`` carries the constraint bounds and the
+    dominance-filter state, ``start`` the chunk's first flat index.
+    The partials dict matches :func:`repro.core.backend.chunk_partials`
+    key-for-key (lane axes padded to ``spec.padded``).
+    """
+    tables, tspec = _split_tables(spec.S)
+    n_tab = len(tables)
+    n_ax = len(spec.shape)
+    nf, d = len(spec.fields), spec.d
+    W, Bn, CP = spec.block, spec.n_blocks, spec.padded
+    has_cons = bool(spec.cons_static)
+    has_table = 2 <= d <= 3
+    pure_min = all(s == 1.0 for s in spec.sign)
+    bins = spec.filter_bins
+
+    def body(*refs):
+        it = iter(refs)
+        tabs = [next(it)[...] for _ in range(n_tab)]
+        axrefs = [next(it) for _ in range(n_ax)]
+        start_ref = next(it)
+        cons_ref = next(it) if has_cons else None
+        rows_ref = next(it)
+        edges_ref = next(it) if has_table else None
+        table_ref = next(it) if has_table else None
+        (fd_ref, fsg_ref, valid_ref, keep_ref, bmin_ref, bidx_ref,
+         cnt_ref, bmax_ref, sgmin_ref) = it
+        kernel = SW.vmapped_kernel(_rebuild_tables(spec.S, tspec, tabs))
+
+        i = pl.program_id(0)
+        lanes = i * W + jax.lax.iota(jnp.int64, W)
+        flat = start_ref[0] + lanes
+        # Lanes beyond the chunk (block padding) or beyond the grid
+        # decode to in-range coordinates anyway (mod arithmetic), so
+        # they evaluate to garbage-but-finite values — the mask keeps
+        # them out of every reduction, exactly like the XLA backend's
+        # pad fill.
+        inchunk = (lanes < spec.chunk) & (flat < spec.n_total)
+        fdec = flat.astype(jnp.int32) if spec.small_index else flat
+        coords = SW.decode_flat_index(spec.shape, fdec)
+        vals = [r[...][c] for r, c in zip(axrefs, coords)]
+        out = kernel(*vals)
+
+        F = jnp.stack([out[f] for f in spec.fields])       # (nf, W)
+        feas = inchunk
+        if has_cons:
+            consv = cons_ref[...]
+            for ci, (fi, op) in enumerate(spec.cons_static):
+                feas = feas & SW.CONSTRAINT_OPS[op](F[fi], consv[ci])
+        valid = jnp.isfinite(F) & feas[None, :]
+        Fm = jnp.where(valid, F, jnp.inf)
+        # Per-row Python-float scales: sign must not become a captured
+        # array constant (scalars inline as literals).
+        Fsg = (Fm[:d] if pure_min
+               else jnp.where(valid[:d],
+                              jnp.stack([F[c] * spec.sign[c]
+                                         for c in range(d)]), jnp.inf))
+
+        filt = {"rows": rows_ref[...]}
+        if has_table:
+            filt["edges"] = edges_ref[...]
+            filt["table"] = table_ref[...]
+        keep = P.dominance_filter_mask(filt, Fsg, xp=jnp)
+
+        bmin = Fm.min(axis=1)
+        fd_ref[...] = F[:d]
+        fsg_ref[...] = Fsg
+        valid_ref[...] = valid[:d]
+        keep_ref[...] = keep[None, :]
+        bmin_ref[...] = bmin[:, None]
+        bidx_ref[...] = jnp.where(Fm == bmin[:, None], flat[None, :],
+                                  spec.n_total).min(axis=1)[:, None]
+        cnt_ref[...] = valid.sum(axis=1, dtype=jnp.int32)[:, None]
+        bmax_ref[...] = jnp.where(valid, F, -jnp.inf).max(axis=1)[:, None]
+        sgmin_ref[...] = Fsg.min(axis=1)[:, None]
+
+    in_specs = [_full_spec(t.shape) for t in tables]        # model tables
+    in_specs += [_full_spec((n,)) for n in spec.shape]      # axis values
+    in_specs.append(_full_spec((1,)))                       # start
+    if has_cons:
+        in_specs.append(_full_spec((len(spec.cons_static),)))
+    in_specs.append(_full_spec((spec.filter_rows, d)))      # filter rows
+    if has_table:
+        in_specs.append(_full_spec((d - 1, bins + 1)))
+        in_specs.append(_full_spec((bins + 1,) * (d - 1)))
+
+    lane_block = lambda rows: pl.BlockSpec((rows, W), lambda i: (0, i))
+    part_block = lambda rows: pl.BlockSpec((rows, 1), lambda i: (0, i))
+    out_specs = [lane_block(d), lane_block(d), lane_block(d),
+                 lane_block(1), part_block(nf), part_block(nf),
+                 part_block(nf), part_block(nf), part_block(d)]
+    out_shape = [
+        jax.ShapeDtypeStruct((d, CP), jnp.float64),         # Fd
+        jax.ShapeDtypeStruct((d, CP), jnp.float64),         # Fsg
+        jax.ShapeDtypeStruct((d, CP), jnp.bool_),           # valid
+        jax.ShapeDtypeStruct((1, CP), jnp.bool_),           # keep
+        jax.ShapeDtypeStruct((nf, Bn), jnp.float64),        # bmin
+        jax.ShapeDtypeStruct((nf, Bn), jnp.int64),          # bidx
+        jax.ShapeDtypeStruct((nf, Bn), jnp.int32),          # cnt
+        jax.ShapeDtypeStruct((nf, Bn), jnp.float64),        # bmax
+        jax.ShapeDtypeStruct((d, Bn), jnp.float64),         # sgmin
+    ]
+    call = pl.pallas_call(body, grid=(Bn,), in_specs=in_specs,
+                          out_specs=out_specs, out_shape=out_shape,
+                          interpret=interpret)
+
+    def chunk_eval(axvals, aux, start):
+        args = [*tables, *axvals, jnp.asarray(start, jnp.int64).reshape(1)]
+        if has_cons:
+            args.append(aux["cons"])
+        filt = aux["filter"]
+        args.append(filt["rows"])
+        if has_table:
+            args.append(filt["edges"])
+            args.append(filt["table"])
+        Fd, Fsg, valid, keep, bmin, bidx, cnt, bmax, sgmin = call(*args)
+        return {"Fd": Fd, "Fsg": Fsg, "valid": valid, "keep": keep[0],
+                "bmin": bmin, "bidx": bidx, "cnt": cnt, "bmax": bmax,
+                "sgmin": sgmin}
+
+    return chunk_eval
+
+
+@functools.lru_cache(maxsize=32)
+def _flat_call(S, shape, fields, n_lanes, block, interpret):
+    """The evaluate-only variant: decode + Eq. 1-11 over an explicit
+    flat-index array (the ``build_dense_eval`` contract — the dense
+    engine's "one big chunk", also usable for strided probe points)."""
+    tables, tspec = _split_tables(S)
+    n_tab = len(tables)
+    n_ax = len(shape)
+    nf = len(fields)
+    Bn = n_lanes // block
+
+    def body(*refs):
+        tabs = [r[...] for r in refs[:n_tab]]
+        axrefs = refs[n_tab:n_tab + n_ax]
+        flat_ref = refs[n_tab + n_ax]
+        f_ref = refs[n_tab + n_ax + 1]
+        kernel = SW.vmapped_kernel(_rebuild_tables(S, tspec, tabs))
+        flat = flat_ref[...]
+        coords = SW.decode_flat_index(shape, flat)
+        vals = [r[...][c] for r, c in zip(axrefs, coords)]
+        out = kernel(*vals)
+        f_ref[...] = jnp.stack([out[f] for f in fields])
+
+    in_specs = [_full_spec(t.shape) for t in tables]
+    in_specs += [_full_spec((n,)) for n in shape]
+    in_specs.append(pl.BlockSpec((block,), lambda i: (i,)))
+    call = pl.pallas_call(
+        body, grid=(Bn,), in_specs=in_specs,
+        out_specs=pl.BlockSpec((nf, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((nf, n_lanes), jnp.float64),
+        interpret=interpret)
+    return lambda *args: call(*tables, *args)
+
+
+def sweep_grid_eval(S, shape, fields, axvals, flat, *,
+                    interpret: bool = True):
+    """Evaluate ``fields`` at the given flat grid indices through the
+    Pallas kernel; returns ``{field: (n,) array}``.  Pads the lane axis
+    to a block multiple internally (padding lanes re-evaluate index 0
+    and are sliced away)."""
+    fields = tuple(fields)
+    n = flat.shape[0]
+    W = min(512, n)
+    Bn = -(-n // W)
+    CP = Bn * W
+    fl = jnp.pad(flat, (0, CP - n)) if CP != n else flat
+    F = _flat_call(S, tuple(shape), fields, CP, W, interpret)(
+        *axvals, fl)
+    return {f: F[i, :n] for i, f in enumerate(fields)}

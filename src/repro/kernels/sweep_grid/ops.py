@@ -1,0 +1,57 @@
+"""Registry integration: the Pallas evaluation backend.
+
+Importing this module (or calling ``backend.get_backend("pallas")``,
+which imports it lazily) registers :class:`PallasGridBackend` under the
+name ``"pallas"`` — after which ``sweep.evaluate_grid``,
+``stream.stream_grid`` and ``partition.optimal_partition`` all accept
+``backend="pallas"``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import backend as B
+
+from . import kernel
+
+
+class PallasGridBackend(B.EvalBackend):
+    """Evaluation backend lowering the chunk contract onto
+    :mod:`.kernel`'s fused ``pallas_call``.
+
+    ``interpret=None`` (default) auto-selects: interpreter mode on
+    non-TPU platforms (the CPU CI/parity configuration), compiled
+    Mosaic on TPU.  The multi-device ``pmap`` path is not supported —
+    shard across Pallas-capable devices by passing explicit
+    single-device ``devices=`` lists per process instead.
+    """
+
+    name = "pallas"
+    supports_pmap = False
+
+    def __init__(self, interpret: bool | None = None):
+        self.interpret = interpret
+
+    def _interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.local_devices()[0].platform != "tpu"
+
+    def build_chunk_eval(self, spec):
+        return kernel.build_chunk_call(spec, interpret=self._interpret())
+
+    def build_dense_eval(self, S, shape, fields):
+        fields = tuple(fields)
+        shape = tuple(shape)
+        interpret = self._interpret()
+
+        @jax.jit
+        def evalfn(axvals, flat):
+            return kernel.sweep_grid_eval(S, shape, fields, axvals, flat,
+                                          interpret=interpret)
+
+        return evalfn
+
+
+B.register_backend(PallasGridBackend())

@@ -1,0 +1,28 @@
+"""Pure-XLA oracle for the fused sweep-grid chunk kernel.
+
+The reference is not a re-implementation: it is the *shared* chunk
+expression of :mod:`repro.core.backend` (``decode_gather`` +
+``vmapped_kernel`` + ``chunk_partials``), i.e. exactly what the default
+``"xla"`` backend traces.  The Pallas kernel must reproduce these block
+partials — ``tests/test_backend.py`` pins every partial array, so the
+two lowerings of decode/evaluate/mask/block-reduce can never drift.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import backend as B
+
+
+def chunk_partials_ref(spec, axvals, aux, start):
+    """Block partials of one chunk through the XLA backend (jitted)."""
+    evalfn = B.get_backend("xla").build_chunk_eval(spec)
+    return jax.jit(evalfn)(axvals, aux, start)
+
+
+def sweep_grid_eval_ref(S, shape, fields, axvals, flat):
+    """Channel values at flat grid indices through the XLA dense
+    evaluator — the oracle for :func:`..kernel.sweep_grid_eval`."""
+    return B.get_backend("xla").build_dense_eval(S, tuple(shape),
+                                                 tuple(fields))(axvals, flat)

@@ -20,8 +20,11 @@ streaming/dense parity (argmin, top-k, Pareto front, counts), async
 double-buffered pipeline parity across prefetch depths, the backend
 registry (``backend="pallas"`` in interpret mode and ``scan_chunks=4``
 fused dispatch, both exact vs dense), compiled ``constraints=`` masking
-vs the dense host post-filter, and stacked-workload parity end-to-end —
-perf-path regressions fail CI, not just benchmark runs.
+vs the dense host post-filter, stacked-workload parity end-to-end, and
+the fault-tolerance recovery paths — a SIGKILLed checkpointed sweep
+must resume in a fresh process with bitwise-identical results, and
+seeded transient faults must retry to exact parity — so perf-path *and*
+resilience regressions fail CI, not just benchmark runs.
 """
 
 from __future__ import annotations
@@ -142,6 +145,28 @@ def smoke_rows():
     assert best.avg_power <= partition.optimal_partition().avg_power * (
         1 + 1e-12)
 
+    # Seeded transient faults (raise-on-chunk-k + Bernoulli rate): the
+    # bounded retry path must converge with untouched results.
+    from repro.runtime import FaultInjector, FaultPlan
+    inj = FaultInjector(FaultPlan(fail_chunks=(1,), transient_rate=0.5,
+                                  seed=3))
+    faulted = stream.stream_grid(**grid_kw, chunk_size=97, track="all",
+                                 fault_injector=inj)
+    assert inj.injected["transient"] >= 1, "no transient faults fired"
+    assert faulted.stats["retries"] == inj.injected["transient"], \
+        "retry accounting drifted from injected fault count"
+    assert all(faulted.argmin(f) == dense.argmin(f)
+               for f in sweep.FIELDS), "retried sweep argmin drifted"
+    ff = faulted.pareto_front()
+    assert np.array_equal(ff.indices, df.indices) and \
+        np.array_equal(ff.values, df.values), "retried sweep front drifted"
+    n_retries = int(faulted.stats["retries"])
+
+    # Kill-resume exact parity: SIGKILL a checkpointed sweep mid-flight
+    # in a subprocess, then resume it in a fresh process and require
+    # bitwise-identical deliverables.
+    resumed_step = _smoke_kill_resume(grid_kw)
+
     return [
         ("smoke.stream_dense_parity", 1.0,
          f"argmin/top-k/front/counts exact on {dense.n_configs} configs"),
@@ -155,8 +180,71 @@ def smoke_rows():
          f"compiled latency<= {lat_budget:.3g} mask == dense post-filter"),
         ("smoke.stacked_parity", 1.0,
          f"{len(pairs)} stacked models <=1e-6 vs single grids"),
+        ("smoke.transient_fault_parity", 1.0,
+         f"{n_retries} injected faults retried to exact parity"),
+        ("smoke.kill_resume_parity", 1.0,
+         f"SIGKILL at chunk 2 -> resumed from step {resumed_step} "
+         f"bitwise-identical"),
         ("smoke.front_size", float(sf.size), "reference-front members"),
     ]
+
+
+def _smoke_kill_resume(grid_kw: dict) -> int:
+    """SIGKILL a checkpointed subprocess sweep, resume in a fresh one.
+
+    Returns the resumed-from step index (> 0).  The resume child
+    recomputes the dense reference itself and asserts bitwise parity on
+    every deliverable, so the gate fails on any divergence, not just a
+    crash."""
+    import json
+    import os
+    import signal
+    import subprocess
+    import sys
+    import tempfile
+
+    with tempfile.TemporaryDirectory(prefix="smoke_ckpt_") as ckpt:
+        common = f"""
+import numpy as np
+from repro.core import pareto, stream, sweep
+GRID = {grid_kw!r}
+KW = dict(chunk_size=97, top_k=4, track="all",
+          checkpoint_dir={ckpt!r}, checkpoint_every_steps=1)
+"""
+        kill = common + """
+from repro.runtime import FaultInjector, FaultPlan
+inj = FaultInjector(FaultPlan(kill_at=2))
+stream.stream_grid(**GRID, **KW, fault_injector=inj)
+raise SystemExit("unreachable: SIGKILL did not fire")
+"""
+        resume = common + """
+import json
+dense = sweep.evaluate_grid(**GRID)
+res = stream.stream_grid(**GRID, **KW)
+assert res.stats["resumed_from_step"] > 0, res.stats
+assert all(res.argmin(f) == dense.argmin(f) for f in sweep.FIELDS)
+assert all(res.top_k(o) == dense.top_k(o, 4) for o in res.objectives)
+df = pareto.pareto_front(dense); sf = res.pareto_front()
+assert np.array_equal(df.indices, sf.indices)
+assert np.array_equal(df.values, sf.values)
+print(json.dumps({"resumed_from_step": res.stats["resumed_from_step"]}))
+"""
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src")]
+            + [p for p in env.get("PYTHONPATH", "").split(os.pathsep)
+               if p])
+        out1 = subprocess.run([sys.executable, "-c", kill], env=env,
+                              capture_output=True, text=True, timeout=600)
+        assert out1.returncode == -signal.SIGKILL, (
+            f"kill child exited {out1.returncode}, expected SIGKILL: "
+            f"{out1.stderr[-1000:]}")
+        out2 = subprocess.run([sys.executable, "-c", resume], env=env,
+                              capture_output=True, text=True, timeout=600)
+        assert out2.returncode == 0, \
+            f"resume child failed: {out2.stderr[-2000:]}"
+        return int(json.loads(out2.stdout.strip().splitlines()[-1])
+                   ["resumed_from_step"])
 
 
 def main() -> None:

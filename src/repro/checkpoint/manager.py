@@ -61,9 +61,15 @@ class CheckpointManager:
         for name in os.listdir(self.root):
             if name.startswith("step_") and not name.endswith(".tmp"):
                 try:
-                    out.append(int(name.split("_")[1]))
+                    step = int(name.split("_")[1])
                 except (IndexError, ValueError):
-                    pass
+                    continue
+                # A crash can only ever leave *.tmp debris (the rename
+                # is atomic), but guard against foreign/truncated dirs:
+                # a step without its manifest is not a checkpoint.
+                if os.path.exists(os.path.join(self._step_dir(step),
+                                               "manifest.json")):
+                    out.append(step)
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
@@ -96,7 +102,10 @@ class CheckpointManager:
             # raw bytes: npz can't store ml_dtypes (bf16) natively
             buffers[key] = np.frombuffer(
                 arr.tobytes(), np.uint8).reshape(-1)
-        np.savez(os.path.join(tmp, "arrays.npz"), **buffers)
+        npz_path = os.path.join(tmp, "arrays.npz")
+        np.savez(npz_path, **buffers)
+        with open(npz_path, "rb") as f:
+            os.fsync(f.fileno())
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
             f.flush()
@@ -104,6 +113,12 @@ class CheckpointManager:
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
+        # fsync the parent so the rename itself survives a crash
+        dfd = os.open(self.root, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
         self._enforce_retention()
         return final
 
@@ -145,6 +160,27 @@ class CheckpointManager:
         else:
             arrays = [jnp.asarray(a) for a in arrays]
         return jax.tree_util.tree_unflatten(treedef, arrays)
+
+    def restore_items(self, step: int) -> dict[str, np.ndarray]:
+        """Restore a checkpoint as ``{path: array}`` without a like-tree.
+
+        For callers whose state has data-dependent shapes (e.g. the
+        streaming executor's Pareto-front buffers, whose row count is
+        unknowable before restore): leaves come back as host numpy
+        arrays keyed by their saved pytree path, with shapes and dtypes
+        exactly as stored.
+        """
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        buffers = np.load(os.path.join(d, "arrays.npz"))
+        out: dict[str, np.ndarray] = {}
+        for entry in manifest["leaves"]:
+            raw = buffers[entry["key"]].tobytes()
+            dt = jnp.dtype(entry["dtype"])
+            out[entry["path"]] = np.frombuffer(raw, dt).reshape(
+                entry["shape"])
+        return out
 
     def metadata(self, step: int) -> dict:
         with open(os.path.join(self._step_dir(step),

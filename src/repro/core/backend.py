@@ -45,8 +45,10 @@ flat indices are int64 whenever the index space could overflow int32
 
 from __future__ import annotations
 
+import collections.abc
 import dataclasses
 import functools
+import hashlib
 import importlib
 from collections import OrderedDict
 from typing import Callable, Sequence
@@ -473,3 +475,146 @@ def cached_dense_eval(backend: str | None, S, shape: tuple[int, ...],
 @functools.lru_cache(maxsize=32)
 def _cached_dense_eval(backend: str, S, shape, fields):
     return get_backend(backend).build_dense_eval(S, shape, fields)
+
+
+# ---------------------------------------------------------------------------
+# Carry serialization contract (checkpoint/resume, device merging)
+# ---------------------------------------------------------------------------
+
+#: Version of the carry layout produced by :func:`init_carry` /
+#: :func:`fold_chunk`.  Baked into :func:`job_signature`, so a checkpoint
+#: written under an older carry format can never be restored into a newer
+#: executor — bump it whenever the carry pytree structure, dtypes or
+#: merge semantics change.
+CARRY_VERSION = 1
+
+
+def carry_to_host(carry):
+    """Owning host copy of a (possibly device-resident) carry pytree.
+
+    ``np.array`` (not ``np.asarray``): on the CPU backend a zero-copy
+    view of the device buffer would be corrupted the moment the next
+    step *donates* that buffer, so the snapshot must own its memory.
+    """
+    return jax.tree_util.tree_map(lambda x: np.array(x), carry)
+
+
+def merge_device_carries(carry, k: int):
+    """Fold per-device reduction carries into one (host side, exact).
+
+    Every carry reduction is associative with the exact dense-path tie
+    rules — lexicographic ``(value, index)`` min for the argmin, a
+    two-key sorted merge for top-k, plain sums/min/max for counts,
+    bounds and histograms — so merging the ``(ndev, ...)`` stacked
+    carries is order-independent and bitwise reproducible.  The merged
+    tree has the exact structure and dtypes of :func:`init_carry`
+    output, which makes it the **serialization form** of a sweep's
+    reduction state: device-count independent, so a checkpointed carry
+    restores onto any mesh (merged carry on device 0, fresh inits on
+    the rest).
+    """
+    mv, mi = carry["min_val"], carry["min_idx"]     # (ndev, nf)
+    order = np.lexsort((mi, mv), axis=0)[0]         # per-field best device
+    nf = mv.shape[1]
+    merged = {
+        "min_val": mv[order, np.arange(nf)],
+        "min_idx": mi[order, np.arange(nf)],
+        "finite": carry["finite"].sum(axis=0),
+        "fmin": carry["fmin"].min(axis=0),
+        "fmax": carry["fmax"].max(axis=0),
+    }
+    tv, ti = carry["topk_val"], carry["topk_idx"]   # (ndev, d, k)
+    d = tv.shape[1]
+    cat_v = tv.transpose(1, 0, 2).reshape(d, -1)
+    cat_i = ti.transpose(1, 0, 2).reshape(d, -1)
+    out_v = np.empty((d, k))
+    out_i = np.empty((d, k), np.int64)
+    for oi in range(d):
+        order = np.lexsort((cat_i[oi], cat_v[oi]))[:k]
+        out_v[oi], out_i[oi] = cat_v[oi][order], cat_i[oi][order]
+    merged["topk_val"], merged["topk_idx"] = out_v, out_i
+    if "hist" in carry:
+        merged["hist"] = carry["hist"].sum(axis=0)
+    return merged
+
+
+def _hash_update(h, obj) -> None:
+    """Recursively fold ``obj`` into hash ``h`` content-wise.
+
+    Covers everything a sweep specification is made of: scalars and
+    strings, numpy/JAX arrays (dtype + shape + bytes), dataclasses (the
+    stacked model arrays and their nested workload arrays, field by
+    field), sequences and mappings.  Type tags and delimiters keep the
+    encoding prefix-free, so e.g. ``("ab",)`` and ``("a", "b")`` hash
+    differently.
+    """
+    if obj is None or isinstance(obj, (bool, int, float, str,
+                                       np.integer, np.floating)):
+        h.update(f"<{type(obj).__name__}:{obj!r}>".encode())
+    elif isinstance(obj, bytes):
+        h.update(b"<bytes:")
+        h.update(obj)
+        h.update(b">")
+    elif isinstance(obj, np.ndarray):
+        h.update(f"<arr:{obj.dtype}:{obj.shape}:".encode())
+        h.update(np.ascontiguousarray(obj).tobytes())
+        h.update(b">")
+    elif dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        h.update(f"<dc:{type(obj).__name__}:".encode())
+        for f in dataclasses.fields(obj):
+            h.update(f.name.encode())
+            h.update(b"=")
+            _hash_update(h, getattr(obj, f.name))
+        h.update(b">")
+    elif isinstance(obj, (tuple, list)):
+        h.update(b"<seq:")
+        for x in obj:
+            _hash_update(h, x)
+        h.update(b">")
+    elif isinstance(obj, collections.abc.Mapping):
+        h.update(b"<map:")
+        for kk in sorted(obj, key=str):
+            h.update(str(kk).encode())
+            h.update(b":")
+            _hash_update(h, obj[kk])
+        h.update(b">")
+    else:
+        # device arrays and other array-likes
+        _hash_update(h, np.asarray(obj))
+
+
+#: ChunkSpec fields folded into the job signature.  Deliberately *not*
+#: ``small_index`` / ``survivor_cap`` / ``filter_*``: those shape only
+#: the traced computation, never the reduction semantics (the dominance
+#: filter is a pre-cull; survivor-cap overflow falls back to an exact
+#: host re-derivation), so they must not invalidate checkpoints.
+_SIGNATURE_SPEC_FIELDS = ("shape", "n_total", "chunk", "fields", "d", "k",
+                          "sign", "cons_static", "hist_bins")
+
+
+def job_signature(spec: ChunkSpec, backend: str | None, scan_chunks: int,
+                  cons: Sequence[tuple[str, str, float]],
+                  axis_vals: Sequence, hist_ranges=None) -> str:
+    """Content hash identifying one resumable sweep job.
+
+    Two runs share a signature iff their checkpoints are
+    interchangeable: same model stack (hashed by *content*, down to
+    every tech-table entry), same axes and axis values, same tracked
+    fields / objectives orientation / top-k width, same constraint
+    predicates and bounds, same chunk geometry and scan fusion, same
+    backend, same histogram spec, same carry format version.  The
+    streaming executor refuses to restore a checkpoint whose recorded
+    signature differs — a stale snapshot from a different spec must
+    fail loudly, never silently merge.
+    """
+    h = hashlib.sha256()
+    _hash_update(h, ("carry-format", CARRY_VERSION))
+    _hash_update(h, ("backend", backend or DEFAULT_BACKEND))
+    _hash_update(h, ("scan", int(scan_chunks)))
+    for name in _SIGNATURE_SPEC_FIELDS:
+        _hash_update(h, (name, getattr(spec, name)))
+    _hash_update(h, ("model-stack", spec.S))
+    _hash_update(h, ("constraints", tuple(cons)))
+    _hash_update(h, ("axes", tuple(np.asarray(a) for a in axis_vals)))
+    _hash_update(h, ("hist-ranges", hist_ranges))
+    return h.hexdigest()

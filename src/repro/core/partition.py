@@ -227,6 +227,8 @@ def _is_axis(v) -> bool:
 def optimal_partition(engine: str = "array",
                       objective: str = "avg_power",
                       constraints=None, backend: str | None = None,
+                      checkpoint_dir: str | None = None,
+                      checkpoint_every_s: float | None = None,
                       **kw) -> PartitionPoint:
     """Optimal partition point along one objective (Fig. 2 generalized).
 
@@ -268,6 +270,13 @@ def optimal_partition(engine: str = "array",
     unknown backend raises immediately naming the available ones;
     ``engine="scalar"`` evaluates no grids and rejects an explicit
     backend.
+
+    ``checkpoint_dir`` (with optional ``checkpoint_every_s``) makes the
+    *streaming* route fault-tolerant: searches above
+    :data:`STREAM_THRESHOLD` configurations periodically snapshot their
+    running reductions there and resume bitwise-identically after a
+    crash (see :func:`repro.core.stream.stream_grid`).  Dense and
+    scalar searches finish in one pass and ignore the knobs.
     """
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown objective {objective!r}; "
@@ -334,9 +343,14 @@ def optimal_partition(engine: str = "array",
             n_configs *= len(axes[name])
         if n_configs > STREAM_THRESHOLD:
             from . import stream as _stream
+            ckpt_kw = {}
+            if checkpoint_dir is not None:
+                ckpt_kw["checkpoint_dir"] = checkpoint_dir
+                if checkpoint_every_s is not None:
+                    ckpt_kw["checkpoint_every_s"] = checkpoint_every_s
             win = _stream.stream_grid(
                 cuts=cuts, objectives=(objective,), constraints=cons,
-                backend=backend, **axes).argmin(objective)
+                backend=backend, **ckpt_kw, **axes).argmin(objective)
         else:
             win = constrained_argmin(_sweep.evaluate_grid(
                 cuts=cuts, backend=backend, **axes))

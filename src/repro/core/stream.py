@@ -47,6 +47,22 @@ device step so the host never sees a full channel array:
   and ``scan_chunks=`` fuses K chunk folds per device dispatch via
   ``lax.scan`` — cutting per-step dispatch overhead at 10⁷–10⁸ configs
   with bitwise-identical results.
+* **Fault tolerance** — the executor is resumable and self-healing:
+  ``checkpoint_dir=`` periodically snapshots the merged running carry,
+  the exact Pareto-front buffer and the next flat-index cursor through
+  :class:`repro.checkpoint.CheckpointManager` (atomic tmp-dir +
+  rename), keyed by a content hash of the sweep specification
+  (:func:`repro.core.backend.job_signature`) so a stale snapshot from a
+  different spec is rejected loudly; a re-run with the same arguments
+  resumes from the newest snapshot with **bitwise-identical** results.
+  ``retry_policy=`` bounds in-place retries of transiently failed chunk
+  dispatches and full pipeline restarts from the last snapshot; on the
+  pmap path a dead device shard triggers an elastic replan
+  (:func:`repro.runtime.elastic.drop_worker`) that re-issues only the
+  unfinished chunk ranges on the survivors, degrading gracefully to
+  single-device execution.  ``fault_injector=``
+  (:class:`repro.runtime.fault_injection.FaultInjector`) exercises
+  every one of those recovery paths deterministically in CI.
 * **Batched workload axis** — ``models=`` stacks architecture variants
   (see :func:`repro.core.arrays.stacked_model_arrays`) into a leading
   grid axis evaluated inside the same kernel, for SplitNets-style
@@ -77,6 +93,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
+from ..checkpoint import CheckpointManager
+from ..runtime.elastic import drop_worker
+from ..runtime.fault_injection import DeviceLostError, TransientDeviceError
+from ..runtime.fault_tolerance import RetryPolicy, StragglerDetector
 from . import arrays as A
 from . import backend as B
 from . import pareto as P
@@ -103,6 +123,19 @@ _MERGE_EVERY = 4096    # candidate-buffer size that triggers an exact merge
 _CHUNK_QUANTUM = 4096  # chunk sizes are clamped to multiples of this
 _SCAN_MAX = 8          # auto scan fusion: at most this many chunks/dispatch
 _SCAN_PER = 16         # ... one fused chunk per this many raw steps
+
+#: Default seconds between checkpoint snapshots when ``checkpoint_dir``
+#: is set (wall-clock cadence; ``checkpoint_every_steps`` overrides it
+#: with a deterministic step-count cadence).
+DEFAULT_CHECKPOINT_EVERY_S = 30.0
+
+#: Failures that trigger a pipeline restart from the last consistent
+#: snapshot (vs the in-place retry of pre-dispatch transient faults and
+#: the elastic replan of device loss).
+try:
+    _RESTARTABLE: tuple = (TransientDeviceError, jax.errors.JaxRuntimeError)
+except AttributeError:  # pragma: no cover - jax without jax.errors
+    _RESTARTABLE = (TransientDeviceError,)
 
 
 # ---------------------------------------------------------------------------
@@ -362,6 +395,52 @@ def _probe(S, axis_vals, shape, n_total, obj_fields, sign, cons, hist_bins,
     return seed, edges, axis_valid
 
 
+def _resume_into(mgr: CheckpointManager, signature: str, state: dict,
+                 counters: dict, chunk: int) -> None:
+    """Restore the newest valid snapshot of ``mgr`` into ``state``.
+
+    Snapshots are tried newest-first; one whose manifest is unreadable
+    (truncated by a foreign writer — the atomic rename means our own
+    crashes can only leave ``.tmp`` debris) falls back to the next
+    older.  A snapshot recorded under a *different* job signature is a
+    hard error: silently merging carry state across specifications
+    would corrupt every deliverable, so stale checkpoints must fail
+    loudly.
+    """
+    for step in reversed(mgr.all_steps()):
+        try:
+            meta = mgr.metadata(step)
+        except (OSError, ValueError, KeyError):
+            continue
+        saved = meta.get("signature") if isinstance(meta, dict) else None
+        if saved != signature:
+            raise ValueError(
+                f"checkpoint directory {mgr.root!r} (step {step}) was "
+                f"written by a different sweep job (signature "
+                f"{str(saved)[:12]}... != {signature[:12]}...): refusing "
+                f"to resume, a stale snapshot must never merge into a "
+                f"new sweep.  The signature covers the model stack, "
+                f"axes, objectives/tracked fields, constraints, top_k, "
+                f"histogram spec, backend, chunk size and scan fusion "
+                f"(chunk and scan_chunks auto-derive from the device "
+                f"count unless passed explicitly).  Point "
+                f"checkpoint_dir at a fresh directory or delete the "
+                f"stale checkpoints.")
+        items = mgr.restore_items(step)
+        state["carry"] = {kk.split("/", 1)[1]: v
+                          for kk, v in items.items()
+                          if kk.startswith("carry/")}
+        state["front_vals"] = np.asarray(items["front_values"],
+                                         np.float64)
+        state["front_idx"] = np.asarray(items["front_indices"], np.int64)
+        state["base"] = int(meta["next_flat"])
+        for kk, v in (meta.get("counters") or {}).items():
+            if kk in counters:
+                counters[kk] = float(v)
+        counters["resumed_from_step"] = float(state["base"] // chunk)
+        return
+
+
 # ---------------------------------------------------------------------------
 # The executor
 # ---------------------------------------------------------------------------
@@ -391,7 +470,13 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                 hist_ranges: Optional[Mapping] = None,
                 devices: Optional[Sequence] = None,
                 backend: Optional[str] = None,
-                scan_chunks: Optional[int] = None) -> StreamResult:
+                scan_chunks: Optional[int] = None,
+                checkpoint_dir: Optional[str] = None,
+                checkpoint_every_s: float = DEFAULT_CHECKPOINT_EVERY_S,
+                checkpoint_every_steps: Optional[int] = None,
+                checkpoint_keep: int = 3,
+                retry_policy: Optional[RetryPolicy] = None,
+                fault_injector=None) -> StreamResult:
     """Stream Eqs. 1-11 over an arbitrarily large cartesian grid.
 
     Same axes (and ``models=`` workload batch) as
@@ -429,6 +514,25 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
     every backend and every scan depth reproduces the dense-path
     argmin/top-k/front exactly (the parity matrix of
     ``tests/test_backend.py``).
+
+    ``checkpoint_dir`` makes the sweep resumable: the executor
+    snapshots its consistent state (merged carry + exact front + next
+    flat index) there every ``checkpoint_every_s`` seconds — or every
+    ``checkpoint_every_steps`` dispatch steps when given, which is
+    deterministic — keeping the ``checkpoint_keep`` newest snapshots,
+    and a later call with the *same specification* resumes from the
+    newest snapshot with bitwise-identical deliverables (a different
+    specification is rejected with :class:`ValueError`).
+    ``retry_policy`` (default :class:`repro.runtime.fault_tolerance.
+    RetryPolicy`) bounds the recovery machinery: in-place retries of
+    transient pre-dispatch faults, pipeline restarts from the last
+    snapshot, straggler/timeout accounting.  ``fault_injector`` is a
+    test hook called as ``injector(chunk_ordinal, flat_start)`` before
+    every dispatch (see :mod:`repro.runtime.fault_injection`).
+    Resilience counters land in ``StreamResult.stats``: ``retries``,
+    ``restarts``, ``resumed_from_step``, ``checkpoints_written``,
+    ``checkpoint_write_s``, ``chunks_reissued``, ``elastic_replans``,
+    ``stragglers`` and ``step_timeouts``.
     """
     S, axis_vals, axes = SW.build_axes(
         cuts, agg_nodes, sensor_nodes, weight_mems, detnet_fps, keynet_fps,
@@ -492,6 +596,13 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
     n_steps = math.ceil(n_total / per_step)
 
     t0 = time.perf_counter()
+    policy = retry_policy if retry_policy is not None else RetryPolicy()
+    counters = {
+        "retries": 0.0, "restarts": 0.0, "resumed_from_step": 0.0,
+        "checkpoint_write_s": 0.0, "checkpoints_written": 0.0,
+        "chunks_reissued": 0.0, "elastic_replans": 0.0,
+        "stragglers": 0.0, "step_timeouts": 0.0,
+    }
     with enable_x64():
         seed_signed, hist_edges, axis_valid = _probe(
             S, axis_vals, full_shape, n_total, objectives, sign, cons,
@@ -504,40 +615,41 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
             survivor_cap=cap,
             small_index=n_total + per_step < 2**31,
             filter_rows=_FILTER_ROWS, filter_bins=_FILTER_BINS)
-        run = B.cached_step(spec, be.name, scan, n_dev,
-                            dev_list if n_dev > 1 else None)
-        # One batched device_put per pytree — per-leaf jnp.asarray calls
-        # cost ~10 ms of pure dispatch per stream on small grids.  With
-        # several devices, broadcast state is replicated up front so the
-        # pmap path never re-shards an argument per step.
-        if n_dev > 1:
-            put = (lambda t: jax.device_put_replicated(t, dev_list))
-        else:
-            dev_target = dev_list[0] if devices is not None else None
-            put = (lambda t: jax.device_put(t, dev_target))
-        axvals_j = put(tuple(axis_vals))
-        carry = B.init_carry(spec)
-        if n_dev > 1:
-            # Stacked on host; the first pmap call shards it, later calls
-            # donate the already-sharded buffers.
-            carry = jax.tree_util.tree_map(
-                lambda x: np.stack([x] * n_dev), carry)
-        else:
-            carry = put(carry)
 
-        front_vals = np.empty((0, d))       # running exact front, natural
-        front_idx = np.empty((0,), np.int64)
-        buf_vals: list = []                 # pending front candidates
-        buf_idx: list = []
-        buf_n = 0
-        filt_np: dict = {}                  # host mirror of the device filter
-        aux_extra = {}
-        if cons:
-            aux_extra["cons"] = put(
-                np.asarray([v for _, _, v in cons], np.float64))
-        if hist_bins:
-            aux_extra["hist_edges"] = put(hist_edges)
-        aux = dict(aux_extra)
+        # The consistent snapshot all recovery pivots on: the merged
+        # (device-count-independent) host carry, the exact running
+        # front, and the next flat-index cursor — every chunk below
+        # ``base`` is folded in, nothing above it is.  Restarts,
+        # elastic replans and cross-process resumes all rebuild the
+        # pipeline from here.  chunk and scan were derived above from
+        # the *full* grid geometry (never the remaining work), so a
+        # resumed run recreates the identical ChunkSpec and signature.
+        state = {"carry": B.init_carry(spec),
+                 "front_vals": np.empty((0, d)),
+                 "front_idx": np.empty((0,), np.int64),
+                 "base": 0}
+        mgr = None
+        signature = ""
+        if checkpoint_dir is not None:
+            mgr = CheckpointManager(checkpoint_dir,
+                                    keep=max(1, int(checkpoint_keep)))
+            signature = B.job_signature(spec, be.name, scan, cons,
+                                        axis_vals, hist_ranges)
+            _resume_into(mgr, signature, state, counters, chunk)
+
+        def write_checkpoint():
+            tw = time.perf_counter()
+            mgr.save(int(state["base"]),
+                     {"carry": state["carry"],
+                      "front_values": state["front_vals"],
+                      "front_indices": state["front_idx"]},
+                     metadata={"signature": signature,
+                               "next_flat": int(state["base"]),
+                               "counters": dict(counters),
+                               "format": B.CARRY_VERSION})
+            counters["checkpoint_write_s"] += time.perf_counter() - tw
+            counters["checkpoints_written"] += 1.0
+
         # Pre-cull the probe seed toward its near-front subset once: the
         # filter build draws quantile bins and spread rows from the rows
         # it is given, and a mostly-dominated cloud drags both toward the
@@ -553,203 +665,420 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
         t_host = 0.0
         t_dispatch = 0.0
         n_fallback = 0
+        detector = StragglerDetector(policy.straggler_factor,
+                                     policy.straggler_window)
+        dispatched_flat = state["base"]     # dispatch high-water mark
 
-        def rebuild_filter():
-            nonlocal filt_np, aux
-            base = np.concatenate([front_vals * sign, seed_signed]) \
-                if seed_signed.size else front_vals * sign
-            filt_np = P.build_dominance_filter(base, d, _FILTER_ROWS,
-                                               _FILTER_BINS)
-            aux = dict(aux_extra, filter=put(filt_np))
-
-        def merge(final=False):
-            # Fold the candidate buffer into the running exact front.  In
-            # the pipelined path this runs while the producer thread is
-            # inside XLA on the next chunks, so its cost hides under
-            # device compute; the filter-based pre-cull keeps the exact
-            # dominance passes to a few hundred rows.
-            nonlocal front_vals, front_idx, buf_vals, buf_idx, buf_n
-            if buf_n:
-                cat_v = np.concatenate(buf_vals)
-                cat_i = np.concatenate(buf_idx)
-                cat_sg = cat_v * sign
-                base = np.concatenate([front_vals * sign, cat_sg,
-                                       seed_signed])
-                f = P.build_dominance_filter(base, d, _FILTER_ROWS,
-                                             _FILTER_BINS)
-                keep = P.dominance_filter_mask(
-                    f, np.ascontiguousarray(cat_sg.T), xp=np)
-                front_vals, front_idx = _merge_into_front(
-                    front_vals, front_idx, cat_v[keep], cat_i[keep], sign)
-                buf_vals, buf_idx, buf_n = [], [], 0
-            if not final:
-                rebuild_filter()
-
-        def host_chunk_survivors(dstart, vlen):
-            # Survivor-capacity overflow (warmup-only in practice): fetch
-            # nothing from the device — re-derive this chunk's survivors
-            # exactly through the shared dense evaluator (the same
-            # decode + evaluate contract the chunk step runs), with the
-            # same constraint mask and (host-mirror) pre-filter.
-            flat = np.arange(dstart, dstart + vlen, dtype=np.int64)
-            # Full-FIELDS evaluation on purpose: this is the *same*
-            # cached evaluator (same jaxpr) as sweep.evaluate_grid, so
-            # the re-derived survivor values are bitwise the dense
-            # path's — a narrower field set lowers differently and can
-            # drift in the last ulp.
-            out = B.cached_dense_eval("xla", S, full_shape, SW.FIELDS)(
-                tuple(map(jnp.asarray, axis_vals)), jnp.asarray(flat))
-            O = np.stack([np.asarray(out[f]) for f in objectives])
-            feas = np.ones(vlen, bool)
-            with np.errstate(invalid="ignore"):
-                for f, op, v in cons:
-                    feas &= SW.CONSTRAINT_OPS[op](np.asarray(out[f]), v)
-            Osg = np.where(feas[None, :], O * sign[:, None], np.inf)
-            keep = P.dominance_filter_mask(filt_np, Osg, xp=np)
-            loc = np.flatnonzero(keep)
-            return flat[loc], O[:, loc].T
-
-        n_sub = n_dev * scan            # chunks folded per dispatch
-
-        def process(item):
-            # Survivor layout per dispatch: [device,][scan,] cap — both
-            # optional leading axes flatten device-major / scan-minor,
-            # which is exactly ascending chunk order (device di covers
-            # the scan contiguous chunks at start + di*scan*chunk).
-            nonlocal buf_n, t_wait, t_host, t_first, n_fallback
-            start, surv = item
-            tw = time.perf_counter()
-            flat_s, val_s, cnt_s = (np.asarray(x) for x in surv)
-            t_wait += time.perf_counter() - tw
-            th = time.perf_counter()
-            flat_s = flat_s.reshape(n_sub, -1)
-            val_s = val_s.reshape(n_sub, -1, d)
-            cnt_s = cnt_s.reshape(n_sub)
-            for j in range(n_sub):
-                dstart = start + chunk * j
-                vlen = min(chunk, n_total - dstart)
-                if vlen <= 0:
-                    break
-                cnt = int(cnt_s[j])
-                if cnt > cap:
-                    n_fallback += 1
-                    fl, vv = host_chunk_survivors(dstart, vlen)
-                else:
-                    fl = flat_s[j][:cnt]
-                    vv = val_s[j][:cnt]
-                if len(fl):
-                    buf_idx.append(np.asarray(fl, np.int64))
-                    buf_vals.append(np.asarray(vv, np.float64))
-                    buf_n += len(fl)
-            if buf_n >= _MERGE_EVERY:
-                merge()
-            if t_first is None:
-                t_first = time.perf_counter() - t0
-            t_host += time.perf_counter() - th
-
-        def make_starts(si):
-            start = si * per_step
+        def drive():
+            # One incarnation of the pipeline: rebuild the compiled
+            # step, device placement and filter for the *current*
+            # device pool, restore carry + front from the snapshot, run
+            # every remaining chunk, then advance the snapshot to
+            # completion.  Raises on device loss / exhausted retries;
+            # the control loop below decides replan vs restart.
+            nonlocal t_first, t_wait, t_host, t_dispatch, n_fallback
+            nonlocal dispatched_flat
+            base = state["base"]
+            if base >= n_total:     # resumed-from-complete: nothing left
+                return
+            n_dev = max(1, len(dev_list))
+            run = B.cached_step(spec, be.name, scan, n_dev,
+                                dev_list if n_dev > 1 else None)
+            # One batched device_put per pytree — per-leaf jnp.asarray
+            # calls cost ~10 ms of pure dispatch per stream on small
+            # grids.  With several devices, broadcast state is
+            # replicated up front so the pmap path never re-shards an
+            # argument per step.
             if n_dev > 1:
-                return jnp.asarray(start + chunk * scan * np.arange(n_dev),
-                                   jnp.int64)
-            return jnp.int64(start)
+                put = (lambda t: jax.device_put_replicated(t, dev_list))
+            else:
+                dev_target = dev_list[0] if devices is not None else None
+                put = (lambda t: jax.device_put(t, dev_target))
+            axvals_j = put(tuple(axis_vals))
+            per_step = chunk * scan * n_dev
+            n_steps = -(-(n_total - base) // per_step)
+            # Snapshot carry -> device: merged state on shard 0, fresh
+            # inits on the rest (the merge is associative and exact, so
+            # a snapshot restores onto any device count).  np.array
+            # copies keep the snapshot's buffers out of donation's
+            # reach; the first pmap call shards the host stack, later
+            # calls donate the already-sharded buffers.
+            merged0 = jax.tree_util.tree_map(np.array, state["carry"])
+            if n_dev > 1:
+                fresh = B.init_carry(spec)
+                carry = jax.tree_util.tree_map(
+                    lambda m, f: np.stack([m] + [f] * (n_dev - 1)),
+                    merged0, fresh)
+            else:
+                carry = put(merged0)
 
-        rebuild_filter()                    # seed-only filter
-        if prefetch == 0 or n_steps == 1:
-            # Fully synchronous reference path (and the single-chunk fast
-            # path, where there is nothing to overlap).
-            for si in range(n_steps):
-                td = time.perf_counter()
-                carry, surv = run(carry, axvals_j, aux, make_starts(si))
-                t_dispatch += time.perf_counter() - td
-                process((si * per_step, surv))
-                if si == 0 and n_steps > 1:
+            front_vals = state["front_vals"].copy()
+            front_idx = state["front_idx"].copy()
+            buf_vals: list = []             # pending front candidates
+            buf_idx: list = []
+            buf_n = 0
+            filt_np: dict = {}          # host mirror of the device filter
+            aux_extra = {}
+            if cons:
+                aux_extra["cons"] = put(
+                    np.asarray([v for _, _, v in cons], np.float64))
+            if hist_bins:
+                aux_extra["hist_edges"] = put(hist_edges)
+            aux = dict(aux_extra)
+            last_ckpt = time.perf_counter()
+
+            def rebuild_filter():
+                nonlocal filt_np, aux
+                base_sg = np.concatenate([front_vals * sign, seed_signed]) \
+                    if seed_signed.size else front_vals * sign
+                filt_np = P.build_dominance_filter(base_sg, d, _FILTER_ROWS,
+                                                   _FILTER_BINS)
+                aux = dict(aux_extra, filter=put(filt_np))
+
+            def merge(final=False):
+                # Fold the candidate buffer into the running exact
+                # front.  In the pipelined path this runs while the
+                # producer thread is inside XLA on the next chunks, so
+                # its cost hides under device compute; the filter-based
+                # pre-cull keeps the exact dominance passes to a few
+                # hundred rows.
+                nonlocal front_vals, front_idx, buf_vals, buf_idx, buf_n
+                if buf_n:
+                    cat_v = np.concatenate(buf_vals)
+                    cat_i = np.concatenate(buf_idx)
+                    cat_sg = cat_v * sign
+                    base_sg = np.concatenate([front_vals * sign, cat_sg,
+                                              seed_signed])
+                    f = P.build_dominance_filter(base_sg, d, _FILTER_ROWS,
+                                                 _FILTER_BINS)
+                    keep = P.dominance_filter_mask(
+                        f, np.ascontiguousarray(cat_sg.T), xp=np)
+                    front_vals, front_idx = _merge_into_front(
+                        front_vals, front_idx, cat_v[keep], cat_i[keep],
+                        sign)
+                    buf_vals, buf_idx, buf_n = [], [], 0
+                if not final:
+                    rebuild_filter()
+
+            def host_chunk_survivors(dstart, vlen):
+                # Survivor-capacity overflow (warmup-only in practice):
+                # fetch nothing from the device — re-derive this chunk's
+                # survivors exactly through the shared dense evaluator
+                # (the same decode + evaluate contract the chunk step
+                # runs), with the same constraint mask and (host-mirror)
+                # pre-filter.
+                flat = np.arange(dstart, dstart + vlen, dtype=np.int64)
+                # Full-FIELDS evaluation on purpose: this is the *same*
+                # cached evaluator (same jaxpr) as sweep.evaluate_grid,
+                # so the re-derived survivor values are bitwise the
+                # dense path's — a narrower field set lowers differently
+                # and can drift in the last ulp.
+                out = B.cached_dense_eval("xla", S, full_shape, SW.FIELDS)(
+                    tuple(map(jnp.asarray, axis_vals)), jnp.asarray(flat))
+                O = np.stack([np.asarray(out[f]) for f in objectives])
+                feas = np.ones(vlen, bool)
+                with np.errstate(invalid="ignore"):
+                    for f, op, v in cons:
+                        feas &= SW.CONSTRAINT_OPS[op](np.asarray(out[f]),
+                                                      v)
+                Osg = np.where(feas[None, :], O * sign[:, None], np.inf)
+                keep = P.dominance_filter_mask(filt_np, Osg, xp=np)
+                loc = np.flatnonzero(keep)
+                return flat[loc], O[:, loc].T
+
+            n_sub = n_dev * scan        # chunks folded per dispatch
+
+            def process(item):
+                # Survivor layout per dispatch: [device,][scan,] cap —
+                # both optional leading axes flatten device-major /
+                # scan-minor, which is exactly ascending chunk order
+                # (device di covers the scan contiguous chunks at
+                # start + di*scan*chunk).
+                nonlocal buf_n, t_wait, t_host, t_first, n_fallback
+                start, surv = item
+                tw = time.perf_counter()
+                flat_s, val_s, cnt_s = (np.asarray(x) for x in surv)
+                t_wait += time.perf_counter() - tw
+                th = time.perf_counter()
+                flat_s = flat_s.reshape(n_sub, -1)
+                val_s = val_s.reshape(n_sub, -1, d)
+                cnt_s = cnt_s.reshape(n_sub)
+                for j in range(n_sub):
+                    dstart = start + chunk * j
+                    vlen = min(chunk, n_total - dstart)
+                    if vlen <= 0:
+                        break
+                    cnt = int(cnt_s[j])
+                    if cnt > cap:
+                        n_fallback += 1
+                        fl, vv = host_chunk_survivors(dstart, vlen)
+                    else:
+                        fl = flat_s[j][:cnt]
+                        vv = val_s[j][:cnt]
+                    if len(fl):
+                        buf_idx.append(np.asarray(fl, np.int64))
+                        buf_vals.append(np.asarray(vv, np.float64))
+                        buf_n += len(fl)
+                if buf_n >= _MERGE_EVERY:
                     merge()
-        else:
-            # Async double-buffered pipeline: a producer thread drives
-            # the chunk chain (XLA releases the GIL while a step
-            # executes, so the host merges below genuinely overlap
-            # device compute); the bounded queue keeps `prefetch` chunk
-            # results in flight.  The producer pauses after dispatching
-            # chunk 0 until its survivors have been folded into the
-            # filter, so every later chunk pre-filters against a real
-            # running front.
-            q: _Queue = _Queue(maxsize=prefetch)
-            filter_ready = threading.Event()
-            stop = threading.Event()
-            box: dict = {}
+                if t_first is None:
+                    t_first = time.perf_counter() - t0
+                t_host += time.perf_counter() - th
 
-            def put_or_stop(item):
-                # Never block forever: if the consumer died (exception in
-                # a merge), `stop` is set and the producer exits instead
-                # of leaking a thread wedged in q.put.
-                while not stop.is_set():
-                    try:
-                        q.put(item, timeout=0.05)
-                        return True
-                    except _Full:
-                        continue
-                return False
+            def make_starts(si):
+                start = base + si * per_step
+                if n_dev > 1:
+                    return jnp.asarray(
+                        start + chunk * scan * np.arange(n_dev),
+                        jnp.int64)
+                return jnp.int64(start)
 
-            def produce():
-                # Time in run() is the per-step invocation cost scan
-                # fusion amortizes over `scan` chunks (on synchronous
-                # CPU dispatch it also absorbs device compute — see the
-                # dispatch_s stats note).
-                nonlocal carry, t_dispatch
-                try:
-                    with enable_x64():
-                        for si in range(n_steps):
-                            if stop.is_set():
-                                break
-                            td = time.perf_counter()
-                            carry, surv = run(carry, axvals_j, aux,
-                                              make_starts(si))
-                            t_dispatch += time.perf_counter() - td
-                            if not put_or_stop((si * per_step, surv)):
-                                break
-                            if si == 0:
-                                filter_ready.wait()
-                except BaseException as e:  # pragma: no cover - rethrown
-                    box["err"] = e
-                finally:
-                    put_or_stop(None)
+            def snapshot_carry(c):
+                # Owning host copy, merged to the device-count-
+                # independent serialization form (see
+                # backend.merge_device_carries).
+                host = B.carry_to_host(c)
+                return (B.merge_device_carries(host, k) if n_dev > 1
+                        else host)
 
-            th_prod = threading.Thread(target=produce, daemon=True,
-                                       name="stream-producer")
-            th_prod.start()
-            try:
-                first = True
-                while True:
-                    item = q.get()
-                    if item is None:
-                        break
-                    process(item)
-                    if first:
+            def dispatch(si, c):
+                # Injector hook + bounded in-place retry + dispatch
+                # accounting.  A TransientDeviceError fires *before*
+                # the step consumed the donated carry, so re-running
+                # the dispatch in place is safe; anything raised by
+                # run() itself invalidates the carry and propagates to
+                # the restart loop instead.
+                nonlocal t_dispatch, dispatched_flat
+                start = base + si * per_step
+                dispatched_flat = max(dispatched_flat,
+                                      min(start + per_step, n_total))
+                tstep = time.perf_counter()
+                if fault_injector is not None:
+                    backoff = policy.backoff_s
+                    for attempt in range(policy.max_retries + 1):
+                        try:
+                            fault_injector(start // chunk, start)
+                            break
+                        except TransientDeviceError:
+                            counters["retries"] += 1.0
+                            if attempt >= policy.max_retries:
+                                raise
+                            time.sleep(backoff)
+                            backoff = min(backoff * 2.0,
+                                          policy.backoff_max_s)
+                td = time.perf_counter()
+                c, surv = run(c, axvals_j, aux, make_starts(si))
+                t_dispatch += time.perf_counter() - td
+                dur = time.perf_counter() - tstep
+                if detector.record(dur):
+                    counters["stragglers"] += 1.0
+                if (policy.step_timeout_s is not None
+                        and dur > policy.step_timeout_s):
+                    counters["step_timeouts"] += 1.0
+                return c, surv
+
+            def ckpt_due(si):
+                # Snapshot cadence, decided dispatch-side.  The last
+                # step never snapshots here — completion writes the
+                # terminal checkpoint.
+                nonlocal last_ckpt
+                if mgr is None or si + 1 >= n_steps:
+                    return False
+                if checkpoint_every_steps is not None:
+                    due = ((si + 1) % max(1, int(checkpoint_every_steps))
+                           == 0)
+                else:
+                    due = (time.perf_counter() - last_ckpt
+                           >= checkpoint_every_s)
+                if due:
+                    last_ckpt = time.perf_counter()
+                return due
+
+            def commit_state(si, merged):
+                # Fold the pending buffer, then advance the snapshot to
+                # "every chunk below base + (si+1)*per_step is folded".
+                # FIFO queue ordering guarantees every survivor item
+                # <= si was processed before the marker that gets here.
+                merge()
+                state["carry"] = merged
+                state["front_vals"] = front_vals.copy()
+                state["front_idx"] = front_idx.copy()
+                state["base"] = min(base + (si + 1) * per_step, n_total)
+
+            rebuild_filter()                # front/seed filter
+            if prefetch == 0 or n_steps == 1:
+                # Fully synchronous reference path (and the single-chunk
+                # fast path, where there is nothing to overlap).
+                for si in range(n_steps):
+                    carry, surv = dispatch(si, carry)
+                    process((base + si * per_step, surv))
+                    if si == 0 and n_steps > 1:
                         merge()
-                        filter_ready.set()
-                        first = False
-            finally:
-                # Consumer is done (or raised): release the producer from
-                # any blocked put/wait and drain whatever it had in
-                # flight, then collect it — at most one chunk step runs
-                # to completion before it sees `stop`.
-                stop.set()
-                filter_ready.set()
-                while True:
+                    if ckpt_due(si):
+                        commit_state(si, snapshot_carry(carry))
+                        write_checkpoint()
+            else:
+                # Async double-buffered pipeline: a producer thread
+                # drives the chunk chain (XLA releases the GIL while a
+                # step executes, so the host merges below genuinely
+                # overlap device compute); the bounded queue keeps
+                # `prefetch` chunk results in flight.  The producer
+                # pauses after dispatching chunk 0 until its survivors
+                # have been folded into the filter, so every later
+                # chunk pre-filters against a real running front.
+                # Checkpoint markers ride the same FIFO queue: the
+                # producer snapshots the carry right after step si and
+                # enqueues the marker *behind* si's survivors, so by
+                # the time the consumer sees it, the host front is
+                # exactly consistent with the snapshot carry.
+                q: _Queue = _Queue(maxsize=prefetch)
+                filter_ready = threading.Event()
+                ckpt_done = threading.Event()
+                stop = threading.Event()
+                box: dict = {}
+
+                def put_or_stop(item):
+                    # Never block forever: if the consumer died
+                    # (exception in a merge), `stop` is set and the
+                    # producer exits instead of leaking a thread wedged
+                    # in q.put.
+                    while not stop.is_set():
+                        try:
+                            q.put(item, timeout=0.05)
+                            return True
+                        except _Full:
+                            continue
+                    return False
+
+                def produce():
+                    nonlocal carry
                     try:
-                        q.get_nowait()
-                    except _Empty:
-                        break
-                th_prod.join()
-            if "err" in box:
-                raise box["err"]
-        merge(final=True)
-        carry = jax.tree_util.tree_map(np.asarray, carry)
+                        with enable_x64():
+                            for si in range(n_steps):
+                                if stop.is_set():
+                                    break
+                                carry, surv = dispatch(si, carry)
+                                if not put_or_stop(
+                                        ("surv", base + si * per_step,
+                                         surv)):
+                                    break
+                                if si == 0:
+                                    filter_ready.wait()
+                                if ckpt_due(si):
+                                    # Durability barrier: no later chunk
+                                    # dispatches until the snapshot is
+                                    # on disk, so a kill at step s can
+                                    # never outrun the checkpoint due
+                                    # before s.  Costs one pipeline
+                                    # stall per checkpoint — nothing at
+                                    # the default 30 s cadence.
+                                    ckpt_done.clear()
+                                    if not put_or_stop(
+                                            ("ckpt", si,
+                                             snapshot_carry(carry))):
+                                        break
+                                    while not ckpt_done.wait(0.05):
+                                        if stop.is_set():
+                                            break
+                    except BaseException as e:  # pragma: no cover
+                        box["err"] = e
+                    finally:
+                        put_or_stop(None)
+
+                th_prod = threading.Thread(target=produce, daemon=True,
+                                           name="stream-producer")
+                th_prod.start()
+                try:
+                    first = True
+                    while True:
+                        item = q.get()
+                        if item is None:
+                            break
+                        if item[0] == "ckpt":
+                            commit_state(item[1], item[2])
+                            write_checkpoint()
+                            ckpt_done.set()
+                            continue
+                        process((item[1], item[2]))
+                        if first:
+                            merge()
+                            filter_ready.set()
+                            first = False
+                finally:
+                    # Consumer is done (or raised): release the
+                    # producer from any blocked put/wait and drain
+                    # whatever it had in flight, then collect it — at
+                    # most one chunk step runs to completion before it
+                    # sees `stop`.
+                    stop.set()
+                    filter_ready.set()
+                    ckpt_done.set()
+                    while True:
+                        try:
+                            q.get_nowait()
+                        except _Empty:
+                            break
+                    th_prod.join()
+                if "err" in box:
+                    raise box["err"]
+            merge(final=True)
+            state["carry"] = snapshot_carry(carry)
+            state["front_vals"] = front_vals
+            state["front_idx"] = front_idx
+            state["base"] = n_total
+
+        def reissue_count():
+            # Chunks dispatched past the snapshot when an incarnation
+            # died — exactly the ranges the next incarnation re-issues.
+            nonlocal dispatched_flat
+            n = max(0, -(-(dispatched_flat - state["base"]) // chunk))
+            dispatched_flat = state["base"]
+            return float(n)
+
+        restarts_left = policy.max_restarts
+        while True:
+            try:
+                drive()
+                break
+            except DeviceLostError as e:
+                counters["chunks_reissued"] += reissue_count()
+                if len(dev_list) > 1:
+                    # Elastic replan: shrink the worker pool (1-D
+                    # data-parallel replan_mesh specialization) and
+                    # re-issue only the unfinished chunk ranges on the
+                    # survivors.
+                    counters["elastic_replans"] += 1.0
+                    dev_list = list(drop_worker(dev_list, e.device_index))
+                elif restarts_left > 0:
+                    # Graceful degradation floor: the last device
+                    # "died" — restart it from the snapshot.
+                    restarts_left -= 1
+                    counters["restarts"] += 1.0
+                else:
+                    raise
+            except _RESTARTABLE:
+                # In-place retries exhausted, or the step failed
+                # mid-execution (the donated carry is gone either way):
+                # restart the pipeline from the last consistent
+                # snapshot.
+                counters["chunks_reissued"] += reissue_count()
+                if restarts_left <= 0:
+                    raise
+                restarts_left -= 1
+                counters["restarts"] += 1.0
+                time.sleep(min(
+                    policy.backoff_s * (2.0 ** counters["restarts"]),
+                    policy.backoff_max_s))
+        if mgr is not None and mgr.latest_step() != n_total:
+            write_checkpoint()      # terminal snapshot: resume == done
     total_s = time.perf_counter() - t0
 
-    if n_dev > 1:
-        carry = _merge_device_carries(carry, k)
+    # Deliverables come straight off the committed snapshot — the same
+    # arrays a checkpoint would persist, so a resumed run and an
+    # uninterrupted run return bitwise-identical results.
+    carry = state["carry"]
+    front_vals = state["front_vals"]
+    front_idx = state["front_idx"]
     stats = {
         "n_configs": float(n_total),
         "n_chunks": float(n_steps),
@@ -778,6 +1107,12 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
         "scan_chunks": float(scan),
         "prefetch": float(prefetch),
         "fallback_chunks": float(n_fallback),
+        # Resilience accounting (see the stream_grid docstring):
+        # in-place retries, pipeline restarts, the chunk ordinal a
+        # resume started from, checkpoint count/time, chunk ranges
+        # re-issued after failures, elastic device-pool shrinks,
+        # flagged stragglers and step-deadline overruns.
+        **counters,
     }
 
     # Normalize the top-k table: entries past the feasible count keep the
@@ -811,28 +1146,5 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
         hist=hist_out, stats=stats, constraints=cons)
 
 
-def _merge_device_carries(carry, k):
-    """Fold per-device reduction carries into one (host side, exact)."""
-    mv, mi = carry["min_val"], carry["min_idx"]     # (ndev, nf)
-    order = np.lexsort((mi, mv), axis=0)[0]         # per-field best device
-    nf = mv.shape[1]
-    merged = {
-        "min_val": mv[order, np.arange(nf)],
-        "min_idx": mi[order, np.arange(nf)],
-        "finite": carry["finite"].sum(axis=0),
-        "fmin": carry["fmin"].min(axis=0),
-        "fmax": carry["fmax"].max(axis=0),
-    }
-    tv, ti = carry["topk_val"], carry["topk_idx"]   # (ndev, d, k)
-    d = tv.shape[1]
-    cat_v = tv.transpose(1, 0, 2).reshape(d, -1)
-    cat_i = ti.transpose(1, 0, 2).reshape(d, -1)
-    out_v = np.empty((d, k))
-    out_i = np.empty((d, k), np.int64)
-    for oi in range(d):
-        order = np.lexsort((cat_i[oi], cat_v[oi]))[:k]
-        out_v[oi], out_i[oi] = cat_v[oi][order], cat_i[oi][order]
-    merged["topk_val"], merged["topk_idx"] = out_v, out_i
-    if "hist" in carry:
-        merged["hist"] = carry["hist"].sum(axis=0)
-    return merged
+#: Moved to the backend layer as the carry serialization contract.
+_merge_device_carries = B.merge_device_carries

@@ -1,5 +1,9 @@
-"""Distributed runtime: fault tolerance, straggler mitigation, elasticity."""
+"""Distributed runtime: fault tolerance, straggler mitigation, elasticity,
+deterministic fault injection."""
 
-from .elastic import MeshPlan, replan_mesh, rescale_batch  # noqa: F401
+from .elastic import (MeshPlan, drop_worker, replan_mesh,  # noqa: F401
+                      rescale_batch)
+from .fault_injection import (DeviceLostError, FaultInjector,  # noqa: F401
+                              FaultPlan, TransientDeviceError)
 from .fault_tolerance import (FaultToleranceController, FTConfig,  # noqa: F401
-                              WorkerState)
+                              RetryPolicy, StragglerDetector, WorkerState)

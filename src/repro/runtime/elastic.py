@@ -57,6 +57,26 @@ def replan_mesh(available_chips: int, model: int = 16,
                     available_chips - used)
 
 
+def drop_worker(pool, lost_index: int) -> tuple:
+    """Surviving ordered worker pool after losing one worker.
+
+    The 1-D (pure data-parallel) specialization of :func:`replan_mesh`
+    used by the streaming sweep executor: its ``pmap`` mesh has a single
+    ``data`` axis of interchangeable chunk workers, so the replan is
+    simply the ordered survivor pool — every survivor keeps its role
+    and the lost shard's chunk ranges are re-issued from the last
+    consistent snapshot.  An out-of-range ``lost_index`` (a worker we
+    cannot identify) drops the last worker, so the pool always shrinks.
+    """
+    pool = list(pool)
+    if len(pool) <= 1:
+        raise ValueError("cannot drop the last worker; degrade the job "
+                         "to single-device execution instead")
+    if not 0 <= lost_index < len(pool):
+        lost_index = len(pool) - 1
+    return tuple(pool[:lost_index] + pool[lost_index + 1:])
+
+
 def rescale_batch(global_batch: int, old_data: int, new_data: int,
                   keep_global: bool = True) -> int:
     """Either keep the global batch (more grad accumulation per chip) or

@@ -24,6 +24,65 @@ import statistics
 from typing import Callable, Optional
 
 
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry/backoff policy of the streaming sweep executor.
+
+    Two failure scopes, two budgets:
+
+    * ``max_retries`` — in-place retries of a single chunk dispatch
+      (the fault was raised *before* the device consumed the donated
+      carry, so the step can simply run again);
+    * ``max_restarts`` — full pipeline restarts from the last
+      consistent snapshot (the carry may be gone: device loss, errors
+      raised mid-execution), re-issuing only the chunk ranges dispatched
+      since that snapshot.
+
+    Backoff doubles from ``backoff_s`` up to ``backoff_max_s`` per
+    consecutive failure.  ``step_timeout_s`` flags (accounting, not
+    abort — a synchronous XLA dispatch cannot be cancelled mid-flight)
+    dispatches exceeding the deadline; ``straggler_factor`` /
+    ``straggler_window`` parameterize the :class:`StragglerDetector`
+    the executor runs over dispatch durations.
+    """
+
+    max_retries: int = 3
+    max_restarts: int = 2
+    backoff_s: float = 0.05
+    backoff_max_s: float = 2.0
+    step_timeout_s: Optional[float] = None
+    straggler_factor: float = 4.0
+    straggler_window: int = 32
+
+
+class StragglerDetector:
+    """Single-dispatch-stream adaptation of the controller's straggler
+    scan: flags dispatch durations far above the running median.
+
+    The controller above compares workers against each other; the
+    streaming executor has one synchronous dispatch stream, so the
+    baseline is the rolling median of recent step times instead.
+    ``record`` returns True when the duration exceeds ``factor`` times
+    the median of the last ``window`` steps (after ``warmup`` samples).
+    """
+
+    def __init__(self, factor: float = 4.0, window: int = 32,
+                 warmup: int = 3):
+        self.factor = factor
+        self.window = window
+        self.warmup = warmup
+        self._times: list[float] = []
+
+    def record(self, duration_s: float) -> bool:
+        flagged = (len(self._times) >= self.warmup
+                   and duration_s > self.factor
+                   * statistics.median(self._times))
+        self._times.append(duration_s)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+        return flagged
+
+
 @dataclasses.dataclass
 class WorkerState:
     worker_id: int

@@ -317,3 +317,68 @@ class TestInt64Decode:
         strides = [10**i for i in reversed(range(10))]
         expect = [(2**33 + 12345) // s % 10 for s in strides]
         assert [cfg[f"ax{i}"] for i in range(10)] == expect
+
+
+class TestJobSignature:
+    """Tentpole satellite: the resumable-sweep signature must change
+    with anything that changes reduction semantics, and must *not*
+    change with knobs that only shape the traced computation."""
+
+    @staticmethod
+    def _spec(**overrides):
+        import dataclasses
+        S, axis_vals, _ = sweep.build_axes(
+            sensor_nodes=("7nm", "16nm"), weight_mems=("sram", "mram"))
+        shape = tuple(a.size for a in axis_vals)
+        spec = B.ChunkSpec(
+            S=S, shape=shape, n_total=int(np.prod(shape)), chunk=96,
+            fields=tuple(pareto.DEFAULT_OBJECTIVES), d=3, k=4,
+            sign=(1.0, 1.0, 1.0), cons_static=(), hist_bins=0,
+            survivor_cap=96, small_index=True)
+        return dataclasses.replace(spec, **overrides), axis_vals
+
+    def _sig(self, spec=None, axis_vals=None, backend=None,
+             scan_chunks=1, cons=(), hist_ranges=None, **overrides):
+        if spec is None:
+            spec, av = self._spec(**overrides)
+            axis_vals = av if axis_vals is None else axis_vals
+        return B.job_signature(spec, backend, scan_chunks, cons,
+                               axis_vals, hist_ranges)
+
+    def test_deterministic_across_rebuilds(self):
+        """Rebuilding the identical spec from scratch (fresh model
+        stack arrays included) yields the identical signature."""
+        assert self._sig() == self._sig()
+        assert len(self._sig()) == 64        # sha256 hexdigest
+
+    def test_semantic_knobs_change_the_signature(self):
+        base = self._sig()
+        assert self._sig(chunk=64) != base
+        assert self._sig(k=5) != base
+        assert self._sig(hist_bins=8) != base
+        assert self._sig(sign=(1.0, 1.0, -1.0)) != base
+        assert self._sig(scan_chunks=4) != base
+        assert self._sig(backend="pallas") != base
+        assert self._sig(cons=(("latency", "<=", 1e-3),)) != base
+        assert self._sig(hist_ranges={"avg_power": (0.0, 1.0)}) != base
+
+    def test_axis_values_change_the_signature(self):
+        spec, axis_vals = self._spec()
+        base = self._sig(spec=spec, axis_vals=axis_vals)
+        bumped = list(axis_vals)
+        bumped[-1] = np.asarray(bumped[-1]) * 2.0
+        assert self._sig(spec=spec, axis_vals=tuple(bumped)) != base
+
+    def test_trace_only_knobs_do_not_invalidate(self):
+        """survivor_cap / small_index shape only the traced computation
+        (overflow falls back to an exact host re-derivation), so they
+        must not orphan existing checkpoints."""
+        base = self._sig()
+        assert self._sig(survivor_cap=48) == base
+        assert self._sig(small_index=False) == base
+
+    def test_default_backend_is_canonicalized(self):
+        """backend=None and the explicit default name must agree, so a
+        resume that spells the default out loud still matches."""
+        assert self._sig(backend=None) == \
+            self._sig(backend=B.DEFAULT_BACKEND)

@@ -9,6 +9,7 @@ workload batches are pinned to <=1e-6 against their single-model grids
 """
 
 import os
+import signal
 import subprocess
 import sys
 
@@ -19,6 +20,7 @@ from repro.core import pareto, partition, stream, sweep
 from repro.core.arrays import stacked_model_arrays
 from repro.core.handtracking import build_detnet, build_keynet
 from repro.core.workloads import NNWorkload
+from repro.runtime import FaultInjector, FaultPlan, RetryPolicy
 
 # The 10,880-config reference grid — keep in lockstep with
 # benchmarks/sweep_bench.py::GRID (pinned here rather than imported so
@@ -567,3 +569,267 @@ class TestMergeFronts:
         with pytest.raises(ValueError):
             pareto.merge_fronts(np.empty((0, 2)), np.empty(0, np.int64),
                                 np.ones((2, 2)), np.array([0]), None)
+
+
+class _Abort(Exception):
+    """Non-retryable sentinel: aborts a run without touching the retry
+    or restart machinery (models an operator kill / preemption that the
+    executor must *not* paper over in-process)."""
+
+
+class _AbortAt:
+    """Injector raising :class:`_Abort` once at a given chunk ordinal."""
+
+    def __init__(self, ordinal: int):
+        self.ordinal = ordinal
+        self.fired = False
+
+    def __call__(self, chunk_ordinal, flat_start):
+        if not self.fired and chunk_ordinal >= self.ordinal:
+            self.fired = True
+            raise _Abort(f"aborted at chunk {chunk_ordinal}")
+
+
+def _assert_full_parity(res, dense, dense_front):
+    """Bitwise parity on every deliverable vs the dense reference."""
+    for field in sweep.FIELDS:
+        assert res.argmin(field) == dense.argmin(field), field
+        assert res.finite_counts[field] == \
+            int(np.isfinite(dense.data[field]).sum()), field
+        assert res.channel_bounds(field) == \
+            dense.channel_bounds(field), field
+    for obj in res.objectives:
+        assert res.top_k(obj) == dense.top_k(obj, TOP_K), obj
+    sf = res.pareto_front()
+    assert np.array_equal(sf.indices, dense_front.indices)
+    assert np.array_equal(sf.values, dense_front.values)
+
+
+class TestFaultToleranceAndResume:
+    """Tentpole: checkpointed carries, retrying executor, deterministic
+    fault injection.  Every recovery path must deliver *bitwise* the
+    dense-path results — fault tolerance that changes answers is worse
+    than none."""
+
+    CKPT_KW = dict(chunk_size=997, top_k=TOP_K, track="all")
+
+    def test_transient_faults_retry_to_exact_parity(self, dense,
+                                                    dense_front):
+        """raise-on-chunk-k plus seeded transient errors: bounded
+        in-place retries must converge with untouched results."""
+        inj = FaultInjector(FaultPlan(fail_chunks=(2,),
+                                      transient_rate=0.2, seed=7))
+        res = stream.stream_grid(**REFERENCE_GRID, **self.CKPT_KW,
+                                 fault_injector=inj)
+        assert inj.injected["transient"] >= 1
+        assert res.stats["retries"] == inj.injected["transient"]
+        _assert_full_parity(res, dense, dense_front)
+
+    def test_retries_exhausted_raises(self):
+        """A chunk that keeps failing must surface the fault, not spin."""
+
+        class _AlwaysFail:
+            def __call__(self, chunk_ordinal, flat_start):
+                from repro.runtime import TransientDeviceError
+                raise TransientDeviceError("permanent (injected)")
+
+        policy = RetryPolicy(max_retries=1, max_restarts=1,
+                             backoff_s=0.0)
+        from repro.runtime import TransientDeviceError
+        with pytest.raises(TransientDeviceError):
+            stream.stream_grid(**REFERENCE_GRID, **self.CKPT_KW,
+                               retry_policy=policy,
+                               fault_injector=_AlwaysFail())
+
+    def test_abort_resume_bitwise_parity(self, dense, dense_front,
+                                         tmp_path):
+        """Kill at an arbitrary chunk boundary; the resumed run must
+        pick up from the checkpoint cursor and deliver bitwise-identical
+        results."""
+        ckpt = str(tmp_path / "ckpt")
+        with pytest.raises(_Abort):
+            stream.stream_grid(**REFERENCE_GRID, **self.CKPT_KW,
+                               checkpoint_dir=ckpt,
+                               checkpoint_every_steps=1,
+                               fault_injector=_AbortAt(3))
+        res = stream.stream_grid(**REFERENCE_GRID, **self.CKPT_KW,
+                                 checkpoint_dir=ckpt,
+                                 checkpoint_every_steps=1)
+        assert res.stats["resumed_from_step"] > 0
+        _assert_full_parity(res, dense, dense_front)
+
+    def test_resume_mid_scan_chunks_macro_step(self, dense, dense_front,
+                                               tmp_path):
+        """With scan fusion one macro step covers several chunks; the
+        checkpoint cursor must land on macro-step boundaries and resume
+        exactly."""
+        ckpt = str(tmp_path / "ckpt")
+        kw = dict(chunk_size=997, scan_chunks=4, top_k=TOP_K,
+                  track="all")
+        with pytest.raises(_Abort):
+            stream.stream_grid(**REFERENCE_GRID, **kw,
+                               checkpoint_dir=ckpt,
+                               checkpoint_every_steps=1,
+                               fault_injector=_AbortAt(8))
+        res = stream.stream_grid(**REFERENCE_GRID, **kw,
+                                 checkpoint_dir=ckpt,
+                                 checkpoint_every_steps=1)
+        assert res.stats["resumed_from_step"] > 0
+        assert res.stats["resumed_from_step"] % 4 == 0
+        _assert_full_parity(res, dense, dense_front)
+
+    def test_resume_from_completed_run(self, dense, dense_front,
+                                       tmp_path):
+        """The terminal snapshot makes a finished sweep re-runnable
+        without recomputation and without corrupting the answers."""
+        ckpt = str(tmp_path / "ckpt")
+        stream.stream_grid(**REFERENCE_GRID, **self.CKPT_KW,
+                           checkpoint_dir=ckpt)
+        res = stream.stream_grid(**REFERENCE_GRID, **self.CKPT_KW,
+                                 checkpoint_dir=ckpt)
+        assert res.stats["resumed_from_step"] > 0
+        _assert_full_parity(res, dense, dense_front)
+
+    def test_stale_signature_rejected_loudly(self, tmp_path):
+        """A checkpoint from a different sweep spec must fail with a
+        clear error, never silently merge."""
+        ckpt = str(tmp_path / "ckpt")
+        stream.stream_grid(**REFERENCE_GRID, **self.CKPT_KW,
+                           checkpoint_dir=ckpt)
+        with pytest.raises(ValueError, match="different sweep job"):
+            stream.stream_grid(**REFERENCE_GRID, chunk_size=997,
+                               top_k=TOP_K + 1, track="all",
+                               checkpoint_dir=ckpt)
+
+    def test_straggler_detector_flags_injected_delay(self, dense):
+        """An injected dispatch delay past the warmup window must be
+        counted (trigger ordinal is after the detector's 3-sample
+        warmup)."""
+        inj = FaultInjector(FaultPlan(straggle={24: 1.0}))
+        policy = RetryPolicy(straggler_factor=4.0, straggler_window=32)
+        res = stream.stream_grid(**REFERENCE_GRID, chunk_size=256,
+                                 retry_policy=policy, fault_injector=inj)
+        assert inj.injected["straggle"] == 1
+        assert res.stats["stragglers"] >= 1
+        assert res.argmin() == dense.argmin()
+
+    def test_stats_expose_resilience_counters(self, dense):
+        res = stream.stream_grid(**REFERENCE_GRID, chunk_size=997)
+        # Deterministically zero on a fault-free run without checkpoints.
+        for key in ("retries", "restarts", "resumed_from_step",
+                    "checkpoint_write_s", "checkpoints_written",
+                    "chunks_reissued", "elastic_replans"):
+            assert res.stats[key] == 0.0, key
+        # Load-dependent observations: a busy CI host can legitimately
+        # produce slow dispatches, so only presence is pinned.
+        for key in ("stragglers", "step_timeouts"):
+            assert res.stats[key] >= 0.0, key
+
+    def test_checkpoint_counters_in_stats(self, tmp_path):
+        res = stream.stream_grid(**REFERENCE_GRID, **self.CKPT_KW,
+                                 checkpoint_dir=str(tmp_path / "c"),
+                                 checkpoint_every_steps=2)
+        assert res.stats["checkpoints_written"] >= 2
+        assert res.stats["checkpoint_write_s"] > 0.0
+
+    def test_optimal_partition_checkpoint_plumbing(self, monkeypatch,
+                                                   tmp_path):
+        """``optimal_partition(checkpoint_dir=...)`` must reach the
+        streaming route and leave durable checkpoints behind."""
+        monkeypatch.setattr(partition, "STREAM_THRESHOLD", 8)
+        ckpt = str(tmp_path / "ckpt")
+        best = partition.optimal_partition(
+            sensor_node=("7nm", "16nm"), detnet_fps=(5.0, 10.0, 30.0),
+            checkpoint_dir=ckpt, checkpoint_every_s=0.0)
+        assert os.path.isdir(ckpt) and os.listdir(ckpt)
+        monkeypatch.setattr(partition, "STREAM_THRESHOLD", 1 << 20)
+        ref = partition.optimal_partition(
+            sensor_node=("7nm", "16nm"), detnet_fps=(5.0, 10.0, 30.0))
+        assert best.cut == ref.cut
+        assert best.avg_power == ref.avg_power
+
+
+class TestShardedFaultTolerance:
+    """Recovery under pmap sharding: elastic replan on device loss, and
+    SIGKILL kill-resume parity (each in a 4-host-device subprocess)."""
+
+    @staticmethod
+    def _run(code: str) -> subprocess.CompletedProcess:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=4")
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src")]
+            + env.get("PYTHONPATH", "").split(os.pathsep))
+        return subprocess.run([sys.executable, "-c", code], env=env,
+                              capture_output=True, text=True,
+                              timeout=600)
+
+    def test_device_loss_triggers_elastic_replan(self):
+        code = """
+import numpy as np
+from repro.core import pareto, stream, sweep
+from repro.runtime import FaultInjector, FaultPlan
+GRID = dict(agg_nodes=("7nm","16nm"), sensor_nodes=("7nm","16nm"),
+            weight_mems=("sram","mram"), detnet_fps=(5.,10.,15.,20.,30.),
+            keynet_fps=(15.,30.), num_cameras=(2,4),
+            mipi_energy_scale=(1.,2.))
+dense = sweep.evaluate_grid(**GRID)
+inj = FaultInjector(FaultPlan(lose_device=(5, 2)))
+res = stream.stream_grid(**GRID, chunk_size=256, top_k=4, track="all",
+                         fault_injector=inj)
+assert res.n_devices == 4, res.n_devices
+assert inj.injected["device_lost"] == 1
+assert res.stats["elastic_replans"] == 1.0, res.stats
+assert res.stats["chunks_reissued"] > 0.0, res.stats
+assert all(res.argmin(f) == dense.argmin(f) for f in res.objectives)
+assert all(res.top_k(o) == dense.top_k(o, 4) for o in res.objectives)
+df = pareto.pareto_front(dense); sf = res.pareto_front()
+assert np.array_equal(df.indices, sf.indices)
+assert np.array_equal(df.values, sf.values)
+print("ELASTIC-OK")
+"""
+        out = self._run(code)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "ELASTIC-OK" in out.stdout
+
+    def test_sigkill_resume_bitwise_parity(self, tmp_path):
+        """SIGKILL a sharded sweep mid-flight; a fresh process must
+        resume from the durable snapshot and match the dense path
+        bitwise."""
+        ckpt = str(tmp_path / "ckpt")
+        common = f"""
+import numpy as np
+from repro.core import pareto, stream, sweep
+GRID = dict(agg_nodes=("7nm","16nm"), sensor_nodes=("7nm","16nm"),
+            weight_mems=("sram","mram"), detnet_fps=(5.,10.,15.,20.,30.),
+            keynet_fps=(15.,30.), num_cameras=(2,4),
+            mipi_energy_scale=(1.,2.))
+KW = dict(chunk_size=256, top_k=4, track="all",
+          checkpoint_dir={ckpt!r}, checkpoint_every_steps=1)
+"""
+        kill = common + """
+from repro.runtime import FaultInjector, FaultPlan
+inj = FaultInjector(FaultPlan(kill_at=24))
+stream.stream_grid(**GRID, **KW, fault_injector=inj)
+print("UNREACHABLE")
+"""
+        resume = common + """
+dense = sweep.evaluate_grid(**GRID)
+res = stream.stream_grid(**GRID, **KW)
+assert res.n_devices == 4, res.n_devices
+assert res.stats["resumed_from_step"] > 0, res.stats
+assert all(res.argmin(f) == dense.argmin(f) for f in res.objectives)
+assert all(res.top_k(o) == dense.top_k(o, 4) for o in res.objectives)
+df = pareto.pareto_front(dense); sf = res.pareto_front()
+assert np.array_equal(df.indices, sf.indices)
+assert np.array_equal(df.values, sf.values)
+print("RESUME-OK", res.stats["resumed_from_step"])
+"""
+        out1 = self._run(kill)
+        assert out1.returncode == -signal.SIGKILL, \
+            (out1.returncode, out1.stderr[-2000:])
+        assert "UNREACHABLE" not in out1.stdout
+        out2 = self._run(resume)
+        assert out2.returncode == 0, out2.stderr[-2000:]
+        assert "RESUME-OK" in out2.stdout

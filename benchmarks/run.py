@@ -14,13 +14,19 @@ Emits ``name,value,derived`` CSV rows:
                     throughput (snapshots BENCH_pareto.json)
   * stream_bench  — streaming vs dense sweep executor: throughput + peak
                     RSS at 10^5..10^7 configs (snapshots BENCH_stream.json)
+  * scenario_bench — session scenario engine: closed-form oracles +
+                    10^6 (config x trace) streaming throughput over the
+                    battery/thermal channels (BENCH_scenario.json)
 
 ``--smoke`` runs the fast CI gate instead: tiny grids, asserting exact
 streaming/dense parity (argmin, top-k, Pareto front, counts), async
 double-buffered pipeline parity across prefetch depths, the backend
 registry (``backend="pallas"`` in interpret mode and ``scan_chunks=4``
 fused dispatch, both exact vs dense), compiled ``constraints=`` masking
-vs the dense host post-filter, stacked-workload parity end-to-end, and
+vs the dense host post-filter, stacked-workload parity end-to-end, the
+scenario engine (constant-trace degeneracy bitwise vs the static
+kernel, the time-to-empty closed-form oracle, and session-channel
+argmin/top-k(maximize) stream-vs-dense parity), and
 the fault-tolerance recovery paths — a SIGKILLed checkpointed sweep
 must resume in a fresh process with bitwise-identical results, and
 seeded transient faults must retry to exact parity — so perf-path *and*
@@ -52,7 +58,8 @@ def dosc_advisor_rows():
 
 
 SUITES = ["power_tables", "rbe_roofline", "tpu_roofline", "kernel_bench",
-          "dosc_advisor", "sweep_bench", "pareto_bench", "stream_bench"]
+          "dosc_advisor", "sweep_bench", "pareto_bench", "stream_bench",
+          "scenario_bench"]
 
 
 def smoke_rows():
@@ -145,6 +152,37 @@ def smoke_rows():
     assert best.avg_power <= partition.optimal_partition().avg_power * (
         1 + 1e-12)
 
+    # Scenario engine: the constant trace must degenerate bitwise to the
+    # static kernel, the linear-battery time-to-empty closed form must
+    # hold, and streaming session-channel reductions must match dense.
+    from repro.core import scenario as SC
+    from repro.core.constants import DEFAULT_BATTERY
+    const = SC.ScenarioSet(
+        traces=(SC.ScenarioTrace("const", (SC.Phase(600.0),)),),
+        throttle=False)
+    scen = sweep.evaluate_grid(**grid_kw, scenarios=const)
+    assert all(np.array_equal(dense.data[f], scen.data[f][..., 0],
+                              equal_nan=True) for f in sweep.FIELDS), \
+        "constant-trace degeneracy drifted from the static kernel"
+    P = scen.data["avg_power"][..., 0]
+    okm = np.isfinite(P)
+    tte_ref = DEFAULT_BATTERY.soc0 * DEFAULT_BATTERY.capacity_j / P[okm]
+    tte_err = float(np.max(np.abs(
+        scen.data["time_to_empty_s"][..., 0][okm] - tte_ref) / tte_ref))
+    assert tte_err <= 1e-6, f"time-to-empty oracle drift: {tte_err}"
+    scen_obj = ("time_to_empty_s", "peak_case_temp_c")
+    scen_ref = sweep.evaluate_grid(**grid_kw, scenarios="all")
+    scen_stream = stream.stream_grid(
+        **grid_kw, scenarios="all", chunk_size=97, objectives=scen_obj,
+        maximize=("time_to_empty_s",))
+    assert scen_stream.argmin("peak_case_temp_c")["peak_case_temp_c"] == \
+        np.nanmin(scen_ref.data["peak_case_temp_c"]), \
+        "scenario streaming argmin drifted from dense"
+    tr = scen_ref.data["time_to_empty_s"]
+    assert scen_stream.top_k("time_to_empty_s")[0]["time_to_empty_s"] \
+        == np.nanmax(tr[np.isfinite(tr)]), \
+        "scenario top-k(maximize) drifted from dense"
+
     # Seeded transient faults (raise-on-chunk-k + Bernoulli rate): the
     # bounded retry path must converge with untouched results.
     from repro.runtime import FaultInjector, FaultPlan
@@ -180,6 +218,11 @@ def smoke_rows():
          f"compiled latency<= {lat_budget:.3g} mask == dense post-filter"),
         ("smoke.stacked_parity", 1.0,
          f"{len(pairs)} stacked models <=1e-6 vs single grids"),
+        ("smoke.scenario_oracle_parity", 1.0,
+         f"const-trace degeneracy bitwise; tte oracle <= {tte_err:.2g}"),
+        ("smoke.scenario_stream_parity", 1.0,
+         f"session argmin/top-k(maximize) exact on "
+         f"{scen_ref.n_configs} (config x trace)"),
         ("smoke.transient_fault_parity", 1.0,
          f"{n_retries} injected faults retried to exact parity"),
         ("smoke.kill_resume_parity", 1.0,

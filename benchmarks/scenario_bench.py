@@ -1,0 +1,170 @@
+"""Session scenario engine: (config x trace) sweep throughput + oracles.
+
+    PYTHONPATH=src python -m benchmarks.scenario_bench
+
+Benchmarks the battery/thermal session simulator
+(``repro.core.scenario``) driven through the streaming executor:
+
+* **oracle parity** — on a small reference grid, the constant-trace
+  closed forms (time-to-empty, peak temperature, session energy) hold
+  to <= 1e-6 and streaming argmin / top-k(maximize) / Pareto fronts
+  over the session channels match the dense grid exactly;
+* **million-pair throughput** — the acceptance-scale run: >= 10^6
+  (config x trace) pairs streamed through ``stream_grid`` with
+  ``objectives=("time_to_empty_s", "peak_case_temp_c")`` and
+  ``maximize=("time_to_empty_s",)``, reporting pairs/s and the
+  session-level winners.  Each pair runs the full per-session
+  ``lax.scan`` (``n_steps`` Eq. 1-11 evaluations), so ``evals_per_s``
+  records the underlying kernel-step rate for comparison against the
+  static engines (``BENCH_sweep.json`` / ``BENCH_stream.json``).
+
+Emits ``name,value,derived`` rows via :func:`rows` and snapshots
+``BENCH_scenario.json`` at the repo root for the perf trail.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_scenario.json"
+
+#: Small reference grid for exact stream/dense parity + oracles.
+REF_GRID = dict(
+    cuts=(0, 11, 20),
+    sensor_nodes=("7nm", "16nm"),
+    weight_mems=("sram", "mram"),
+    detnet_fps=(5.0, 15.0, 30.0),
+)
+
+#: Acceptance-scale grid: 34 cuts x 2 x 2 x 26 x 72 = 254,592 configs,
+#: x 4 profile traces = 1,018,368 (config x trace) pairs.
+BIG_GRID = dict(
+    sensor_nodes=("7nm", "16nm"),
+    weight_mems=("sram", "mram"),
+    detnet_fps=tuple(np.linspace(5.0, 30.0, 26)),
+    camera_fps=tuple(np.linspace(20.0, 60.0, 72)),
+)
+
+OBJ = ("time_to_empty_s", "peak_case_temp_c")
+
+
+def _oracle_rows():
+    """Constant-trace closed forms + stream/dense parity on REF_GRID."""
+    from repro.core import pareto, scenario as SC, stream, sweep
+    from repro.core.constants import DEFAULT_BATTERY, DEFAULT_THERMAL
+
+    D = 600.0
+    const = SC.ScenarioSet(
+        traces=(SC.ScenarioTrace("const", (SC.Phase(D),)),), throttle=False)
+    dense = sweep.evaluate_grid(scenarios=const, **REF_GRID)
+    P = dense.data["avg_power"][..., 0]
+    ok = np.isfinite(P)
+
+    def rel(got, ref):
+        return float(np.max(np.abs(got[ok] - ref[ok])
+                            / np.maximum(np.abs(ref[ok]), 1e-30)))
+
+    tau = DEFAULT_THERMAL.r_th_k_per_w * DEFAULT_THERMAL.c_th_j_per_k
+    errs = {
+        "tte": rel(dense.data["time_to_empty_s"][..., 0],
+                   DEFAULT_BATTERY.soc0 * DEFAULT_BATTERY.capacity_j / P),
+        "peak": rel(dense.data["peak_case_temp_c"][..., 0],
+                    DEFAULT_THERMAL.ambient_c + P
+                    * DEFAULT_THERMAL.r_th_k_per_w
+                    * (1.0 - np.exp(-D / tau))),
+        "energy": rel(dense.data["session_energy_j"][..., 0], P * D),
+    }
+    assert max(errs.values()) <= 1e-6, f"oracle drift: {errs}"
+
+    # constant-trace degeneracy: static channels bitwise vs plain grid
+    static = sweep.evaluate_grid(**REF_GRID)
+    assert all(np.array_equal(static.data[f], dense.data[f][..., 0],
+                              equal_nan=True) for f in sweep.FIELDS), \
+        "constant-trace degeneracy drifted from the static kernel"
+
+    # stream/dense parity over the four profiles
+    ref = sweep.evaluate_grid(scenarios="all", **REF_GRID)
+    res = stream.stream_grid(objectives=OBJ, maximize=OBJ[:1],
+                             scenarios="all", chunk_size=256, **REF_GRID)
+    assert res.argmin("peak_case_temp_c")["peak_case_temp_c"] == \
+        np.nanmin(ref.data["peak_case_temp_c"]), "scenario argmin drifted"
+    tte = ref.data["time_to_empty_s"]
+    want = np.sort(tte[np.isfinite(tte)])[::-1][:4]
+    got = [p["time_to_empty_s"] for p in res.top_k("time_to_empty_s")]
+    assert np.array_equal(got, want), "scenario top-k(maximize) drifted"
+    df = pareto.pareto_front(ref, objectives=OBJ, maximize=OBJ[:1])
+    sf = res.pareto_front()
+    assert {tuple(v) for v in df.values} == \
+        {tuple(v) for v in sf.values}, "scenario front drifted"
+
+    return [
+        ("scenario.oracle_max_rel_err", max(errs.values()),
+         "tte/peak/energy closed forms on the constant trace"),
+        ("scenario.stream_dense_parity", 1.0,
+         f"argmin/top-k/front exact on {ref.n_configs} (config x trace)"),
+        ("scenario.front_size", float(sf.size),
+         "time-to-empty vs peak-temp front members"),
+    ]
+
+
+def _throughput_rows():
+    from repro.core import scenario as SC, stream
+
+    sset = SC.as_scenario_set("all")
+    n_steps = max(len(t.phases) for t in sset.traces) * sset.steps_per_phase
+
+    t0 = time.perf_counter()
+    res = stream.stream_grid(objectives=OBJ, maximize=OBJ[:1],
+                             scenarios=sset, **BIG_GRID)
+    wall = time.perf_counter() - t0
+    n = res.n_configs
+    assert n >= 1_000_000, f"acceptance scale not reached: {n}"
+    best = res.top_k("time_to_empty_s")[0]
+    cool = res.argmin("peak_case_temp_c")
+
+    point = {
+        "n_pairs": int(n),
+        "n_steps_per_session": int(n_steps),
+        "wall_s": round(wall, 2),
+        "pairs_per_s": round(n / wall, 1),
+        "evals_per_s": round(n * n_steps / wall, 1),
+        "best_tte_h": round(best["time_to_empty_s"] / 3600.0, 3),
+        "best_tte_trace": best["trace"],
+        "min_peak_c": round(cool["peak_case_temp_c"], 3),
+        "front_size": int(res.pareto_front().size),
+    }
+    rows = [
+        ("scenario.stream_1m.pairs", float(n),
+         f"(config x trace) pairs, {n_steps}-step sessions"),
+        ("scenario.stream_1m.pairs_per_s", point["pairs_per_s"],
+         f"wall {wall:.1f}s through stream_grid"),
+        ("scenario.stream_1m.evals_per_s", point["evals_per_s"],
+         "underlying Eq. 1-11 kernel-step rate"),
+        ("scenario.stream_1m.best_tte_h", point["best_tte_h"],
+         f"max time-to-empty ({best['trace']}, cut={best['cut']})"),
+        ("scenario.stream_1m.min_peak_c", point["min_peak_c"],
+         f"coolest session ({cool['trace']}, cut={cool['cut']})"),
+    ]
+    return rows, point
+
+
+def rows():
+    out = _oracle_rows()
+    tp_rows, point = _throughput_rows()
+    out += tp_rows
+    BENCH_JSON.write_text(json.dumps({
+        "oracle": {name: val for name, val, _ in out[:3]},
+        "stream_1m": point,
+    }, indent=2) + "\n")
+    return out
+
+
+if __name__ == "__main__":
+    print("name,value,derived")
+    for name, val, derived in rows():
+        print(f"{name},{val:.6g},{derived}")

@@ -21,6 +21,9 @@ section below is one batched device call instead of a scalar Python loop:
   configurations before the front is extracted,
 * architecture x partition co-design over a batched workload axis
   (`models=`: DetNet/KeyNet variants swept inside one compiled kernel),
+* the session-level front (`scenarios=`): every configuration simulated
+  through time-varying user-behavior traces with battery + thermal
+  state, then time-to-empty maximized against peak case temperature,
 * explicit evaluation-backend selection (`backend="pallas"` parity on
   a small grid) and scan-fused vs per-chunk dispatch timing on a large
   space (`scan_chunks=`, the `repro.core.backend` layer),
@@ -204,6 +207,38 @@ def architecture_search():
           f"({best['avg_power']*1e3:.3f} mW)")
 
 
+def session_study():
+    print("\n== session-level front: time-to-empty vs peak case temp ==")
+    # Every (config, trace) pair runs the battery/thermal lax.scan
+    # session simulator; the four session channels then drive the same
+    # argmin/top-k/Pareto machinery as the static ones.
+    axes = dict(sensor_nodes=("7nm", "16nm"),
+                detnet_fps=(5.0, 15.0, 30.0))
+    objectives = ("time_to_empty_s", "peak_case_temp_c")
+    res = stream.stream_grid(**axes, scenarios="all", objectives=objectives,
+                             maximize=("time_to_empty_s",))
+    n_traces = len(res.axes["trace"])
+    print(f"  {res.n_configs:,} (config x trace) pairs "
+          f"({n_traces} user-behavior profiles)")
+    front = res.pareto_front()
+    print(f"  {'trace':>8s} {'cut':>4s} {'sensor':>7s} {'dfps':>5s} "
+          f"{'empty h':>8s} {'peak C':>7s}")
+    for cfg in front.configs():
+        print(f"  {cfg['trace']:>8s} {cfg['cut']:4d} "
+              f"{cfg['sensor_node']:>7s} {cfg['detnet_fps']:5.0f} "
+              f"{cfg['time_to_empty_s']/3600:8.1f} "
+              f"{cfg['peak_case_temp_c']:7.2f}")
+    # Scalar search API: longest session that never exceeds 40 C.
+    best = partition.optimal_partition(
+        objective="time_to_empty_s", scenarios="all",
+        sensor_node=("7nm", "16nm"), detnet_fps=(5.0, 15.0, 30.0),
+        constraints={"peak_case_temp_c": ("<=", 40.0)})
+    print(f"  optimal_partition(scenarios=...): {best.label} under "
+          f"'{best.trace}' -> {best.session['time_to_empty_s']/3600:.1f} h, "
+          f"peak {best.session['peak_case_temp_c']:.2f} C, "
+          f"throttled {best.session['throttle_fraction']*100:.1f}%")
+
+
 def backend_study():
     print("\n== evaluation backends: explicit selection + scan fusion ==")
     # Every engine runs the same decode -> evaluate -> fold contract
@@ -261,6 +296,7 @@ if __name__ == "__main__":
     streaming_sweep()
     constrained_sweep()
     architecture_search()
+    session_study()
     backend_study()
     knob_search()
     report_winner()

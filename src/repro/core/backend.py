@@ -75,11 +75,16 @@ class EvalBackend:
     """Protocol of an evaluation backend (see the module docstring).
 
     Subclasses implement the two builders; ``supports_pmap`` gates the
-    multi-device ``pmap`` path of :func:`build_step`.
+    multi-device ``pmap`` path of :func:`build_step`, and
+    ``supports_scenarios`` gates scenario-wrapped lowerings
+    (``scenario.ScenarioStack`` — the session ``lax.scan`` kernel; a
+    fused block kernel that re-implements the evaluation, like the
+    Pallas grid kernel, must opt out until it lowers the scan too).
     """
 
     name: str = "?"
     supports_pmap: bool = True
+    supports_scenarios: bool = True
 
     def build_dense_eval(self, S, shape: tuple[int, ...],
                          fields: Sequence[str]) -> Callable:
@@ -129,6 +134,19 @@ def get_backend(name: str | None = None) -> EvalBackend:
         raise ValueError(f"unknown evaluation backend {name!r}; "
                          f"available: {available_backends()}")
     return be
+
+
+def check_scenario_support(be: EvalBackend, S) -> None:
+    """Reject a scenario-wrapped lowering on a backend that cannot run
+    the session ``lax.scan`` kernel (duck-checked via the
+    ``is_scenario`` marker, so plain model stacks cost nothing)."""
+    if getattr(S, "is_scenario", False) and not be.supports_scenarios:
+        scen = tuple(n for n in available_backends()
+                     if get_backend(n).supports_scenarios)
+        raise ValueError(
+            f"evaluation backend {be.name!r} does not support "
+            f"scenario sweeps (the session lax.scan kernel); "
+            f"scenario-capable backends: {scen}")
 
 
 # ---------------------------------------------------------------------------
@@ -421,6 +439,7 @@ def build_step(spec: ChunkSpec, backend: str | None = None,
         raise ValueError(f"backend {be.name!r} does not support the "
                          f"multi-device pmap path; pass devices= with a "
                          f"single device")
+    check_scenario_support(be, spec.S)
     evalfn = be.build_chunk_eval(spec)
 
     def one(carry, axvals, aux, start):
@@ -474,7 +493,9 @@ def cached_dense_eval(backend: str | None, S, shape: tuple[int, ...],
 
 @functools.lru_cache(maxsize=32)
 def _cached_dense_eval(backend: str, S, shape, fields):
-    return get_backend(backend).build_dense_eval(S, shape, fields)
+    be = get_backend(backend)
+    check_scenario_support(be, S)
+    return be.build_dense_eval(S, shape, fields)
 
 
 # ---------------------------------------------------------------------------

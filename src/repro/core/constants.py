@@ -211,6 +211,55 @@ BOX_COORDS_BYTES = 64           # detection boxes returned sensor-ward (per fram
 
 
 # ---------------------------------------------------------------------------
+# Session dynamics: battery + lumped-thermal parameters (scenario engine)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BatterySpec:
+    """Glasses-class battery for the session simulator (``core/scenario``).
+
+    ``capacity_j`` is usable energy (a ~2.1 Wh cell is representative of
+    the Google-Glass-class devices "Draining our Glass" characterizes).
+    ``peukert`` models rate-dependent capacity loss: the effective drain
+    power is ``P * (P / p_ref_w) ** (peukert - 1)``, so ``peukert=1``
+    (default) is exactly linear coulomb counting — which keeps the
+    closed-form battery oracle of ``tests/test_scenario.py`` bitwise.
+    """
+
+    name: str = "glass-2.1Wh"
+    capacity_j: float = 2.1 * 3600.0   # usable energy (J)
+    soc0: float = 1.0                  # initial state of charge [0, 1]
+    peukert: float = 1.0               # 1.0 = ideal linear drain
+    p_ref_w: float = 1.0               # Peukert reference draw (W)
+
+
+@dataclasses.dataclass(frozen=True)
+class ThermalSpec:
+    """One lumped RC node (case) + throttle law for the session simulator.
+
+    ``T' = T_amb + P*R + (T - T_amb - P*R) * exp(-dt / (R*C))`` is the
+    exact step response, so the discretized trajectory matches the
+    analytic exponential regardless of step size.  The throttle factor
+    ``clip(1 - gain * max(0, T - onset), floor, 1)`` multiplies the
+    DetNet/KeyNet inference rates; below onset it is exactly 1.0, so a
+    cool device reproduces the static operating point bitwise.
+    """
+
+    name: str = "ar-frame"
+    r_th_k_per_w: float = 25.0         # case-to-ambient resistance (K/W)
+    c_th_j_per_k: float = 40.0         # lumped heat capacity (J/K); tau ~17min
+    ambient_c: float = 25.0            # ambient temperature (degC)
+    throttle_onset_c: float = 35.0     # skin-comfort throttle threshold
+    throttle_gain_per_c: float = 0.25  # rate reduction per K above onset
+    throttle_floor: float = 0.3        # lowest allowed rate multiplier
+
+
+DEFAULT_BATTERY = BatterySpec()
+DEFAULT_THERMAL = ThermalSpec()
+
+
+# ---------------------------------------------------------------------------
 # TPU v5e-class constants (beyond-paper adaptation + roofline analysis)
 # ---------------------------------------------------------------------------
 

@@ -59,6 +59,15 @@ from .workloads import NNWorkload
 #: can minimize (the paper's three headline objectives).
 OBJECTIVES = ("avg_power", "latency", "mipi_bytes_per_s")
 
+#: Session-level channels, available when ``scenarios=`` is passed (the
+#: battery/thermal session simulator of :mod:`repro.core.scenario`).
+#: All are minimized except ``time_to_empty_s``, which is maximized.
+SESSION_OBJECTIVES = ("session_energy_j", "time_to_empty_s",
+                      "peak_case_temp_c", "throttle_fraction")
+
+#: Objective channels where "optimal" means the *largest* value.
+_MAXIMIZED = ("time_to_empty_s",)
+
 #: Grid size above which ``optimal_partition`` routes the search through
 #: the streaming executor (`repro.core.stream.stream_grid`) instead of
 #: materializing a dense grid.
@@ -87,6 +96,11 @@ class PartitionPoint:
     sensor_macs_per_s: float
     latency: float
     report: SystemReport
+    #: Winning trace name and session channel dict (the four
+    #: :data:`SESSION_OBJECTIVES` values) — populated only by scenario
+    #: searches (``optimal_partition(..., scenarios=...)``).
+    trace: str | None = None
+    session: dict | None = None
 
 
 def _sub_workload(wl: NNWorkload, lo: int, hi: int,
@@ -227,6 +241,7 @@ def _is_axis(v) -> bool:
 def optimal_partition(engine: str = "array",
                       objective: str = "avg_power",
                       constraints=None, backend: str | None = None,
+                      scenarios=None,
                       checkpoint_dir: str | None = None,
                       checkpoint_every_s: float | None = None,
                       **kw) -> PartitionPoint:
@@ -271,6 +286,17 @@ def optimal_partition(engine: str = "array",
     ``engine="scalar"`` evaluates no grids and rejects an explicit
     backend.
 
+    ``scenarios`` runs the search at *session* level: every configuration
+    is simulated through the given user-behavior traces (a
+    :class:`~repro.core.scenario.ScenarioSet`, profile name(s), or
+    ``"all"`` — see :func:`repro.core.scenario.as_scenario_set`), the
+    trace becomes one more search axis, and ``objective`` may then be any
+    of :data:`SESSION_OBJECTIVES` (``time_to_empty_s`` is maximized, the
+    rest minimized).  The returned point carries the winning ``trace``
+    name and a ``session`` dict with all four session channels.
+    Constraints may mix static and session channels (e.g. maximize
+    ``time_to_empty_s`` subject to ``peak_case_temp_c <= 40``).
+
     ``checkpoint_dir`` (with optional ``checkpoint_every_s``) makes the
     *streaming* route fault-tolerant: searches above
     :data:`STREAM_THRESHOLD` configurations periodically snapshot their
@@ -278,9 +304,19 @@ def optimal_partition(engine: str = "array",
     crash (see :func:`repro.core.stream.stream_grid`).  Dense and
     scalar searches finish in one pass and ignore the knobs.
     """
-    if objective not in OBJECTIVES:
+    if objective not in OBJECTIVES + SESSION_OBJECTIVES:
         raise ValueError(f"unknown objective {objective!r}; "
-                         f"have {OBJECTIVES}")
+                         f"have {OBJECTIVES} plus the session channels "
+                         f"{SESSION_OBJECTIVES} (which require scenarios=)")
+    if objective in SESSION_OBJECTIVES and scenarios is None:
+        raise ValueError(
+            f"objective {objective!r} is a session channel; pass "
+            f"scenarios= (a ScenarioSet, profile name, or 'all' — see "
+            f"repro.core.scenario)")
+    sset = None
+    if scenarios is not None:
+        from . import scenario as _scenario
+        sset = _scenario.as_scenario_set(scenarios)
     from . import backend as _backend
     if backend is not None and engine == "scalar":
         raise ValueError("backend= applies to the array/streaming "
@@ -296,25 +332,34 @@ def optimal_partition(engine: str = "array",
 
     cons = _sweep.parse_constraints(constraints)
 
-    def constrained_argmin(res):
+    def constrained_best(res):
         if cons:
             res = res.constrain(cons)
-            if not np.isfinite(res.data[objective]).any():
+            # isnan (not isfinite): time_to_empty_s is legitimately +inf
+            # for configurations that drain nothing.
+            if np.isnan(res.data[objective]).all():
                 raise ValueError(
                     "no configuration satisfies constraints ("
                     + ", ".join(f"{f} {op} {v:g}" for f, op, v in cons)
                     + ") — loosen the constraints or widen the knobs")
+        if objective in _MAXIMIZED:
+            neg = dataclasses.replace(
+                res, data={**dict(res.data),
+                           objective: -np.asarray(res.data[objective])})
+            win = neg.argmin(objective)
+            win[objective] = -win[objective]
+            return win
         return res.argmin(objective)
 
     cuts = kw.pop("cuts", None)
     if cuts is not None:
         cuts = tuple(cuts)        # may be a generator: materialize once
-    multi = cuts is not None or any(
+    multi = cuts is not None or sset is not None or any(
         _is_axis(v) for k, v in kw.items() if k not in ("detnet", "keynet"))
     if multi:
         if engine != "array":
-            raise ValueError("sequence-valued knobs (or cuts=) require "
-                             "engine='array'")
+            raise ValueError("sequence-valued knobs (cuts= or scenarios=) "
+                             "require engine='array'")
         axes = _sweep.scalar_axes(kw)
         for name in ("agg_nodes", "sensor_nodes"):
             bad = [n for n in axes[name] if _registry_name(n) is None]
@@ -341,6 +386,8 @@ def optimal_partition(engine: str = "array",
                      "detnet_fps", "keynet_fps", "num_cameras",
                      "mipi_energy_scale", "camera_fps"):
             n_configs *= len(axes[name])
+        if sset is not None:
+            n_configs *= len(sset.traces)
         if n_configs > STREAM_THRESHOLD:
             from . import stream as _stream
             ckpt_kw = {}
@@ -348,17 +395,44 @@ def optimal_partition(engine: str = "array",
                 ckpt_kw["checkpoint_dir"] = checkpoint_dir
                 if checkpoint_every_s is not None:
                     ckpt_kw["checkpoint_every_s"] = checkpoint_every_s
-            win = _stream.stream_grid(
-                cuts=cuts, objectives=(objective,), constraints=cons,
-                backend=backend, **ckpt_kw, **axes).argmin(objective)
+            maximize = ((objective,) if objective in _MAXIMIZED else ())
+            sres = _stream.stream_grid(
+                cuts=cuts, objectives=(objective,), maximize=maximize,
+                constraints=cons, backend=backend, scenarios=sset,
+                **ckpt_kw, **axes)
+            # StreamResult.argmin is always natural-orientation
+            # minimization; under maximize= the best point is the head
+            # of the (sign-flipped) top-k heap.
+            win = (sres.top_k(objective)[0] if maximize
+                   else sres.argmin(objective))
         else:
-            win = constrained_argmin(_sweep.evaluate_grid(
-                cuts=cuts, backend=backend, **axes))
+            win = constrained_best(_sweep.evaluate_grid(
+                cuts=cuts, backend=backend, scenarios=sset, **axes))
         scalar_kw = {_AXIS_TO_KWARG[name]: win[name]
                      for name in _AXIS_TO_KWARG}
         scalar_kw["num_cameras"] = int(scalar_kw["num_cameras"])
-        return evaluate_cut(int(win["cut"]), detnet=kw.get("detnet"),
-                            keynet=kw.get("keynet"), **scalar_kw)
+        point = evaluate_cut(int(win["cut"]), detnet=kw.get("detnet"),
+                             keynet=kw.get("keynet"), **scalar_kw)
+        if sset is not None:
+            # Re-simulate the winning (config, trace) pair through the
+            # dense engine to attach all four session channels.
+            r1 = _sweep.evaluate_grid(
+                cuts=(int(win["cut"]),), scenarios=sset.only(win["trace"]),
+                detnet=kw.get("detnet"), keynet=kw.get("keynet"),
+                backend=backend,
+                agg_nodes=(win["agg_node"],),
+                sensor_nodes=(win["sensor_node"],),
+                weight_mems=(win["weight_mem"],),
+                detnet_fps=(float(win["detnet_fps"]),),
+                keynet_fps=(float(win["keynet_fps"]),),
+                num_cameras=(float(win["num_cameras"]),),
+                mipi_energy_scale=(float(win["mipi_energy_scale"]),),
+                camera_fps=(float(win["camera_fps"]),))
+            session = {f: float(r1.data[f].ravel()[0])
+                       for f in _sweep.SCENARIO_FIELDS}
+            point = dataclasses.replace(point, trace=str(win["trace"]),
+                                        session=session)
+        return point
 
     agg = _registry_name(kw.get("agg_node", "7nm"))
     sen = _registry_name(kw.get("sensor_node", "7nm"))
@@ -373,7 +447,7 @@ def optimal_partition(engine: str = "array",
             f"{_resolve_node(kw.get('sensor_node', '7nm')).name}")
     if engine == "array" and agg is not None and sen is not None:
         res = _sweep.evaluate_grid(backend=backend, **_sweep.scalar_axes(kw))
-        return evaluate_cut(constrained_argmin(res)["cut"], **kw)
+        return evaluate_cut(constrained_best(res)["cut"], **kw)
     if backend is not None:
         # Custom TechNodes outside the registry fall back to the scalar
         # engine, which evaluates no grids — an explicit backend request

@@ -459,6 +459,7 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                 keynet: NNWorkload | None = None,
                 model: A.ModelArrays | None = None,
                 models=None,
+                scenarios=None,
                 chunk_size: int = DEFAULT_CHUNK,
                 top_k: int = 4,
                 objectives: Sequence[str] = P.DEFAULT_OBJECTIVES,
@@ -485,6 +486,15 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
     ``chunk_size`` pieces (per device) and folded into running
     reductions, so host memory is O(chunk + front) for any grid size.
     Argmin, top-k and Pareto front are *exactly* the dense-path results.
+
+    ``scenarios=`` (a :class:`repro.core.scenario.ScenarioSet` or
+    profile name(s)) appends a trailing ``trace`` axis and drives every
+    (config × trace) pair through the session simulator inside the same
+    chunk contract; the four session channels
+    (:data:`repro.core.sweep.SCENARIO_FIELDS` — e.g.
+    ``time_to_empty_s``, usually with ``maximize=("time_to_empty_s",)``,
+    and ``peak_case_temp_c``) then work as objectives, constraints and
+    tracked channels exactly like the static fields.
 
     ``objectives``/``maximize`` select the channels tracked by top-k and
     the incremental Pareto front.  ``track`` adds further channels to the
@@ -537,26 +547,29 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
     S, axis_vals, axes = SW.build_axes(
         cuts, agg_nodes, sensor_nodes, weight_mems, detnet_fps, keynet_fps,
         num_cameras, mipi_energy_scale, camera_fps, detnet, keynet, model,
-        models)
+        models, scenarios)
     full_shape = tuple(a.size for a in axis_vals)
     n_total = int(np.prod(full_shape))
+    kfields = SW.kernel_fields(S)
 
     objectives = tuple(objectives)
     maximize = tuple(maximize)
     if not objectives:
         raise ValueError("need at least one objective channel")
     if track == "all":
-        extra: tuple = SW.FIELDS
+        extra: tuple = kfields
     else:
         extra = tuple(track) if track is not None else ()
     cons = SW.parse_constraints(constraints)
     extra = extra + tuple(f for f, _, _ in cons)
     fields = objectives + tuple(dict.fromkeys(
         f for f in extra if f not in objectives))
-    unknown = [o for o in fields if o not in SW.FIELDS]
+    unknown = [o for o in fields if o not in kfields]
     if unknown:
-        raise ValueError(f"unknown objective channels {unknown}; "
-                         f"have {SW.FIELDS}")
+        hint = (" — session channels require scenarios="
+                if any(o in SW.SCENARIO_FIELDS for o in unknown) else "")
+        raise ValueError(f"unknown objective channels {unknown}; this "
+                         f"sweep evaluates {kfields}{hint}")
     stray = [o for o in maximize if o not in objectives]
     if stray:
         raise ValueError(f"maximize entries {stray} not in objectives")
@@ -768,12 +781,12 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                 # runs), with the same constraint mask and (host-mirror)
                 # pre-filter.
                 flat = np.arange(dstart, dstart + vlen, dtype=np.int64)
-                # Full-FIELDS evaluation on purpose: this is the *same*
-                # cached evaluator (same jaxpr) as sweep.evaluate_grid,
-                # so the re-derived survivor values are bitwise the
-                # dense path's — a narrower field set lowers differently
-                # and can drift in the last ulp.
-                out = B.cached_dense_eval("xla", S, full_shape, SW.FIELDS)(
+                # Full kernel-field evaluation on purpose: this is the
+                # *same* cached evaluator (same jaxpr) as
+                # sweep.evaluate_grid, so the re-derived survivor values
+                # are bitwise the dense path's — a narrower field set
+                # lowers differently and can drift in the last ulp.
+                out = B.cached_dense_eval("xla", S, full_shape, kfields)(
                     tuple(map(jnp.asarray, axis_vals)), jnp.asarray(flat))
                 O = np.stack([np.asarray(out[f]) for f in objectives])
                 feas = np.ones(vlen, bool)

@@ -67,6 +67,11 @@ AXIS_NAMES = ("cut", "agg_node", "sensor_node", "weight_mem", "detnet_fps",
 #: (``models=`` on :func:`evaluate_grid` / ``stream.stream_grid``).
 MODEL_AXIS = "model"
 
+#: Name of the optional trailing axis over scenario traces
+#: (``scenarios=`` on :func:`evaluate_grid` / ``stream.stream_grid``);
+#: its values are the trace names of the scenario set.
+SCENARIO_AXIS = "trace"
+
 #: Output fields of the kernel (each becomes one grid-shaped array).
 #: ``avg_power`` + the seven power-breakdown groups, plus the three
 #: non-power objective channels: ``mipi_bytes_per_s`` (Eq. 5 link traffic),
@@ -75,6 +80,22 @@ MODEL_AXIS = "model"
 FIELDS = ("avg_power", "camera", "utsv", "mipi", "sensor_compute",
           "sensor_memory", "agg_compute", "agg_memory", "mipi_bytes_per_s",
           "sensor_macs_per_s", "latency")
+
+#: Session channels emitted *in addition to* :data:`FIELDS` when a sweep
+#: runs with ``scenarios=`` (see :mod:`repro.core.scenario`).  They are
+#: first-class objectives/constraints everywhere a static field is;
+#: validity (NaN poisoning of invalid grid corners) is inherited from
+#: ``avg_power`` exactly.
+SCENARIO_FIELDS = ("session_energy_j", "time_to_empty_s",
+                   "peak_case_temp_c", "throttle_fraction")
+
+
+def kernel_fields(S=None) -> tuple[str, ...]:
+    """Channels the kernel of a (possibly scenario-wrapped) lowering
+    emits: :data:`FIELDS` for a plain model stack, plus
+    :data:`SCENARIO_FIELDS` for a ``scenario.ScenarioStack`` (which
+    advertises them via its ``fields`` attribute)."""
+    return getattr(S, "fields", FIELDS) if S is not None else FIELDS
 
 #: Comparison operators a constraint predicate may use (see
 #: :func:`parse_constraints`), mapped to their array-compatible callables
@@ -100,7 +121,9 @@ def parse_constraints(constraints) -> tuple[tuple[str, str, float], ...]:
     * an iterable of ``"field <= bound"`` strings or ``(field, op,
       bound)`` tuples.
 
-    Fields must be kernel channels (:data:`FIELDS`).  A configuration is
+    Fields must be kernel channels (:data:`FIELDS`, or
+    :data:`SCENARIO_FIELDS` on sweeps run with ``scenarios=``).  A
+    configuration is
     *feasible* iff every predicate holds; NaN channel values (invalid
     configurations) never satisfy a predicate, so infeasible and invalid
     configurations are excluded identically.
@@ -133,9 +156,11 @@ def parse_constraints(constraints) -> tuple[tuple[str, str, float], ...]:
                 items.append((field, op, bound))
     out = []
     for field, op, bound in items:
-        if field not in FIELDS:
+        if field not in FIELDS + SCENARIO_FIELDS:
             raise ValueError(f"unknown constraint channel {field!r}; "
-                             f"have {FIELDS}")
+                             f"kernel channels are {FIELDS} plus the "
+                             f"scenario channels {SCENARIO_FIELDS} "
+                             f"(which require scenarios=)")
         if op not in CONSTRAINT_OPS:
             raise ValueError(f"unknown constraint op {op!r}; "
                              f"have {tuple(CONSTRAINT_OPS)}")
@@ -361,7 +386,7 @@ def config_kernel(model: A.ModelArrays | None = None):
     return functools.partial(fn, 0)
 
 
-def vmapped_kernel(S: A.StackedModelArrays):
+def vmapped_kernel(S):
     """The un-jitted vmapped kernel (for embedding in a larger jit — the
     backend layer of :mod:`repro.core.backend` wraps it into both the
     dense evaluator and the fused chunk-reduction step).
@@ -369,8 +394,15 @@ def vmapped_kernel(S: A.StackedModelArrays):
     The vmapped signature is ``(model_i, cut, agg_i, sen_i, wm_i,
     detnet_fps, keynet_fps, num_cameras, mipi_energy_scale, camera_fps)``
     over equal-length flat arrays — exactly what the shared flat-index
-    decode of :func:`repro.core.backend.decode_gather` produces.
+    decode of :func:`repro.core.backend.decode_gather` produces.  A
+    scenario-wrapped lowering (``scenario.ScenarioStack``) provides its
+    own batched session kernel (one extra trailing ``trace_i``
+    coordinate); dispatching on that hook here means every backend and
+    engine built on this function runs scenarios unchanged.
     """
+    builder = getattr(S, "vmapped_kernel", None)
+    if builder is not None:
+        return builder()
     return jax.vmap(_make_config_fn(S))
 
 
@@ -549,7 +581,8 @@ class SweepResult:
         return float(finite.min()), float(finite.max())
 
     def breakdown_at(self, flat_index: int) -> dict[str, float]:
-        return {f: float(self.data[f].ravel()[flat_index]) for f in FIELDS}
+        return {f: float(self.data[f].ravel()[flat_index])
+                for f in self.data}
 
     def constrain(self, constraints) -> "SweepResult":
         """Dense post-filter twin of ``stream_grid(constraints=...)``.
@@ -581,7 +614,8 @@ def build_axes(cuts=None, agg_nodes=("7nm",), sensor_nodes=("7nm",),
                weight_mems=("sram",), detnet_fps=(DETNET_FPS,),
                keynet_fps=(KEYNET_FPS,), num_cameras=(NUM_CAMERAS,),
                mipi_energy_scale=(1.0,), camera_fps=(CAMERA_FPS,),
-               detnet=None, keynet=None, model=None, models=None):
+               detnet=None, keynet=None, model=None, models=None,
+               scenarios=None):
     """Validate and lower the grid axes (shared by dense and streaming).
 
     Returns ``(S, axis_arrays, axes)`` where ``S`` is the stacked model
@@ -590,6 +624,11 @@ def build_axes(cuts=None, agg_nodes=("7nm",), sensor_nodes=("7nm",),
     given), and ``axes`` is the user-facing axis dict — which includes
     ``model`` only when a workload batch was requested, so single-model
     results keep their 9-axis shape.
+
+    ``scenarios`` (a :class:`repro.core.scenario.ScenarioSet`, profile
+    name(s), or trace(s) — see ``scenario.as_scenario_set``) wraps the
+    lowering into a ``scenario.ScenarioStack`` and appends a trailing
+    ``trace`` axis whose user-facing values are the trace names.
     """
     if models is not None:
         if model is not None or detnet is not None or keynet is not None:
@@ -639,6 +678,14 @@ def build_axes(cuts=None, agg_nodes=("7nm",), sensor_nodes=("7nm",),
                                (S.model_names,) + labels))
     else:
         axes = OrderedDict(zip(AXIS_NAMES, labels))
+    if scenarios is not None:
+        # Wrap *after* node/cut validation — those ran against the raw
+        # stack above; the wrapper delegates every lookup back to it.
+        from . import scenario as _scenario  # deferred: scenario imports us
+        sset = _scenario.as_scenario_set(scenarios)
+        S = _scenario.scenario_stack(S, sset)
+        axis_arrays.append(np.arange(len(sset.traces), dtype=np.int32))
+        axes[SCENARIO_AXIS] = sset.names
     return S, axis_arrays, axes
 
 
@@ -655,6 +702,7 @@ def evaluate_grid(cuts: Optional[Iterable[int]] = None,
                   keynet: NNWorkload | None = None,
                   model: A.ModelArrays | None = None,
                   models=None,
+                  scenarios=None,
                   backend: Optional[str] = None) -> SweepResult:
     """Evaluate Eqs. 1-11 over the cartesian product of the given axes.
 
@@ -664,7 +712,10 @@ def evaluate_grid(cuts: Optional[Iterable[int]] = None,
     arrays are indexed ``[cut, agg, sensor, wmem, dfps, kfps, ncam,
     mipi_scale, cam_fps]`` — with a leading ``model`` axis when ``models``
     (a workload batch, see :func:`repro.core.arrays.stacked_model_arrays`)
-    is given.
+    is given, and a trailing ``trace`` axis when ``scenarios`` (a
+    :class:`repro.core.scenario.ScenarioSet` or profile name(s)) is:
+    each configuration is then driven through every session trace and
+    the four ``SCENARIO_FIELDS`` channels join the output.
 
     The grid runs as *one big chunk* of the shared evaluation-backend
     contract (:mod:`repro.core.backend`): flat indices are decoded to
@@ -680,13 +731,14 @@ def evaluate_grid(cuts: Optional[Iterable[int]] = None,
     S, axis_arrays, axes = build_axes(
         cuts, agg_nodes, sensor_nodes, weight_mems, detnet_fps, keynet_fps,
         num_cameras, mipi_energy_scale, camera_fps, detnet, keynet, model,
-        models)
+        models, scenarios)
     shape = tuple(len(v) for v in axes.values())
     full_shape = tuple(a.size for a in axis_arrays)
     n = int(np.prod(full_shape))
 
     with enable_x64():
-        evalfn = _backend.cached_dense_eval(backend, S, full_shape, FIELDS)
+        evalfn = _backend.cached_dense_eval(backend, S, full_shape,
+                                            kernel_fields(S))
         out = evalfn(tuple(map(jnp.asarray, axis_arrays)),
                      jnp.arange(n, dtype=jnp.int64))
         data = {k: np.asarray(v).reshape(shape) for k, v in out.items()}

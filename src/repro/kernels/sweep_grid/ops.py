@@ -24,11 +24,17 @@ class PallasGridBackend(B.EvalBackend):
     non-TPU platforms (the CPU CI/parity configuration), compiled
     Mosaic on TPU.  The multi-device ``pmap`` path is not supported —
     shard across Pallas-capable devices by passing explicit
-    single-device ``devices=`` lists per process instead.
+    single-device ``devices=`` lists per process instead.  Scenario
+    sweeps (``scenarios=`` — the session ``lax.scan`` kernel of
+    :mod:`repro.core.scenario`) are not supported either: this kernel
+    re-implements the Eq. 1-11 evaluation as a fused block body and
+    does not lower the per-lane scan; ``backend.check_scenario_support``
+    routes such sweeps to the XLA backend with a clear error.
     """
 
     name = "pallas"
     supports_pmap = False
+    supports_scenarios = False
 
     def __init__(self, interpret: bool | None = None):
         self.interpret = interpret

@@ -18,26 +18,71 @@ Emits ``name,value,derived`` CSV rows:
                     10^6 (config x trace) streaming throughput over the
                     battery/thermal channels (BENCH_scenario.json)
 
-``--smoke`` runs the fast CI gate instead: tiny grids, asserting exact
-streaming/dense parity (argmin, top-k, Pareto front, counts), async
-double-buffered pipeline parity across prefetch depths, the backend
-registry (``backend="pallas"`` in interpret mode and ``scan_chunks=4``
-fused dispatch, both exact vs dense), compiled ``constraints=`` masking
-vs the dense host post-filter, stacked-workload parity end-to-end, the
-scenario engine (constant-trace degeneracy bitwise vs the static
-kernel, the time-to-empty closed-form oracle, and session-channel
-argmin/top-k(maximize) stream-vs-dense parity), and
-the fault-tolerance recovery paths — a SIGKILLed checkpointed sweep
-must resume in a fresh process with bitwise-identical results, and
-seeded transient faults must retry to exact parity — so perf-path *and*
-resilience regressions fail CI, not just benchmark runs.
+``--smoke`` runs the fast CI gate instead: a sequence of *named steps*
+(tiny grids, hard asserts), each bounded by a per-step SIGALRM timeout
+(``REPRO_SMOKE_STEP_TIMEOUT_S``, default 300 s) so one wedged step
+fails loudly with its name instead of hanging the whole CI job:
+exact streaming/dense parity (argmin, top-k, Pareto front, counts),
+async double-buffered pipeline parity across prefetch depths, the
+backend registry (``backend="pallas"`` in interpret mode and
+``scan_chunks=4`` fused dispatch, both exact vs dense), compiled
+``constraints=`` masking vs the dense host post-filter,
+stacked-workload parity end-to-end, the scenario engine
+(constant-trace degeneracy bitwise vs the static kernel, the
+time-to-empty closed-form oracle, and session-channel
+argmin/top-k(maximize) stream-vs-dense parity), the fault-tolerance
+recovery paths — a SIGKILLed checkpointed sweep must resume in a fresh
+process with bitwise-identical results, and seeded transient faults
+must retry to exact parity — and the sweep service: a served request
+must match the solo run bitwise, a deadline-exceeded request must
+return a consistent prefix snapshot, an over-capacity submission must
+be rejected without disturbing admitted work, and a SIGKILL'd server
+restarted over its spool must resume to bitwise-identical results.
+Perf-path *and* resilience regressions fail CI, not just benchmarks.
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
+import os
+import signal as _signal
 import sys
+import threading
 import time
+
+#: Per-smoke-step watchdog (seconds); override with the env var.
+SMOKE_STEP_TIMEOUT_ENV = "REPRO_SMOKE_STEP_TIMEOUT_S"
+DEFAULT_SMOKE_STEP_TIMEOUT_S = 300.0
+
+
+class SmokeStepTimeout(RuntimeError):
+    """A smoke step exceeded its watchdog — named, so CI logs say
+    *which* gate wedged instead of timing out the whole job."""
+
+
+@contextlib.contextmanager
+def _step_timeout(name: str, seconds: float):
+    """SIGALRM watchdog around one smoke step (main thread only; a
+    no-op where SIGALRM is unavailable, e.g. Windows)."""
+    usable = (seconds > 0 and hasattr(_signal, "SIGALRM")
+              and threading.current_thread() is threading.main_thread())
+    if not usable:
+        yield
+        return
+
+    def _alarm(signum, frame):
+        raise SmokeStepTimeout(
+            f"smoke step '{name}' exceeded {seconds:.0f}s "
+            f"(raise {SMOKE_STEP_TIMEOUT_ENV} if the host is just slow)")
+
+    prev = _signal.signal(_signal.SIGALRM, _alarm)
+    _signal.setitimer(_signal.ITIMER_REAL, seconds)
+    try:
+        yield
+    finally:
+        _signal.setitimer(_signal.ITIMER_REAL, 0.0)
+        _signal.signal(_signal.SIGALRM, prev)
 
 
 def dosc_advisor_rows():
@@ -62,12 +107,11 @@ SUITES = ["power_tables", "rbe_roofline", "tpu_roofline", "kernel_bench",
           "scenario_bench"]
 
 
-def smoke_rows():
-    """Fast streaming/dense parity gate for CI (tiny grids, asserts)."""
+def _smoke_stream_parity(ctx):
+    """Dense reference + exact streaming parity (shared by later steps)."""
     import numpy as np
 
-    from repro.core import pareto, partition, stream, sweep
-    from repro.core.handtracking import build_detnet, build_keynet
+    from repro.core import pareto, stream, sweep
 
     grid_kw = dict(sensor_nodes=("7nm", "16nm"),
                    weight_mems=("sram", "mram"),
@@ -85,9 +129,21 @@ def smoke_rows():
     assert all(res.finite_counts[f] ==
                int(np.isfinite(dense.data[f]).sum())
                for f in sweep.FIELDS), "validity counts drifted"
+    ctx.update(grid_kw=grid_kw, dense=dense, res=res, df=df)
+    return [
+        ("smoke.stream_dense_parity", 1.0,
+         f"argmin/top-k/front/counts exact on {dense.n_configs} configs"),
+        ("smoke.front_size", float(sf.size), "reference-front members"),
+    ]
 
-    # Async double-buffered pipeline: prefetch depths (0 = synchronous
-    # reference) must not change a single result.
+
+def _smoke_async_pipeline(ctx):
+    """Prefetch depths (0 = synchronous reference) change no result."""
+    import numpy as np
+
+    from repro.core import stream
+
+    grid_kw, dense, df = ctx["grid_kw"], ctx["dense"], ctx["df"]
     piped = stream.stream_grid(**grid_kw, chunk_size=97, prefetch=4)
     sync = stream.stream_grid(**grid_kw, chunk_size=97, prefetch=0)
     for r in (piped, sync):
@@ -96,12 +152,21 @@ def smoke_rows():
         pf = r.pareto_front()
         assert np.array_equal(pf.indices, df.indices) and \
             np.array_equal(pf.values, df.values), "async front drifted"
+    return [("smoke.async_pipeline_parity", 1.0,
+             "prefetch 0/4 exact vs dense (double-buffered path)")]
 
-    # Compiled constraint predicates == dense host post-filter, exactly.
+
+def _smoke_constraints(ctx):
+    """Compiled constraint predicates == dense host post-filter."""
+    import numpy as np
+
+    from repro.core import pareto, stream
+
+    grid_kw, dense = ctx["grid_kw"], ctx["dense"]
     lat_budget = float(np.nanquantile(dense.data["latency"], 0.5))
     cons = {"latency": lat_budget}
     constrained = stream.stream_grid(**grid_kw, chunk_size=97,
-                                    constraints=cons, prefetch=4)
+                                     constraints=cons, prefetch=4)
     dense_con = dense.constrain(cons)
     assert constrained.argmin() == dense_con.argmin(), \
         "constrained argmin drifted from host post-filter"
@@ -111,9 +176,18 @@ def smoke_rows():
     assert constrained.finite_counts["latency"] == \
         int(np.isfinite(dense_con.data["latency"]).sum()), \
         "feasible counts drifted"
+    return [("smoke.constrained_parity", 1.0,
+             f"compiled latency<= {lat_budget:.3g} mask == dense "
+             f"post-filter")]
 
-    # Backend registry: the Pallas backend (interpret mode on CPU) and
-    # scan-fused dispatch must reproduce the same grid exactly.
+
+def _smoke_backends(ctx):
+    """Pallas (interpret on CPU) + scan-fused dispatch, exact vs dense."""
+    import numpy as np
+
+    from repro.core import stream, sweep
+
+    grid_kw, dense, df = ctx["grid_kw"], ctx["dense"], ctx["df"]
     pallas = stream.stream_grid(**grid_kw, chunk_size=97, track="all",
                                 backend="pallas")
     assert all(pallas.argmin(f) == dense.argmin(f)
@@ -134,8 +208,22 @@ def smoke_rows():
     sc = scanned.pareto_front()
     assert np.array_equal(sc.indices, df.indices) and \
         np.array_equal(sc.values, df.values), "scan-fused front drifted"
+    return [
+        ("smoke.pallas_backend_parity", 1.0,
+         "backend='pallas' (interpret) exact vs dense: stream + grid"),
+        ("smoke.scan_fused_parity", 1.0,
+         "scan_chunks=4 fused dispatch exact vs dense"),
+    ]
 
-    # Stacked-workload axis: every model row reproduces its own grid.
+
+def _smoke_stacked(ctx):
+    """Stacked-workload axis: every model row reproduces its own grid;
+    optimal_partition routes sequence knobs through the grid engines."""
+    import numpy as np
+
+    from repro.core import partition, sweep
+    from repro.core.handtracking import build_detnet, build_keynet
+
     det, key = build_detnet(), build_keynet()
     pairs = ((det, key), (det.scaled(0.5), key))
     stacked = sweep.evaluate_grid(models=pairs, detnet_fps=(10.0, 30.0))
@@ -146,17 +234,23 @@ def smoke_rows():
         ok = np.isfinite(a) & np.isfinite(b)
         rel = np.abs(a[ok] - b[ok]) / np.maximum(np.abs(b[ok]), 1e-30)
         assert rel.max() <= 1e-6, f"stacked model {mi} drifted: {rel.max()}"
-
-    # optimal_partition routes sequence knobs through the grid engines.
     best = partition.optimal_partition(sensor_node=("7nm", "16nm"))
     assert best.avg_power <= partition.optimal_partition().avg_power * (
         1 + 1e-12)
+    return [("smoke.stacked_parity", 1.0,
+             f"{len(pairs)} stacked models <=1e-6 vs single grids")]
 
-    # Scenario engine: the constant trace must degenerate bitwise to the
-    # static kernel, the linear-battery time-to-empty closed form must
-    # hold, and streaming session-channel reductions must match dense.
+
+def _smoke_scenario(ctx):
+    """Scenario engine: constant-trace degeneracy bitwise vs the static
+    kernel, time-to-empty closed form, stream-vs-dense session parity."""
+    import numpy as np
+
     from repro.core import scenario as SC
+    from repro.core import stream, sweep
     from repro.core.constants import DEFAULT_BATTERY
+
+    grid_kw, dense = ctx["grid_kw"], ctx["dense"]
     const = SC.ScenarioSet(
         traces=(SC.ScenarioTrace("const", (SC.Phase(600.0),)),),
         throttle=False)
@@ -182,10 +276,23 @@ def smoke_rows():
     assert scen_stream.top_k("time_to_empty_s")[0]["time_to_empty_s"] \
         == np.nanmax(tr[np.isfinite(tr)]), \
         "scenario top-k(maximize) drifted from dense"
+    return [
+        ("smoke.scenario_oracle_parity", 1.0,
+         f"const-trace degeneracy bitwise; tte oracle <= {tte_err:.2g}"),
+        ("smoke.scenario_stream_parity", 1.0,
+         f"session argmin/top-k(maximize) exact on "
+         f"{scen_ref.n_configs} (config x trace)"),
+    ]
 
-    # Seeded transient faults (raise-on-chunk-k + Bernoulli rate): the
-    # bounded retry path must converge with untouched results.
+
+def _smoke_transient_faults(ctx):
+    """Seeded transient faults retry in place to untouched results."""
+    import numpy as np
+
+    from repro.core import stream, sweep
     from repro.runtime import FaultInjector, FaultPlan
+
+    grid_kw, dense, df = ctx["grid_kw"], ctx["dense"], ctx["df"]
     inj = FaultInjector(FaultPlan(fail_chunks=(1,), transient_rate=0.5,
                                   seed=3))
     faulted = stream.stream_grid(**grid_kw, chunk_size=97, track="all",
@@ -198,38 +305,124 @@ def smoke_rows():
     ff = faulted.pareto_front()
     assert np.array_equal(ff.indices, df.indices) and \
         np.array_equal(ff.values, df.values), "retried sweep front drifted"
-    n_retries = int(faulted.stats["retries"])
+    return [("smoke.transient_fault_parity", 1.0,
+             f"{int(faulted.stats['retries'])} injected faults retried "
+             f"to exact parity")]
 
-    # Kill-resume exact parity: SIGKILL a checkpointed sweep mid-flight
-    # in a subprocess, then resume it in a fresh process and require
-    # bitwise-identical deliverables.
-    resumed_step = _smoke_kill_resume(grid_kw)
 
+def _smoke_kill_resume_step(ctx):
+    """SIGKILL a checkpointed sweep mid-flight in a subprocess, resume
+    in a fresh process, require bitwise-identical deliverables."""
+    resumed_step = _smoke_kill_resume(ctx["grid_kw"])
+    return [("smoke.kill_resume_parity", 1.0,
+             f"SIGKILL at chunk 2 -> resumed from step {resumed_step} "
+             f"bitwise-identical")]
+
+
+def _smoke_service(ctx):
+    """The sweep service end to end: served-request bitwise parity,
+    deadline partial snapshot (consistent prefix), backpressure
+    rejection without disturbing admitted work, and server SIGKILL ->
+    restart -> bitwise resume over the same spool."""
+    import numpy as np
+
+    from repro.core.service import SweepRequest, SweepService
+    from repro.runtime import BackpressureError, FaultInjector, FaultPlan
+
+    grid_kw, dense, ref = ctx["grid_kw"], ctx["dense"], ctx["res"]
+    req = SweepRequest(grid=grid_kw, track="all", chunk_size=97,
+                       hist_bins=8)
+
+    # (a) A served request reproduces the solo stream run bitwise.
+    with SweepService() as svc:
+        served = svc.submit(req).result(timeout=600)
+    assert not served.partial
+    assert served.min_val == ref.min_val and \
+        served.min_idx == ref.min_idx, "served argmin drifted from solo"
+    assert np.array_equal(served.topk_idx, ref.topk_idx) and \
+        np.array_equal(served.topk_val, ref.topk_val), \
+        "served top-k drifted from solo"
+    assert np.array_equal(served.front_indices, ref.front_indices) and \
+        np.array_equal(served.front_values, ref.front_values), \
+        "served front drifted from solo"
+
+    # (b) Deadline-exceeded request: consistent partial prefix snapshot.
+    inj = FaultInjector(FaultPlan(straggle={1: 2.0}))
+    with SweepService(fault_injector=inj) as svc:
+        part = svc.submit(SweepRequest(
+            grid=grid_kw, chunk_size=97,
+            deadline_s=0.5)).result(timeout=600)
+        n_expired = svc.health()["counters"]["deadline_expired"]
+    assert part.partial, "deadline did not yield a partial snapshot"
+    frac = part.stats["fraction_complete"]
+    assert 0.0 < frac < 1.0, f"fraction_complete {frac} out of range"
+    assert n_expired == 1, "deadline_expired counter drifted"
+    base = round(frac * dense.data["avg_power"].size)
+    for field in part.objectives:
+        prefix = np.asarray(dense.data[field]).ravel()[:base]
+        assert part.min_val[field] == float(np.nanmin(prefix)), \
+            f"partial snapshot not prefix-consistent on {field}"
+
+    # (c) Backpressure: over-capacity submission rejected with depth/cap,
+    # admitted work unaffected.
+    with SweepService(capacity=1) as svc:
+        svc.pause()
+        admitted = svc.submit(req)
+        try:
+            svc.submit(req)
+            raise AssertionError("over-capacity submit was not rejected")
+        except BackpressureError as e:
+            assert e.queue_depth == 1 and e.capacity == 1
+        svc.resume()
+        ok = admitted.result(timeout=600)
+    assert not ok.partial and ok.min_val == ref.min_val, \
+        "backpressure rejection disturbed admitted work"
+
+    # (d) SIGKILL the server mid-request; a restart over the same spool
+    # resumes the journaled request to the bitwise solo answer.
+    resumed_step = _smoke_service_kill_resume(grid_kw)
     return [
-        ("smoke.stream_dense_parity", 1.0,
-         f"argmin/top-k/front/counts exact on {dense.n_configs} configs"),
-        ("smoke.async_pipeline_parity", 1.0,
-         "prefetch 0/4 exact vs dense (double-buffered path)"),
-        ("smoke.pallas_backend_parity", 1.0,
-         "backend='pallas' (interpret) exact vs dense: stream + grid"),
-        ("smoke.scan_fused_parity", 1.0,
-         "scan_chunks=4 fused dispatch exact vs dense"),
-        ("smoke.constrained_parity", 1.0,
-         f"compiled latency<= {lat_budget:.3g} mask == dense post-filter"),
-        ("smoke.stacked_parity", 1.0,
-         f"{len(pairs)} stacked models <=1e-6 vs single grids"),
-        ("smoke.scenario_oracle_parity", 1.0,
-         f"const-trace degeneracy bitwise; tte oracle <= {tte_err:.2g}"),
-        ("smoke.scenario_stream_parity", 1.0,
-         f"session argmin/top-k(maximize) exact on "
-         f"{scen_ref.n_configs} (config x trace)"),
-        ("smoke.transient_fault_parity", 1.0,
-         f"{n_retries} injected faults retried to exact parity"),
-        ("smoke.kill_resume_parity", 1.0,
-         f"SIGKILL at chunk 2 -> resumed from step {resumed_step} "
+        ("smoke.service_request_parity", 1.0,
+         "served request bitwise == solo stream run"),
+        ("smoke.service_deadline_partial", 1.0,
+         f"deadline snapshot prefix-consistent at {frac:.0%}"),
+        ("smoke.service_backpressure", 1.0,
+         "over-capacity submit rejected; admitted work exact"),
+        ("smoke.service_kill_resume", 1.0,
+         f"server SIGKILL -> restart resumed from step {resumed_step} "
          f"bitwise-identical"),
-        ("smoke.front_size", float(sf.size), "reference-front members"),
     ]
+
+
+#: The named, individually-timed smoke steps, in dependency order
+#: (``stream_parity`` seeds the shared dense reference).
+SMOKE_STEPS = [
+    ("stream_parity", _smoke_stream_parity),
+    ("async_pipeline", _smoke_async_pipeline),
+    ("constraints", _smoke_constraints),
+    ("backends", _smoke_backends),
+    ("stacked", _smoke_stacked),
+    ("scenario", _smoke_scenario),
+    ("transient_faults", _smoke_transient_faults),
+    ("kill_resume", _smoke_kill_resume_step),
+    ("service", _smoke_service),
+]
+
+
+def smoke_rows(step_timeout_s: float | None = None):
+    """Fast CI gate: run every named smoke step under its watchdog."""
+    if step_timeout_s is None:
+        step_timeout_s = float(os.environ.get(
+            SMOKE_STEP_TIMEOUT_ENV, DEFAULT_SMOKE_STEP_TIMEOUT_S))
+    ctx: dict = {}
+    rows = []
+    for name, fn in SMOKE_STEPS:
+        t0 = time.time()
+        with _step_timeout(name, step_timeout_s):
+            rows.extend(fn(ctx))
+        rows.append((f"smoke.step.{name}.wall_s", time.time() - t0,
+                     f"<= {step_timeout_s:.0f}s watchdog"))
+    return rows
 
 
 def _smoke_kill_resume(grid_kw: dict) -> int:
@@ -273,6 +466,11 @@ assert np.array_equal(df.values, sf.values)
 print(json.dumps({"resumed_from_step": res.stats["resumed_from_step"]}))
 """
         env = dict(os.environ)
+        # Pin the child to one device so the dispatch geometry (and
+        # with it the kill_at trigger) is independent of any inherited
+        # ``XLA_FLAGS`` — appending wins, the last flag takes effect.
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=1")
         env["PYTHONPATH"] = os.pathsep.join(
             [os.path.join(os.path.dirname(__file__), "..", "src")]
             + [p for p in env.get("PYTHONPATH", "").split(os.pathsep)
@@ -286,6 +484,75 @@ print(json.dumps({"resumed_from_step": res.stats["resumed_from_step"]}))
                               capture_output=True, text=True, timeout=600)
         assert out2.returncode == 0, \
             f"resume child failed: {out2.stderr[-2000:]}"
+        return int(json.loads(out2.stdout.strip().splitlines()[-1])
+                   ["resumed_from_step"])
+
+
+def _smoke_service_kill_resume(grid_kw: dict) -> int:
+    """SIGKILL a spool-backed SweepService mid-request; a fresh service
+    over the same spool must re-admit the journaled request and resume
+    it to the bitwise solo-run answer.  Returns the resumed step."""
+    import json
+    import os
+    import signal
+    import subprocess
+    import sys
+    import tempfile
+
+    with tempfile.TemporaryDirectory(prefix="smoke_svc_") as spool:
+        common = f"""
+import numpy as np
+from repro.core import stream
+from repro.core.service import SweepRequest, SweepService
+GRID = {grid_kw!r}
+REQ = SweepRequest(grid=GRID, track="all", chunk_size=97, top_k=4)
+SPOOL = {spool!r}
+"""
+        kill = common + """
+from repro.runtime import FaultInjector, FaultPlan
+inj = FaultInjector(FaultPlan(kill_at=2))
+svc = SweepService(spool_dir=SPOOL, checkpoint_every_steps=1,
+                   fault_injector=inj)
+svc.submit(REQ).result(timeout=600)
+raise SystemExit("unreachable: SIGKILL did not fire")
+"""
+        resume = common + """
+import json
+svc = SweepService(spool_dir=SPOOL, checkpoint_every_steps=1)
+ts = svc.tickets()
+assert len(ts) == 1, "recovery did not re-admit the journaled request"
+res = ts[0].result(timeout=600)
+svc.close()
+assert not res.partial
+assert res.stats["resumed_from_step"] > 0, res.stats
+ref = stream.stream_grid(**GRID, track="all", chunk_size=97, top_k=4)
+assert res.min_val == ref.min_val and res.min_idx == ref.min_idx
+assert res.finite_counts == ref.finite_counts
+assert np.array_equal(res.topk_idx, ref.topk_idx)
+assert np.array_equal(res.topk_val, ref.topk_val)
+assert np.array_equal(res.front_indices, ref.front_indices)
+assert np.array_equal(res.front_values, ref.front_values)
+print(json.dumps({"resumed_from_step": res.stats["resumed_from_step"]}))
+"""
+        env = dict(os.environ)
+        # Pin the child to one device (see _smoke_kill_resume_step):
+        # the kill_at trigger depends on the dispatch geometry, which
+        # inherited ``XLA_FLAGS`` would otherwise change.
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=1")
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src")]
+            + [p for p in env.get("PYTHONPATH", "").split(os.pathsep)
+               if p])
+        out1 = subprocess.run([sys.executable, "-c", kill], env=env,
+                              capture_output=True, text=True, timeout=600)
+        assert out1.returncode == -signal.SIGKILL, (
+            f"service kill child exited {out1.returncode}, expected "
+            f"SIGKILL: {out1.stderr[-1000:]}")
+        out2 = subprocess.run([sys.executable, "-c", resume], env=env,
+                              capture_output=True, text=True, timeout=600)
+        assert out2.returncode == 0, \
+            f"service resume child failed: {out2.stderr[-2000:]}"
         return int(json.loads(out2.stdout.strip().splitlines()[-1])
                    ["resumed_from_step"])
 

@@ -51,6 +51,17 @@ class CheckpointManager:
 
     def __post_init__(self):
         os.makedirs(self.root, exist_ok=True)
+        # Sweep *.tmp debris from crashed saves (the rename is atomic,
+        # so debris is the only artifact a SIGKILL can leave).  Matters
+        # for long-lived spools — e.g. the sweep service's per-job
+        # checkpoint dirs — where crash/restart cycles would otherwise
+        # accumulate orphaned step dirs forever.  Checkpoint roots are
+        # single-writer (job-signature keyed), so no live save can own
+        # a tmp dir while this manager is being constructed.
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.root, name),
+                              ignore_errors=True)
 
     # ------------------------------------------------------------------
     def _step_dir(self, step: int) -> str:

@@ -463,21 +463,46 @@ def build_step(spec: ChunkSpec, backend: str | None = None,
 
 _STEP_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
 _STEP_CACHE_MAX = 32
+_STEP_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def cached_step(spec: ChunkSpec, backend: str | None = None,
                 scan_chunks: int = 1, n_dev: int = 1, devices=None):
     """LRU-cached :func:`build_step` — repeated sweeps over same-shaped
-    grids are compile-free."""
+    grids are compile-free.
+
+    The cache keys ``spec`` by the :class:`ChunkSpec` hash, which hashes
+    the model stack by *identity*: two processes (or two calls that
+    rebuilt their axes from scratch) get different keys even for
+    byte-identical jobs.  Long-lived callers that want cross-request
+    reuse therefore cache the resolved plan by content signature first
+    (:func:`job_signature`, see ``repro.core.service``) and re-submit
+    the same spec object.  :func:`step_cache_stats` exposes hit/miss
+    counters for such callers' health surfaces.
+    """
     key = (spec, backend or DEFAULT_BACKEND, scan_chunks, n_dev,
            tuple(str(dv) for dv in devices or ()))
     fn = _STEP_CACHE.get(key)
     if fn is None:
+        _STEP_CACHE_STATS["misses"] += 1
         fn = build_step(spec, backend, scan_chunks, n_dev, devices)
         _STEP_CACHE[key] = fn
         while len(_STEP_CACHE) > _STEP_CACHE_MAX:
             _STEP_CACHE.popitem(last=False)
+            _STEP_CACHE_STATS["evictions"] += 1
+    else:
+        _STEP_CACHE_STATS["hits"] += 1
+        _STEP_CACHE.move_to_end(key)
     return fn
+
+
+def step_cache_stats() -> dict:
+    """Snapshot of the compiled-step LRU: ``hits`` / ``misses`` /
+    ``evictions`` since process start plus the current ``size`` and
+    ``capacity`` — the compile-reuse signal surfaced by the sweep
+    service's health endpoint."""
+    return dict(_STEP_CACHE_STATS, size=len(_STEP_CACHE),
+                capacity=_STEP_CACHE_MAX)
 
 
 def cached_dense_eval(backend: str | None, S, shape: tuple[int, ...],

@@ -63,6 +63,16 @@ device step so the host never sees a full channel array:
   single-device execution.  ``fault_injector=``
   (:class:`repro.runtime.fault_injection.FaultInjector`) exercises
   every one of those recovery paths deterministically in CI.
+* **Cooperative cancellation & partial snapshots** — ``should_stop=``
+  is polled between chunk dispatches (so deadlines and client cancels
+  take effect within one chunk); when it fires, the executor folds
+  everything already dispatched and returns the consistent prefix
+  snapshot as a ``partial=True`` result (``fraction_complete`` in
+  ``stats``), still checkpointed for later resume.  This — plus
+  :func:`plan_stream`, which splits the reusable job definition
+  (:class:`StreamPlan`) out of the executor so compiled chunk steps
+  stay cached across calls — is the contract the persistent sweep
+  service (:mod:`repro.core.service`) is built on.
 * **Batched workload axis** — ``models=`` stacks architecture variants
   (see :func:`repro.core.arrays.stacked_model_arrays`) into a leading
   grid axis evaluated inside the same kernel, for SplitNets-style
@@ -183,6 +193,13 @@ class StreamResult:
     #: Canonical ``(field, op, bound)`` predicates compiled into the chunk
     #: step (empty when the sweep was unconstrained).
     constraints: tuple[tuple[str, str, float], ...] = ()
+    #: ``True`` when the stream halted early (a ``should_stop=`` hook —
+    #: deadline or client cancel — fired before the grid was exhausted):
+    #: every reduction is then exact over the contiguous flat-index
+    #: prefix ``[0, stats["fraction_complete"] * n_configs)`` — the same
+    #: consistent snapshot a checkpoint would persist — never a torn or
+    #: interleaved subset.
+    partial: bool = False
 
     @property
     def shape(self) -> tuple[int, ...]:
@@ -442,6 +459,172 @@ def _resume_into(mgr: CheckpointManager, signature: str, state: dict,
 
 
 # ---------------------------------------------------------------------------
+# Plan: the resolved job definition (reusable across runs)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class StreamPlan:
+    """Resolved execution plan of one streamed sweep.
+
+    Everything that *defines* the job — model stack, axes, tracked
+    fields, constraints, chunk/scan geometry, device pool, the
+    :class:`~repro.core.backend.ChunkSpec` and its content
+    ``signature`` — split out of :func:`stream_grid` so a long-lived
+    process (:mod:`repro.core.service`) can build it once per distinct
+    job and reuse it across requests.  ``ChunkSpec`` hashes its model
+    stack by identity, so re-running with the *same plan object* is
+    what makes :func:`repro.core.backend.cached_step` return the
+    already-compiled chunk step instead of re-tracing.  Build with
+    :func:`plan_stream`, execute with ``stream_grid(plan=...)``
+    (runtime knobs — prefetch, checkpointing, retry policy, hooks —
+    stay per-call and do not affect the plan or its signature).
+    """
+
+    S: object                       # struct-of-arrays model stack
+    axis_vals: tuple                # per-axis value arrays (grid order)
+    axes: "OrderedDict[str, tuple]"
+    shape: tuple
+    n_total: int
+    kfields: tuple
+    objectives: tuple
+    maximize: tuple
+    fields: tuple                   # objectives + tracked + constrained
+    cons: tuple                     # canonical (field, op, bound)
+    sign: tuple                     # +1 minimize / -1 maximize per obj
+    d: int
+    k: int
+    chunk: int
+    scan: int
+    backend: str
+    dev_list: tuple
+    explicit_devices: bool
+    hist_bins: int
+    hist_ranges: Optional[Mapping]
+    spec: B.ChunkSpec
+    #: Content hash of the job (:func:`repro.core.backend.job_signature`)
+    #: — the checkpoint/resume key and the service plan-cache key.
+    signature: str
+
+
+def plan_stream(cuts: Optional[Iterable[int]] = None,
+                agg_nodes: Sequence[str | TechNode] = ("7nm",),
+                sensor_nodes: Sequence[str | TechNode] = ("7nm",),
+                weight_mems: Sequence[str] = ("sram",),
+                detnet_fps: Sequence[float] = (DETNET_FPS,),
+                keynet_fps: Sequence[float] = (KEYNET_FPS,),
+                num_cameras: Sequence[float] = (NUM_CAMERAS,),
+                mipi_energy_scale: Sequence[float] = (1.0,),
+                camera_fps: Sequence[float] = (CAMERA_FPS,),
+                detnet: NNWorkload | None = None,
+                keynet: NNWorkload | None = None,
+                model: A.ModelArrays | None = None,
+                models=None,
+                scenarios=None,
+                chunk_size: int = DEFAULT_CHUNK,
+                top_k: int = 4,
+                objectives: Sequence[str] = P.DEFAULT_OBJECTIVES,
+                maximize: Iterable[str] = (),
+                track: Optional[Sequence[str]] = None,
+                constraints=None,
+                hist_bins: int = 0,
+                hist_ranges: Optional[Mapping] = None,
+                devices: Optional[Sequence] = None,
+                backend: Optional[str] = None,
+                scan_chunks: Optional[int] = None) -> StreamPlan:
+    """Resolve a :func:`stream_grid` job definition into a reusable
+    :class:`StreamPlan` (axes → :class:`~repro.core.backend.ChunkSpec`
+    → content signature) without running anything.
+
+    Identical argument semantics to :func:`stream_grid` (which calls
+    this when no ``plan=`` is passed), so ``plan_stream(**kw)`` /
+    ``stream_grid(plan=plan)`` splits the cheap spec resolution from
+    the execution — the split the sweep service uses to key its plan
+    LRU by ``plan.signature`` and keep compiled chunk steps hot across
+    requests.
+    """
+    S, axis_vals, axes = SW.build_axes(
+        cuts, agg_nodes, sensor_nodes, weight_mems, detnet_fps, keynet_fps,
+        num_cameras, mipi_energy_scale, camera_fps, detnet, keynet, model,
+        models, scenarios)
+    full_shape = tuple(a.size for a in axis_vals)
+    n_total = int(np.prod(full_shape))
+    kfields = SW.kernel_fields(S)
+
+    objectives = tuple(objectives)
+    maximize = tuple(maximize)
+    if not objectives:
+        raise ValueError("need at least one objective channel")
+    if track == "all":
+        extra: tuple = kfields
+    else:
+        extra = tuple(track) if track is not None else ()
+    cons = SW.parse_constraints(constraints)
+    extra = extra + tuple(f for f, _, _ in cons)
+    fields = objectives + tuple(dict.fromkeys(
+        f for f in extra if f not in objectives))
+    unknown = [o for o in fields if o not in kfields]
+    if unknown:
+        hint = (" — session channels require scenarios="
+                if any(o in SW.SCENARIO_FIELDS for o in unknown) else "")
+        raise ValueError(f"unknown objective channels {unknown}; this "
+                         f"sweep evaluates {kfields}{hint}")
+    stray = [o for o in maximize if o not in objectives]
+    if stray:
+        raise ValueError(f"maximize entries {stray} not in objectives")
+    sign = np.where([o in maximize for o in objectives], -1.0, 1.0)
+    d = len(objectives)
+    cons_static = tuple((fields.index(f), op) for f, op, _ in cons)
+
+    be = B.get_backend(backend)          # fail fast on unknown backends
+    dev_list = list(devices) if devices is not None else jax.local_devices()
+    if devices is None and len(dev_list) > 1 and not be.supports_pmap:
+        # Auto-derived device lists must not crash a non-pmap backend —
+        # fall back to one device; an *explicit* multi-device devices=
+        # still raises clearly in backend.build_step.
+        dev_list = dev_list[:1]
+    n_dev = max(1, len(dev_list))
+    k = max(1, min(int(top_k), n_total))
+    # Clamp the chunk to the quantized per-device need: a 10⁵-config grid
+    # must not pay for a 2.6×-padded 2¹⁸ chunk, and quantizing keeps the
+    # compiled-step cache hot across nearby grid sizes.
+    chunk = max(1, int(chunk_size), k)
+    per_dev = -(-n_total // n_dev)
+    chunk = min(chunk, -(-per_dev // _CHUNK_QUANTUM) * _CHUNK_QUANTUM)
+    cap = min(_SURVIVOR_CAP, chunk)
+    # Scan fusion: fold K consecutive chunks per device dispatch
+    # (lax.scan threads the carry), so per-step dispatch overhead is
+    # paid once per K chunks.  Auto mode scales K with the raw step
+    # count — small grids keep K=1 (nothing to amortize, and the filter
+    # refresh cadence stays fine-grained).
+    raw_steps = -(-per_dev // chunk)
+    if scan_chunks is None:
+        scan = max(1, min(_SCAN_MAX, raw_steps // _SCAN_PER))
+    else:
+        scan = max(1, int(scan_chunks))
+    scan = min(scan, raw_steps)
+    per_step = chunk * scan * n_dev
+
+    spec = B.ChunkSpec(
+        S=S, shape=full_shape, n_total=n_total, chunk=chunk,
+        fields=fields, d=d, k=k, sign=tuple(sign),
+        cons_static=cons_static, hist_bins=hist_bins,
+        survivor_cap=cap,
+        small_index=n_total + per_step < 2**31,
+        filter_rows=_FILTER_ROWS, filter_bins=_FILTER_BINS)
+    signature = B.job_signature(spec, be.name, scan, cons, axis_vals,
+                                hist_ranges)
+    return StreamPlan(
+        S=S, axis_vals=tuple(axis_vals), axes=axes, shape=full_shape,
+        n_total=n_total, kfields=kfields, objectives=objectives,
+        maximize=maximize, fields=fields, cons=cons, sign=tuple(sign),
+        d=d, k=k, chunk=chunk, scan=scan, backend=be.name,
+        dev_list=tuple(dev_list), explicit_devices=devices is not None,
+        hist_bins=hist_bins, hist_ranges=hist_ranges, spec=spec,
+        signature=signature)
+
+
+# ---------------------------------------------------------------------------
 # The executor
 # ---------------------------------------------------------------------------
 
@@ -477,7 +660,10 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                 checkpoint_every_steps: Optional[int] = None,
                 checkpoint_keep: int = 3,
                 retry_policy: Optional[RetryPolicy] = None,
-                fault_injector=None) -> StreamResult:
+                fault_injector=None,
+                plan: Optional[StreamPlan] = None,
+                should_stop=None,
+                on_progress=None) -> StreamResult:
     """Stream Eqs. 1-11 over an arbitrarily large cartesian grid.
 
     Same axes (and ``models=`` workload batch) as
@@ -543,70 +729,56 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
     ``restarts``, ``resumed_from_step``, ``checkpoints_written``,
     ``checkpoint_write_s``, ``chunks_reissued``, ``elastic_replans``,
     ``stragglers`` and ``step_timeouts``.
+
+    ``plan`` short-circuits the spec resolution with a prebuilt
+    :class:`StreamPlan` (see :func:`plan_stream`) — when given, the
+    axis/objective/backend arguments above are ignored in its favor;
+    a long-lived process reusing one plan object across calls is what
+    keeps the compiled chunk step cached.  ``should_stop`` is a
+    zero-argument callable polled before every chunk dispatch (on the
+    producer thread in the pipelined path): when it returns truthy the
+    executor stops issuing work within one chunk, folds everything
+    already dispatched and returns the consistent prefix snapshot as a
+    ``partial=True`` result (``stats["fraction_complete"]`` < 1) — and
+    still writes a terminal checkpoint when ``checkpoint_dir`` is set,
+    so a later call resumes where the stop landed.  ``on_progress`` is
+    called after each dispatch with the fraction of the grid issued so
+    far (also from the producer thread; keep it cheap and
+    thread-safe).
     """
-    S, axis_vals, axes = SW.build_axes(
-        cuts, agg_nodes, sensor_nodes, weight_mems, detnet_fps, keynet_fps,
-        num_cameras, mipi_energy_scale, camera_fps, detnet, keynet, model,
-        models, scenarios)
-    full_shape = tuple(a.size for a in axis_vals)
-    n_total = int(np.prod(full_shape))
-    kfields = SW.kernel_fields(S)
-
-    objectives = tuple(objectives)
-    maximize = tuple(maximize)
-    if not objectives:
-        raise ValueError("need at least one objective channel")
-    if track == "all":
-        extra: tuple = kfields
-    else:
-        extra = tuple(track) if track is not None else ()
-    cons = SW.parse_constraints(constraints)
-    extra = extra + tuple(f for f, _, _ in cons)
-    fields = objectives + tuple(dict.fromkeys(
-        f for f in extra if f not in objectives))
-    unknown = [o for o in fields if o not in kfields]
-    if unknown:
-        hint = (" — session channels require scenarios="
-                if any(o in SW.SCENARIO_FIELDS for o in unknown) else "")
-        raise ValueError(f"unknown objective channels {unknown}; this "
-                         f"sweep evaluates {kfields}{hint}")
-    stray = [o for o in maximize if o not in objectives]
-    if stray:
-        raise ValueError(f"maximize entries {stray} not in objectives")
-    sign = np.where([o in maximize for o in objectives], -1.0, 1.0)
-    d = len(objectives)
-    cons_static = tuple((fields.index(f), op) for f, op, _ in cons)
-    prefetch = max(0, int(prefetch))
-
-    be = B.get_backend(backend)          # fail fast on unknown backends
-    dev_list = list(devices) if devices is not None else jax.local_devices()
-    if devices is None and len(dev_list) > 1 and not be.supports_pmap:
-        # Auto-derived device lists must not crash a non-pmap backend —
-        # fall back to one device; an *explicit* multi-device devices=
-        # still raises clearly in backend.build_step.
-        dev_list = dev_list[:1]
+    if plan is None:
+        plan = plan_stream(
+            cuts, agg_nodes, sensor_nodes, weight_mems, detnet_fps,
+            keynet_fps, num_cameras, mipi_energy_scale, camera_fps,
+            detnet, keynet, model, models, scenarios,
+            chunk_size=chunk_size, top_k=top_k, objectives=objectives,
+            maximize=maximize, track=track, constraints=constraints,
+            hist_bins=hist_bins, hist_ranges=hist_ranges, devices=devices,
+            backend=backend, scan_chunks=scan_chunks)
+    S = plan.S
+    axis_vals = list(plan.axis_vals)
+    axes = plan.axes
+    full_shape = plan.shape
+    n_total = plan.n_total
+    kfields = plan.kfields
+    objectives = plan.objectives
+    maximize = plan.maximize
+    fields = plan.fields
+    cons = plan.cons
+    sign = np.asarray(plan.sign)
+    d = plan.d
+    k = plan.k
+    chunk = plan.chunk
+    scan = plan.scan
+    spec = plan.spec
+    hist_bins = plan.hist_bins
+    hist_ranges = plan.hist_ranges
+    cap = spec.survivor_cap
+    dev_list = list(plan.dev_list)
     n_dev = max(1, len(dev_list))
-    k = max(1, min(int(top_k), n_total))
-    # Clamp the chunk to the quantized per-device need: a 10⁵-config grid
-    # must not pay for a 2.6×-padded 2¹⁸ chunk, and quantizing keeps the
-    # compiled-step cache hot across nearby grid sizes.
-    chunk = max(1, int(chunk_size), k)
-    per_dev = -(-n_total // n_dev)
-    chunk = min(chunk, -(-per_dev // _CHUNK_QUANTUM) * _CHUNK_QUANTUM)
-    cap = min(_SURVIVOR_CAP, chunk)
-    # Scan fusion: fold K consecutive chunks per device dispatch
-    # (lax.scan threads the carry), so per-step dispatch overhead is
-    # paid once per K chunks.  Auto mode scales K with the raw step
-    # count — small grids keep K=1 (nothing to amortize, and the filter
-    # refresh cadence stays fine-grained).
-    raw_steps = -(-per_dev // chunk)
-    if scan_chunks is None:
-        scan = max(1, min(_SCAN_MAX, raw_steps // _SCAN_PER))
-    else:
-        scan = max(1, int(scan_chunks))
-    scan = min(scan, raw_steps)
     per_step = chunk * scan * n_dev
     n_steps = math.ceil(n_total / per_step)
+    prefetch = max(0, int(prefetch))
 
     t0 = time.perf_counter()
     policy = retry_policy if retry_policy is not None else RetryPolicy()
@@ -620,14 +792,6 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
         seed_signed, hist_edges, axis_valid = _probe(
             S, axis_vals, full_shape, n_total, objectives, sign, cons,
             hist_bins, hist_ranges)
-
-        spec = B.ChunkSpec(
-            S=S, shape=full_shape, n_total=n_total, chunk=chunk,
-            fields=fields, d=d, k=k, sign=tuple(sign),
-            cons_static=cons_static, hist_bins=hist_bins,
-            survivor_cap=cap,
-            small_index=n_total + per_step < 2**31,
-            filter_rows=_FILTER_ROWS, filter_bins=_FILTER_BINS)
 
         # The consistent snapshot all recovery pivots on: the merged
         # (device-count-independent) host carry, the exact running
@@ -646,8 +810,7 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
         if checkpoint_dir is not None:
             mgr = CheckpointManager(checkpoint_dir,
                                     keep=max(1, int(checkpoint_keep)))
-            signature = B.job_signature(spec, be.name, scan, cons,
-                                        axis_vals, hist_ranges)
+            signature = plan.signature
             _resume_into(mgr, signature, state, counters, chunk)
 
         def write_checkpoint():
@@ -681,6 +844,11 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
         detector = StragglerDetector(policy.straggler_factor,
                                      policy.straggler_window)
         dispatched_flat = state["base"]     # dispatch high-water mark
+        # Cooperative halt: set when should_stop fires between
+        # dispatches; the incarnation then finalizes over exactly the
+        # chunks already issued (all of which the consumer folds before
+        # the pipeline winds down) instead of the full grid.
+        ctl = {"halted": False}
 
         def drive():
             # One incarnation of the pipeline: rebuild the compiled
@@ -695,7 +863,7 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
             if base >= n_total:     # resumed-from-complete: nothing left
                 return
             n_dev = max(1, len(dev_list))
-            run = B.cached_step(spec, be.name, scan, n_dev,
+            run = B.cached_step(spec, plan.backend, scan, n_dev,
                                 dev_list if n_dev > 1 else None)
             # One batched device_put per pytree — per-leaf jnp.asarray
             # calls cost ~10 ms of pure dispatch per stream on small
@@ -705,7 +873,7 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
             if n_dev > 1:
                 put = (lambda t: jax.device_put_replicated(t, dev_list))
             else:
-                dev_target = dev_list[0] if devices is not None else None
+                dev_target = dev_list[0] if plan.explicit_devices else None
                 put = (lambda t: jax.device_put(t, dev_target))
             axvals_j = put(tuple(axis_vals))
             per_step = chunk * scan * n_dev
@@ -888,6 +1056,8 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                 if (policy.step_timeout_s is not None
                         and dur > policy.step_timeout_s):
                     counters["step_timeouts"] += 1.0
+                if on_progress is not None:
+                    on_progress(min(1.0, dispatched_flat / n_total))
                 return c, surv
 
             def ckpt_due(si):
@@ -923,6 +1093,9 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                 # Fully synchronous reference path (and the single-chunk
                 # fast path, where there is nothing to overlap).
                 for si in range(n_steps):
+                    if should_stop is not None and should_stop():
+                        ctl["halted"] = True
+                        break
                     carry, surv = dispatch(si, carry)
                     process((base + si * per_step, surv))
                     if si == 0 and n_steps > 1:
@@ -969,6 +1142,10 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                         with enable_x64():
                             for si in range(n_steps):
                                 if stop.is_set():
+                                    break
+                                if (should_stop is not None
+                                        and should_stop()):
+                                    ctl["halted"] = True
                                     break
                                 carry, surv = dispatch(si, carry)
                                 if not put_or_stop(
@@ -1018,27 +1195,40 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                             filter_ready.set()
                             first = False
                 finally:
-                    # Consumer is done (or raised): release the
-                    # producer from any blocked put/wait and drain
-                    # whatever it had in flight, then collect it — at
-                    # most one chunk step runs to completion before it
-                    # sees `stop`.
+                    # Consumer is done (or raised — including a
+                    # KeyboardInterrupt): release the producer from any
+                    # blocked put/wait and drain whatever it had in
+                    # flight, then collect it — at most one chunk step
+                    # runs to completion before it sees `stop`.  The
+                    # nested finally keeps the join unconditional: even
+                    # if the drain itself is interrupted (a second
+                    # Ctrl-C), the producer thread — which holds the
+                    # donated device carry — must never outlive this
+                    # call.
                     stop.set()
                     filter_ready.set()
                     ckpt_done.set()
-                    while True:
-                        try:
-                            q.get_nowait()
-                        except _Empty:
-                            break
-                    th_prod.join()
+                    try:
+                        while True:
+                            try:
+                                q.get_nowait()
+                            except _Empty:
+                                break
+                    finally:
+                        th_prod.join()
                 if "err" in box:
                     raise box["err"]
             merge(final=True)
             state["carry"] = snapshot_carry(carry)
             state["front_vals"] = front_vals
             state["front_idx"] = front_idx
-            state["base"] = n_total
+            # A cooperative halt finalizes at the dispatch high-water
+            # mark: every chunk below it was issued *and* folded (the
+            # producer enqueues each survivor set before checking the
+            # hook again), so the snapshot is the exact contiguous
+            # prefix [0, base).
+            state["base"] = (min(dispatched_flat, n_total)
+                             if ctl["halted"] else n_total)
 
         def reissue_count():
             # Chunks dispatched past the snapshot when an incarnation
@@ -1082,8 +1272,10 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                 time.sleep(min(
                     policy.backoff_s * (2.0 ** counters["restarts"]),
                     policy.backoff_max_s))
-        if mgr is not None and mgr.latest_step() != n_total:
-            write_checkpoint()      # terminal snapshot: resume == done
+        # Terminal snapshot: resume == done (or, after a cooperative
+        # halt, resume == continue from the stop point).
+        if mgr is not None and mgr.latest_step() != state["base"]:
+            write_checkpoint()
     total_s = time.perf_counter() - t0
 
     # Deliverables come straight off the committed snapshot — the same
@@ -1092,9 +1284,16 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
     carry = state["carry"]
     front_vals = state["front_vals"]
     front_idx = state["front_idx"]
+    partial = int(state["base"]) < n_total
     stats = {
         "n_configs": float(n_total),
         "n_chunks": float(n_steps),
+        # Fraction of the flat-index space folded into this result —
+        # 1.0 for a complete sweep; after a cooperative halt
+        # (should_stop / deadline) the reductions cover exactly the
+        # contiguous prefix [0, fraction_complete * n_configs).
+        "fraction_complete": (int(state["base"]) / n_total
+                              if n_total else 1.0),
         "total_s": total_s,
         "first_chunk_s": t_first if t_first is not None else total_s,
         "configs_per_s": n_total / total_s if total_s else float("inf"),
@@ -1156,7 +1355,7 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
         topk_val=topk_val,
         topk_idx=topk_idx,
         front_indices=front_idx, front_values=front_vals,
-        hist=hist_out, stats=stats, constraints=cons)
+        hist=hist_out, stats=stats, constraints=cons, partial=partial)
 
 
 #: Moved to the backend layer as the carry serialization contract.

@@ -1,11 +1,20 @@
-"""Batched serving driver: prefill + decode with a KV cache.
+"""LLM **token**-serving driver: prefill + decode with a KV cache.
+
+.. note::
+   This is the transformer-workload scaffolding (unrelated to the
+   paper's design-space sweeps) — it serves *tokens* from the
+   ``repro.models`` stack used by the dry-run/system tests.  The
+   **sweep server** — the persistent co-design service with admission
+   control, deadlines and crash recovery — is ``python -m
+   repro.service`` (:mod:`repro.core.service`).  This module was
+   renamed from ``launch/serve.py`` so the two can never be confused.
 
 CPU-sized example:
 
-    PYTHONPATH=src python -m repro.launch.serve \
+    PYTHONPATH=src python -m repro.launch.token_serve \
         --arch qwen2-0.5b --reduced --batch 4 --prompt-len 32 --gen 16
 
-Implements the production serve loop: one jitted prefill (builds the cache
+Implements the token-serve loop: one jitted prefill (builds the cache
 for the prompt), then jitted single-token decode steps with greedy/
 temperature sampling against the shared cache.  The decode path is exactly
 what the ``decode_32k`` / ``long_500k`` dry-run cells lower.

@@ -1,6 +1,8 @@
 """Distributed runtime: fault tolerance, straggler mitigation, elasticity,
-deterministic fault injection."""
+deterministic fault injection, bounded admission control."""
 
+from .admission import (AdmissionQueue, BackpressureError,  # noqa: F401
+                        Deadline)
 from .elastic import (MeshPlan, drop_worker, replan_mesh,  # noqa: F401
                       rescale_batch)
 from .fault_injection import (DeviceLostError, FaultInjector,  # noqa: F401

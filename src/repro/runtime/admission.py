@@ -1,0 +1,174 @@
+"""Bounded admission control for long-lived request-driven services.
+
+The sweep service (:mod:`repro.core.service`) accepts work through a
+bounded queue: once the backlog reaches a configurable cap, further
+submissions are **rejected at the door** with a
+:class:`BackpressureError` that names the depth and the cap — never
+buffered without bound (memory growth until OOM) and never blocked
+(a deadlock when the submitter is also the consumer).  Rejection is
+the only load-shedding mechanism: work that *was* admitted is never
+dropped.
+
+The queue itself is deliberately small and lock-based (a ``deque``
+under one mutex with a condition variable): admission happens on
+client threads, consumption on the service worker, and the fusion
+scan (:meth:`AdmissionQueue.take_batch`) must claim a head item plus
+every compatible follower atomically, which the stdlib ``queue.Queue``
+cannot express.
+
+:class:`Deadline` is the tiny monotonic-clock companion: requests
+carry one, and the executor's ``should_stop`` hook polls it between
+chunk dispatches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Callable, List, Optional
+
+
+class BackpressureError(RuntimeError):
+    """A submission was rejected because the admission queue is full.
+
+    Carries ``queue_depth`` (backlog at rejection time) and
+    ``capacity`` (the configured cap) so clients can implement their
+    own retry/backoff without parsing the message.  Raised *instead
+    of* blocking or buffering — admitted work is unaffected.
+    """
+
+    def __init__(self, queue_depth: int, capacity: int,
+                 reason: str = "admission queue full"):
+        self.queue_depth = int(queue_depth)
+        self.capacity = int(capacity)
+        self.reason = str(reason)
+        super().__init__(
+            f"{self.reason}: queue depth {self.queue_depth} >= capacity "
+            f"{self.capacity} — retry after in-flight requests drain, "
+            f"or raise the service's capacity")
+
+
+@dataclasses.dataclass(frozen=True)
+class Deadline:
+    """A wall-deadline on the monotonic clock (``None`` = none).
+
+    Built with :meth:`after`; ``expired()`` is what a service wires
+    into ``stream_grid(should_stop=...)`` so an overdue request stops
+    within one chunk dispatch and returns its consistent partial
+    snapshot.
+    """
+
+    at: Optional[float] = None          # time.monotonic() timestamp
+
+    @classmethod
+    def after(cls, seconds: Optional[float]) -> "Deadline":
+        """Deadline ``seconds`` from now (``None`` → no deadline)."""
+        if seconds is None:
+            return cls(None)
+        return cls(time.monotonic() + float(seconds))
+
+    def expired(self) -> bool:
+        return self.at is not None and time.monotonic() >= self.at
+
+    def remaining_s(self) -> Optional[float]:
+        """Seconds until expiry (negative once overdue; ``None`` when
+        no deadline is set)."""
+        if self.at is None:
+            return None
+        return self.at - time.monotonic()
+
+    @staticmethod
+    def earliest(*deadlines: "Deadline") -> "Deadline":
+        """The tightest of several deadlines (used when fused requests
+        with different deadlines share one execution)."""
+        ats = [d.at for d in deadlines if d.at is not None]
+        return Deadline(min(ats)) if ats else Deadline(None)
+
+
+class AdmissionQueue:
+    """Bounded FIFO with reject-at-capacity admission and atomic
+    batch claiming.
+
+    * :meth:`offer` — non-blocking admission; raises
+      :class:`BackpressureError` once ``depth >= capacity``.
+    * :meth:`take_batch` — blocking (with timeout) claim of the head
+      item plus every queued item a ``compatible`` predicate accepts
+      against that head, removed atomically under one lock (the fusion
+      scan of the sweep service).
+    * :meth:`readmit` — put recovered work back at the *front*,
+      bypassing the capacity check: crash recovery must never lose
+      admitted requests to a full queue, and recovered work keeps its
+      original position ahead of new arrivals.
+    * :meth:`remove` — withdraw one queued item (client cancel before
+      the worker claimed it).
+    """
+
+    def __init__(self, capacity: int):
+        if int(capacity) < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._items: deque = deque()
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+
+    @property
+    def depth(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+    def offer(self, item) -> None:
+        with self._not_empty:
+            if len(self._items) >= self.capacity:
+                raise BackpressureError(len(self._items), self.capacity)
+            self._items.append(item)
+            self._not_empty.notify()
+
+    def readmit(self, item) -> None:
+        with self._not_empty:
+            self._items.appendleft(item)
+            self._not_empty.notify()
+
+    def remove(self, item) -> bool:
+        with self._lock:
+            try:
+                self._items.remove(item)
+                return True
+            except ValueError:
+                return False
+
+    def snapshot(self) -> List:
+        """Point-in-time copy of the backlog (health reporting)."""
+        with self._lock:
+            return list(self._items)
+
+    def take_batch(self, timeout: Optional[float] = None,
+                   compatible: Optional[Callable] = None,
+                   max_batch: Optional[int] = None) -> List:
+        """Claim the head item and its compatible followers.
+
+        Blocks up to ``timeout`` seconds for a head item (``[]`` on
+        timeout).  With a ``compatible(head, other) -> bool``
+        predicate, every queued follower it accepts is claimed in the
+        same critical section — FIFO order preserved, at most
+        ``max_batch`` items total — so a concurrent ``offer`` can
+        never interleave into a claimed batch.
+        """
+        with self._not_empty:
+            if not self._items and not self._not_empty.wait(timeout):
+                return []
+            if not self._items:      # woken by a racing remove()
+                return []
+            batch = [self._items.popleft()]
+            if compatible is not None:
+                cap = max_batch if max_batch is not None else float("inf")
+                rest = []
+                while self._items:
+                    item = self._items.popleft()
+                    if len(batch) < cap and compatible(batch[0], item):
+                        batch.append(item)
+                    else:
+                        rest.append(item)
+                self._items.extend(rest)
+            return batch

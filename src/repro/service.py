@@ -1,0 +1,15 @@
+"""Unambiguous entry point for the sweep server: ``python -m
+repro.service``.
+
+The implementation lives in :mod:`repro.core.service` (this shim
+exists so the service is addressable without knowing the package
+layout, and so the name ``repro.service`` can never again be confused
+with the unrelated LLM token-serving scaffolding that now lives in
+:mod:`repro.launch.token_serve`)."""
+
+from .core.service import (CancelledError, SweepRequest,  # noqa: F401
+                           SweepService, Ticket, main)
+
+if __name__ == "__main__":      # pragma: no cover
+    import sys
+    sys.exit(main())

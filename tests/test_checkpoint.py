@@ -142,6 +142,20 @@ class TestAtomicity:
         mgr.save(2, _state(2))
         assert mgr.all_steps() == [1, 2]
 
+    def test_fresh_manager_sweeps_crash_debris(self, tmp_path):
+        """A restart over a spool left by a SIGKILL'd process clears
+        ``*.tmp`` debris (the only artifact an atomic-rename crash can
+        leave) — long-lived service spools must not accumulate orphan
+        dirs across crash/restart cycles."""
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _state(1))
+        debris = tmp_path / "step_000000007.tmp"
+        debris.mkdir()
+        (debris / "arrays.npz").write_bytes(b"torn write")
+        mgr2 = CheckpointManager(str(tmp_path))
+        assert not debris.exists()
+        assert mgr2.all_steps() == [1]
+
     def test_manifestless_dir_is_not_a_step(self, tmp_path):
         """A foreign/truncated step dir without manifest.json is not a
         checkpoint (the executor's resume scan must skip it)."""

@@ -1,0 +1,142 @@
+"""Elastic replanning: mesh shrink policy and degraded-mode parity.
+
+`repro.runtime.elastic` is the graceful-degradation half of the fault
+story: when a worker dies the pool shrinks (never silently to zero),
+and the streaming executor replans the remaining chunk ranges onto the
+survivors.  The edge cases pinned here: dropping the last worker is a
+loud error, an unidentifiable loss drops the tail worker, and a replan
+all the way down to ONE device reproduces the multi-device carry
+bitwise (degradation must never change answers).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.runtime import MeshPlan, drop_worker, replan_mesh, rescale_batch
+
+
+class TestDropWorker:
+    def test_drop_middle_preserves_order(self):
+        assert drop_worker(("d0", "d1", "d2", "d3"), 1) == \
+            ("d0", "d2", "d3")
+
+    def test_drop_first_and_last(self):
+        pool = ("d0", "d1", "d2")
+        assert drop_worker(pool, 0) == ("d1", "d2")
+        assert drop_worker(pool, 2) == ("d0", "d1")
+
+    def test_out_of_range_index_drops_last(self):
+        # An unidentifiable lost worker must still shrink the pool.
+        pool = ("d0", "d1", "d2")
+        assert drop_worker(pool, 99) == ("d0", "d1")
+        assert drop_worker(pool, -3) == ("d0", "d1")
+
+    def test_drop_last_worker_raises_clear_error(self):
+        with pytest.raises(ValueError,
+                           match="cannot drop the last worker"):
+            drop_worker(("d0",), 0)
+
+    def test_empty_pool_raises(self):
+        with pytest.raises(ValueError,
+                           match="cannot drop the last worker"):
+            drop_worker((), 0)
+
+    def test_repeated_drops_stop_at_one(self):
+        pool = tuple(f"d{i}" for i in range(4))
+        while len(pool) > 1:
+            pool = drop_worker(pool, 0)
+        assert pool == ("d3",)
+        with pytest.raises(ValueError):
+            drop_worker(pool, 0)
+
+
+class TestReplanMesh:
+    def test_model_axis_kept_when_chips_allow(self):
+        plan = replan_mesh(48, model=16)
+        assert plan == MeshPlan(("data", "model"), (3, 16), 0)
+        assert plan.chips == 48
+
+    def test_remainder_chips_become_spares(self):
+        plan = replan_mesh(50, model=16)
+        assert plan.shape == (3, 16)
+        assert plan.dropped_chips == 2
+
+    def test_degenerate_shrinks_model_to_power_of_two(self):
+        plan = replan_mesh(6, model=16)
+        assert plan.axes == ("data", "model")
+        assert plan.shape == (1, 4)
+        assert plan.dropped_chips == 2
+
+    def test_pod_axis_preserved(self):
+        plan = replan_mesh(64, model=16, pods=2)
+        assert plan.axes == ("pod", "data", "model")
+        assert plan.shape == (2, 2, 16)
+        assert plan.dropped_chips == 0
+
+    def test_single_chip(self):
+        plan = replan_mesh(1, model=16)
+        assert plan.shape == (1, 1)
+        assert plan.chips == 1
+
+
+class TestRescaleBatch:
+    def test_keep_global_means_more_accumulation(self):
+        assert rescale_batch(256, old_data=8, new_data=6) == 256
+
+    def test_scale_with_data_axis_keeps_per_chip(self):
+        assert rescale_batch(256, old_data=8, new_data=6,
+                             keep_global=False) == 192
+
+
+class TestSingleDeviceDegradation:
+    """Losing a device on a 2-device mesh replans onto ONE device; the
+    carry contract must make the degraded run bitwise-identical to the
+    dense reference (subprocess so the forced host-device count cannot
+    leak into other tests)."""
+
+    @staticmethod
+    def _run(code: str, n_devices: int) -> subprocess.CompletedProcess:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n_devices}")
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src")]
+            + env.get("PYTHONPATH", "").split(os.pathsep))
+        return subprocess.run([sys.executable, "-c", code], env=env,
+                              capture_output=True, text=True,
+                              timeout=600)
+
+    def test_replan_to_one_device_bitwise(self):
+        code = """
+import numpy as np
+from repro.core import pareto, stream, sweep
+from repro.runtime import FaultInjector, FaultPlan
+GRID = dict(agg_nodes=("7nm","16nm"), sensor_nodes=("7nm","16nm"),
+            detnet_fps=(10.,20.,30.), keynet_fps=(30.,45.),
+            num_cameras=(2.,4.))
+dense = sweep.evaluate_grid(**GRID)
+inj = FaultInjector(FaultPlan(lose_device=(2, 0)))
+res = stream.stream_grid(**GRID, chunk_size=128, top_k=4, track="all",
+                         fault_injector=inj)
+assert res.n_devices == 2, res.n_devices
+assert inj.injected["device_lost"] == 1
+assert res.stats["elastic_replans"] == 1.0, res.stats
+assert res.stats["chunks_reissued"] > 0.0, res.stats
+for f in sweep.FIELDS:
+    assert res.argmin(f) == dense.argmin(f), f
+    assert res.finite_counts[f] == \\
+        int(np.isfinite(dense.data[f]).sum()), f
+for o in res.objectives:
+    assert res.top_k(o) == dense.top_k(o, 4), o
+df = pareto.pareto_front(dense); sf = res.pareto_front()
+assert np.array_equal(df.indices, sf.indices)
+assert np.array_equal(df.values, sf.values)
+print("DEGRADE-OK")
+"""
+        out = self._run(code, n_devices=2)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "DEGRADE-OK" in out.stdout

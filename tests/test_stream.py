@@ -833,3 +833,116 @@ print("RESUME-OK", res.stats["resumed_from_step"])
         out2 = self._run(resume)
         assert out2.returncode == 0, out2.stderr[-2000:]
         assert "RESUME-OK" in out2.stdout
+
+
+class _StopAfter:
+    """``should_stop`` hook returning True after ``n`` dispatches."""
+
+    def __init__(self, n: int):
+        self.n = n
+        self.calls = 0
+
+    def __call__(self) -> bool:
+        self.calls += 1
+        return self.calls > self.n
+
+
+class TestCooperativeStop:
+    """Cooperative cancellation: ``should_stop`` is polled between chunk
+    dispatches; a halted run returns a *consistent prefix snapshot*
+    (``partial=True``) — the exact reductions over flat configs
+    ``[0, base)`` — never an error and never a torn mix of chunks."""
+
+    KW = dict(chunk_size=997, top_k=TOP_K, track="all")
+
+    @pytest.mark.parametrize("prefetch", (0, 2))
+    def test_partial_snapshot_is_exact_prefix(self, dense, prefetch):
+        res = stream.stream_grid(**REFERENCE_GRID, **self.KW,
+                                 prefetch=prefetch,
+                                 should_stop=_StopAfter(3))
+        assert res.partial
+        frac = res.stats["fraction_complete"]
+        assert 0.0 < frac < 1.0
+        base = round(frac * dense.data["avg_power"].size)
+        assert base == 3 * 997      # stopped before the 4th dispatch
+        for field in sweep.FIELDS:
+            prefix = np.asarray(dense.data[field]).ravel()[:base]
+            assert res.min_val[field] == float(np.nanmin(prefix)), field
+            assert res.min_idx[field] == int(np.nanargmin(prefix)), field
+            assert res.finite_counts[field] == \
+                int(np.isfinite(prefix).sum()), field
+            assert res.channel_min[field] == float(np.nanmin(prefix))
+            assert res.channel_max[field] == float(np.nanmax(prefix))
+
+    def test_never_stopping_hook_is_a_noop(self, dense, dense_front):
+        res = stream.stream_grid(**REFERENCE_GRID, **self.KW,
+                                 should_stop=lambda: False)
+        assert not res.partial
+        assert res.stats["fraction_complete"] == 1.0
+        _assert_full_parity(res, dense, dense_front)
+
+    def test_on_progress_monotonic_to_one(self):
+        seen = []
+        res = stream.stream_grid(**REFERENCE_GRID, **self.KW,
+                                 on_progress=seen.append)
+        assert seen == sorted(seen)
+        assert seen[-1] == 1.0
+        assert len(seen) == res.stats["n_chunks"]
+
+    def test_partial_checkpoint_then_resume_completes(self, dense,
+                                                      dense_front,
+                                                      tmp_path):
+        """A halted run leaves a durable snapshot at its stop cursor; a
+        later run over the same checkpoint dir finishes the sweep
+        bitwise-exactly."""
+        ckpt = str(tmp_path / "ckpt")
+        part = stream.stream_grid(**REFERENCE_GRID, **self.KW,
+                                  checkpoint_dir=ckpt,
+                                  checkpoint_every_steps=1,
+                                  should_stop=_StopAfter(3))
+        assert part.partial
+        res = stream.stream_grid(**REFERENCE_GRID, **self.KW,
+                                 checkpoint_dir=ckpt,
+                                 checkpoint_every_steps=1)
+        assert not res.partial
+        assert res.stats["resumed_from_step"] == 3
+        _assert_full_parity(res, dense, dense_front)
+
+    def test_keyboard_interrupt_reaps_producer(self, monkeypatch):
+        """Ctrl-C in the consumer loop must still signal and join the
+        producer thread — the satellite fix for the orphaned
+        ``stream-producer`` after KeyboardInterrupt."""
+        import threading
+
+        def boom(*a, **k):
+            raise KeyboardInterrupt
+
+        monkeypatch.setattr(stream, "_merge_into_front", boom)
+        with pytest.raises(KeyboardInterrupt):
+            stream.stream_grid(**REFERENCE_GRID, chunk_size=997,
+                               prefetch=2)
+        assert not [t for t in threading.enumerate()
+                    if t.name == "stream-producer" and t.is_alive()]
+
+
+class TestPlanReuse:
+    """``plan_stream`` + ``stream_grid(plan=)``: the resolved plan is
+    the service's cache currency — running through a pre-resolved plan
+    must be bitwise-identical to the keyword path, and the content
+    signature must be stable across resolutions."""
+
+    def test_plan_path_bitwise_equals_keyword_path(self, dense,
+                                                   dense_front):
+        plan = stream.plan_stream(**REFERENCE_GRID, chunk_size=997,
+                                  top_k=TOP_K, track="all")
+        res = stream.stream_grid(plan=plan)
+        _assert_full_parity(res, dense, dense_front)
+
+    def test_signature_stable_across_resolutions(self):
+        kw = dict(chunk_size=997, top_k=TOP_K, track="all")
+        p1 = stream.plan_stream(**REFERENCE_GRID, **kw)
+        p2 = stream.plan_stream(**REFERENCE_GRID, **kw)
+        assert p1.signature == p2.signature
+        p3 = stream.plan_stream(**REFERENCE_GRID, chunk_size=997,
+                                top_k=TOP_K + 1, track="all")
+        assert p3.signature != p1.signature

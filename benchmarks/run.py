@@ -38,6 +38,13 @@ must match the solo run bitwise, a deadline-exceeded request must
 return a consistent prefix snapshot, an over-capacity submission must
 be rejected without disturbing admitted work, and a SIGKILL'd server
 restarted over its spool must resume to bitwise-identical results.
+The networked path has its own gates: ``net-kill-reconnect`` SIGKILLs
+a *listening* server mid-request with a connected client and requires
+the client to reconnect, dedupe its idempotent resubmit onto the
+recovered ticket and decode a bitwise-identical result; and
+``net-fairness`` asserts the 1:3 weight share under sustained
+overload, priority aging (no starvation), and wire-carried
+backpressure fields (depth, capacity, tenant, retry-after).
 Perf-path *and* resilience regressions fail CI, not just benchmarks.
 """
 
@@ -394,6 +401,193 @@ def _smoke_service(ctx):
     ]
 
 
+def _smoke_net_kill_reconnect(ctx):
+    """The networked chaos gate: SIGKILL a listening server mid-request
+    with a connected client; the client must reconnect to the restarted
+    server, its idempotent resubmit must dedupe onto the recovered
+    ticket (same request id, no double execution), and the final result
+    must be bitwise-identical to the fault-free in-process run."""
+    import json
+    import os
+    import signal
+    import subprocess
+    import sys
+    import tempfile
+    import threading
+
+    import numpy as np
+
+    from repro.core import stream
+    from repro.core.client import SweepClient
+    from repro.core.service import SweepRequest
+
+    # Enough steps (~88 x 31-config chunks, several hundred ms of
+    # steady-state work after the first snapshot) that the kill
+    # reliably lands mid-request, not after completion.
+    grid_kw = dict(ctx["grid_kw"],
+                   detnet_fps=tuple(float(f) for f in range(5, 105, 5)))
+    req = SweepRequest(grid=grid_kw, track="all", chunk_size=31, top_k=4)
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=1")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p])
+
+    def start_server(sock_path, spool):
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.service", "--unix", sock_path,
+             "--spool", spool, "--checkpoint-every-steps", "1"],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.DEVNULL,
+            text=True)
+        ready = json.loads(proc.stdout.readline())
+        assert ready["listening"] == sock_path, f"bad ready line {ready}"
+        return proc
+
+    with tempfile.TemporaryDirectory(prefix="smoke_net_") as tmp:
+        sock_path = os.path.join(tmp, "svc.sock")
+        spool = os.path.join(tmp, "spool")
+        server_a = start_server(sock_path, spool)
+        cli = SweepClient(sock_path, reconnect_timeout_s=240.0,
+                          heartbeat_grace_s=8.0)
+        ticket = cli.submit(req, client_id="smoke-chaos-1")
+        first_id = ticket.id
+        seen = {"frac": 0.0}
+        box: dict = {}
+
+        def wait_result():
+            try:
+                box["res"] = ticket.result(
+                    timeout=600,
+                    on_progress=lambda s: seen.__setitem__(
+                        "frac", s["fraction_complete"]))
+            except BaseException as e:
+                box["err"] = e
+
+        th = threading.Thread(target=wait_result)
+        th.start()
+        deadline = time.time() + 300
+        while seen["frac"] == 0.0 and th.is_alive() \
+                and time.time() < deadline:
+            time.sleep(0.02)
+        assert seen["frac"] > 0.0, "no progress snapshot before kill"
+        server_a.kill()
+        server_a.wait(30)
+        server_b = start_server(sock_path, spool)
+        try:
+            th.join(600)
+            assert "err" not in box, \
+                f"client failed across restart: {box.get('err')!r}"
+            res = box["res"]
+            assert ticket.id == first_id, \
+                "idempotent resubmit minted a new ticket"
+            assert res.stats["resumed_from_step"] > 0, res.stats
+            assert cli.counters["reconnects"] >= 2, cli.counters
+            ref = stream.stream_grid(**grid_kw, track="all",
+                                     chunk_size=31, top_k=4)
+            assert res.min_val == ref.min_val and \
+                res.min_idx == ref.min_idx, "networked argmin drifted"
+            assert np.array_equal(res.topk_idx, ref.topk_idx) and \
+                np.array_equal(res.topk_val, ref.topk_val), \
+                "networked top-k drifted"
+            assert np.array_equal(res.front_indices,
+                                  ref.front_indices) and \
+                np.array_equal(res.front_values, ref.front_values), \
+                "networked front drifted"
+        finally:
+            cli.close()
+            server_b.send_signal(signal.SIGTERM)
+            server_b.wait(60)
+    return [("smoke.net_kill_reconnect", 1.0,
+             f"server SIGKILL -> client reconnect + dedupe resumed from "
+             f"step {int(res.stats['resumed_from_step'])} bitwise")]
+
+
+def _smoke_net_fairness(ctx):
+    """The fairness gate: tenants at weights 1:3 under sustained
+    overload converge to their weight share of claimed work (within
+    10%), a starved low-priority request ages past fresh high-priority
+    arrivals, and over-the-wire overload rejections carry queue depth
+    and a retry-after hint."""
+    import tempfile
+
+    from repro.core.client import SweepClient
+    from repro.core.service import SweepRequest, SweepService
+    from repro.runtime import (AdmissionQueue, BackpressureError,
+                               SweepServer, TenantPolicy)
+
+    # (a) Deficit round-robin weight share under sustained overload.
+    q = AdmissionQueue(4096, tenants={"small": TenantPolicy(weight=1.0),
+                                      "big": TenantPolicy(weight=3.0)})
+    for i in range(600):
+        q.offer(f"s{i}", tenant="small")
+        q.offer(f"b{i}", tenant="big")
+    n_big = 0
+    for _ in range(400):
+        (item,) = q.take_batch(timeout=1.0)
+        tenant = "big" if item.startswith("b") else "small"
+        n_big += tenant == "big"
+        q.release(tenant)
+    share = n_big / 400.0
+    assert abs(share - 0.75) <= 0.10, \
+        f"weight-1:3 share drifted to {share:.2f}"
+
+    # (b) Aging: a starved low-priority request eventually runs.
+    aq = AdmissionQueue(8, aging_s=0.02)
+    aq.offer("starved", priority=0)
+    time.sleep(0.09)
+    aq.offer("fresh-high", priority=2)
+    assert aq.take_batch(timeout=1.0) == ["starved"], \
+        "low-priority request starved behind fresh high-priority work"
+
+    # (c) Overload rejections over the wire keep the in-process
+    # BackpressureError semantics: depth, capacity, tenant, retry hint.
+    grid_kw = ctx["grid_kw"]
+    req = SweepRequest(grid=grid_kw, chunk_size=97)
+    with tempfile.TemporaryDirectory(prefix="smoke_fair_") as tmp:
+        svc = SweepService(capacity=2)
+        svc.set_tenant("capped", weight=1.0, max_pending=1)
+        svc.pause()
+        with SweepServer(svc, unix_path=f"{tmp}/svc.sock",
+                         own_service=True) as server:
+            with SweepClient(server.address) as cli:
+                t1 = cli.submit(SweepRequest(grid=grid_kw, chunk_size=97,
+                                             tenant="capped"))
+                try:
+                    cli.submit(SweepRequest(grid=grid_kw, chunk_size=101,
+                                            tenant="capped"))
+                    raise AssertionError(
+                        "tenant over-cap submit was not rejected")
+                except BackpressureError as e:
+                    assert e.tenant == "capped", e
+                    assert e.queue_depth == 1 and e.capacity == 1, e
+                    assert e.retry_after_s is not None and \
+                        e.retry_after_s > 0, e
+                t2 = cli.submit(req)    # other tenants unaffected
+                try:
+                    cli.submit(SweepRequest(grid=grid_kw,
+                                            chunk_size=103))
+                    raise AssertionError(
+                        "over-capacity submit was not rejected")
+                except BackpressureError as e:
+                    assert e.tenant is None and e.queue_depth == 2, e
+                    assert e.retry_after_s is not None, e
+                for t in (t1, t2):
+                    cli.cancel(t.id)
+            svc.resume()
+            server.close(drain=True, timeout=30.0)
+    return [
+        ("smoke.net_fairness_share", share,
+         "weights 1:3 under overload: big-tenant share within 10% of "
+         "0.75"),
+        ("smoke.net_fairness_aging", 1.0,
+         "starved low-priority request aged past fresh high-priority"),
+        ("smoke.net_fairness_backpressure", 1.0,
+         "wire rejections carry depth/capacity/tenant/retry-after"),
+    ]
+
+
 #: The named, individually-timed smoke steps, in dependency order
 #: (``stream_parity`` seeds the shared dense reference).
 SMOKE_STEPS = [
@@ -406,6 +600,8 @@ SMOKE_STEPS = [
     ("transient_faults", _smoke_transient_faults),
     ("kill_resume", _smoke_kill_resume_step),
     ("service", _smoke_service),
+    ("net-kill-reconnect", _smoke_net_kill_reconnect),
+    ("net-fairness", _smoke_net_fairness),
 ]
 
 

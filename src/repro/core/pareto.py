@@ -272,6 +272,14 @@ def knee_point(points: np.ndarray) -> int:
     return int(np.argmin(np.linalg.norm((P - lo) / span, axis=1)))
 
 
+#: Largest non-dominated point count the exact d>=3 slicer accepts.
+#: The recursive slicing is exponential in the worst case (each slice
+#: re-solves a (d-1)-dim subproblem over a growing prefix), so beyond
+#: ~1e3 front points it silently turns into hours of compute; d<=2
+#: stays an O(n log n) sweep and is unbounded.
+HV_EXACT_MAX_POINTS = 1000
+
+
 def hypervolume(points: np.ndarray, ref: Sequence[float]) -> float:
     """Exact dominated hypervolume of ``points`` w.r.t. ``ref`` (minimize).
 
@@ -281,6 +289,11 @@ def hypervolume(points: np.ndarray, ref: Sequence[float]) -> float:
     strictly dominate ``ref`` contribute nothing.  Exact sweep for d ≤ 2;
     recursive slicing over the last objective for d ≥ 3 (fine for the
     front sizes the grids here produce, typically tens of points).
+
+    For d ≥ 3 the non-dominated survivor count is capped at
+    :data:`HV_EXACT_MAX_POINTS` — beyond that the exact slicer's cost
+    explodes, so the call raises ``ValueError`` instead of silently
+    hanging; reduce to 2 objectives or subsample the front first.
     """
     ref = np.asarray(ref, np.float64)
     P = np.asarray(points, np.float64)
@@ -291,6 +304,12 @@ def hypervolume(points: np.ndarray, ref: Sequence[float]) -> float:
     if P.shape[0] == 0:
         return 0.0
     P = P[non_dominated_mask(P)]
+    if ref.shape[0] >= 3 and P.shape[0] > HV_EXACT_MAX_POINTS:
+        raise ValueError(
+            f"hypervolume: {P.shape[0]} non-dominated points in "
+            f"{ref.shape[0]}-D exceeds the exact slicer's bound of "
+            f"{HV_EXACT_MAX_POINTS} — runtime would explode; reduce to "
+            f"2 objectives or subsample the front first")
     return _hv(sorted(map(tuple, P)), tuple(ref))
 
 

@@ -99,6 +99,14 @@ class CancelledError(RuntimeError):
     """The request was cancelled before any chunk was dispatched."""
 
 
+class ServiceClosedError(RuntimeError):
+    """The service shut down (or its worker died) before the request
+    finished.  Raised by :meth:`Ticket.result` instead of hanging
+    forever on a ticket nothing will ever complete; with a spool the
+    request's journal keeps its pre-shutdown state, so a later service
+    over the same spool resumes it."""
+
+
 @dataclasses.dataclass(frozen=True)
 class SweepRequest:
     """One design-space query against the sweep service.
@@ -110,10 +118,15 @@ class SweepRequest:
     after which the request returns its consistent ``partial=True``
     snapshot), ``need_front`` (set ``False`` when the Pareto front is
     not wanted — it widens fusion eligibility), and ``fuse`` (opt out
-    of being batched with compatible requests).  Requests built only
-    from JSON-able values (axis tuples, profile names, numbers) are
-    journaled and survive a server crash; requests embedding live
-    model objects still run but are not recoverable.
+    of being batched with compatible requests).  ``tenant`` and
+    ``priority`` are scheduling metadata for the multi-tenant
+    admission queue: weighted fair scheduling across tenants, higher
+    ``priority`` claimed first within one (with aging, so low-priority
+    work never starves) — they never affect results or fusion
+    eligibility.  Requests built only from JSON-able values (axis
+    tuples, profile names, numbers) are journaled and survive a server
+    crash; requests embedding live model objects still run but are not
+    recoverable.
     """
 
     grid: Mapping[str, Any] = dataclasses.field(default_factory=dict)
@@ -130,6 +143,8 @@ class SweepRequest:
     deadline_s: Optional[float] = None
     need_front: bool = True
     fuse: bool = True
+    tenant: str = "default"
+    priority: int = 0
 
     def normalized(self) -> "SweepRequest":
         """Canonical form: tuples for sequences, validated grid keys,
@@ -153,7 +168,8 @@ class SweepRequest:
             top_k=int(self.top_k), hist_bins=int(self.hist_bins),
             hist_ranges=hr, chunk_size=int(self.chunk_size),
             deadline_s=(None if self.deadline_s is None
-                        else float(self.deadline_s)))
+                        else float(self.deadline_s)),
+            tenant=str(self.tenant), priority=int(self.priority))
 
     # -- journal serialization ------------------------------------------
 
@@ -257,17 +273,23 @@ class Ticket:
     """
 
     def __init__(self, tid: str, seq: int, request: SweepRequest,
-                 service: "SweepService"):
+                 service: "SweepService",
+                 client_id: Optional[str] = None):
         self.id = tid
         self.seq = seq
         self.request = request
+        self.client_id = client_id
+        self.tenant = request.tenant
         self.deadline = Deadline.after(request.deadline_s)
         self.state = QUEUED
         self.progress = 0.0
         self.signature: Optional[str] = None
+        self.snapshot: Optional[dict] = None
         self._service = service
         self._done = threading.Event()
         self._cancel = threading.Event()
+        self._snap_seq = 0
+        self._snap_cond = threading.Condition()
         self._result: Optional[ST.StreamResult] = None
         self._error: Optional[BaseException] = None
 
@@ -287,16 +309,57 @@ class Ticket:
 
     def result(self, timeout: Optional[float] = None) -> ST.StreamResult:
         """Block for the outcome.  Raises :class:`TimeoutError` when
-        not finished within ``timeout``, re-raises the request's
-        failure, and returns the partial snapshot for deadline-expired
-        or mid-run-cancelled requests."""
-        if not self._done.wait(timeout):
-            raise TimeoutError(
-                f"request {self.id} not finished within {timeout}s "
-                f"(state {self.state}, progress {self.progress:.0%})")
+        not finished within ``timeout``, :class:`ServiceClosedError`
+        when the service shuts down (or its worker dies) with the
+        ticket still unfinished — never a silent forever-hang —
+        re-raises the request's failure, and returns the partial
+        snapshot for deadline-expired or mid-run-cancelled requests."""
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        while not self._done.is_set():
+            remaining = (None if deadline is None
+                         else deadline - time.monotonic())
+            if remaining is not None and remaining <= 0:
+                raise TimeoutError(
+                    f"request {self.id} not finished within {timeout}s "
+                    f"(state {self.state}, "
+                    f"progress {self.progress:.0%})")
+            svc = self._service
+            if (svc is not None and not svc._worker.is_alive()
+                    and not self._done.is_set()):
+                raise ServiceClosedError(
+                    f"service closed with request {self.id} still "
+                    f"{self.state} — nothing will finish it; restart "
+                    f"a service over the same spool to resume")
+            self._done.wait(0.1 if remaining is None
+                            else min(0.1, remaining))
         if self._result is None and self._error is not None:
             raise self._error
         return self._result
+
+    # -- incremental progress snapshots ---------------------------------
+
+    def _update_snapshot(self, snap: dict) -> None:
+        with self._snap_cond:
+            self.snapshot = snap
+            self.progress = float(snap.get("fraction_complete",
+                                           self.progress))
+            self._snap_seq += 1
+            self._snap_cond.notify_all()
+
+    def wait_snapshot(self, last_seq: int = 0,
+                      timeout: Optional[float] = None):
+        """Block until a progress snapshot newer than ``last_seq``
+        lands (or the ticket finishes, or ``timeout``).  Returns
+        ``(seq, snapshot)`` — pass ``seq`` back in to long-poll the
+        next one; ``snapshot`` is a JSON-able consistent prefix
+        summary (``fraction_complete``, running per-objective best,
+        front size).  The transport's ``watch`` op streams these to
+        subscribed clients."""
+        with self._snap_cond:
+            if self._snap_seq <= last_seq and not self._done.is_set():
+                self._snap_cond.wait(timeout)
+            return self._snap_seq, self.snapshot
 
     def summary(self) -> dict:
         return {"id": self.id, "state": self.state,
@@ -336,9 +399,15 @@ class SweepService:
                  retry_policy: Optional[RetryPolicy] = None,
                  fault_injector=None,
                  recover: bool = True,
-                 poll_s: float = 0.05):
+                 poll_s: float = 0.05,
+                 tenants: Optional[Mapping] = None,
+                 aging_s: float = 30.0,
+                 snapshot_every_s: float = 0.5):
         self.spool_dir = spool_dir
-        self._queue = AdmissionQueue(capacity)
+        self._queue = AdmissionQueue(capacity,
+                                     tenants=dict(tenants or {}),
+                                     aging_s=aging_s)
+        self._snapshot_every_s = float(snapshot_every_s)
         self._fuse = bool(fuse)
         self._max_fuse = max(1, int(max_fuse))
         self._plan_cache_size = max(1, int(plan_cache_size))
@@ -352,8 +421,10 @@ class SweepService:
         self._poll_s = float(poll_s)
 
         self._lock = threading.Lock()
+        self._journal_lock = threading.Lock()
         self._plans: "OrderedDict[str, ST.StreamPlan]" = OrderedDict()
         self._tickets: "OrderedDict[str, Ticket]" = OrderedDict()
+        self._by_client: dict = {}
         self._running: dict = {}
         self._seq = 0
         self._t0 = time.monotonic()
@@ -362,7 +433,8 @@ class SweepService:
         self.counters = {
             "admitted": 0, "rejected": 0, "completed": 0, "failed": 0,
             "cancelled": 0, "deadline_expired": 0, "fused_requests": 0,
-            "executions": 0, "recovered": 0, "plan_hits": 0,
+            "executions": 0, "recovered": 0, "recovered_finished": 0,
+            "deduped": 0, "plan_hits": 0,
             "plan_misses": 0,
             # Aggregated executor resilience counters:
             "retries": 0, "restarts": 0, "chunks_reissued": 0,
@@ -392,48 +464,102 @@ class SweepService:
         to empty; otherwise an in-flight request is preempted within
         one chunk (its ticket gets the partial snapshot and, when
         spooled, its journal stays unfinished so a later service over
-        the same spool resumes it)."""
+        the same spool resumes it).  Tickets left unfinished when the
+        worker exits fail fast with :class:`ServiceClosedError` —
+        their journal keeps the pre-shutdown state, so recovery over
+        the same spool still resumes them."""
         if drain:
             while (self._queue.depth or self._running) \
                     and not self._shutdown.is_set():
                 time.sleep(self._poll_s)
         self._shutdown.set()
         self._worker.join(timeout)
+        for t in self.tickets():
+            if not t.done():
+                pre_state = t.state
+                self._finish(
+                    t, FAILED,
+                    error=ServiceClosedError(
+                        f"service closed with request {t.id} still "
+                        f"{pre_state} — restart a service over the "
+                        f"same spool to resume it"),
+                    journal_state=pre_state)
 
     def pause(self) -> None:
         """Stop claiming new requests (admission stays open) — the
-        deterministic knob backpressure/fusion tests are built on."""
+        deterministic knob backpressure/fusion tests are built on.
+        Pausing at the queue level closes the race where a worker
+        already blocked inside ``take_batch`` claims a submit that
+        lands after ``pause()`` returns."""
         self._paused.set()
+        self._queue.pause()
 
     def resume(self) -> None:
+        self._queue.resume()
         self._paused.clear()
 
     # -- submission ------------------------------------------------------
 
-    def submit(self, request: SweepRequest) -> Ticket:
+    def submit(self, request: SweepRequest,
+               client_id: Optional[str] = None) -> Ticket:
         """Admit one request.  Raises
         :class:`~repro.runtime.admission.BackpressureError` when the
-        backlog is at capacity (the request is NOT enqueued), and
-        ``ValueError`` on malformed requests — both before any state
-        is journaled."""
+        backlog is at capacity or the tenant's pending cap is hit (the
+        request is NOT enqueued), and ``ValueError`` on malformed
+        requests — both before any state is journaled.
+
+        ``client_id`` makes the submit **idempotent**: resubmitting
+        the same id returns the existing ticket — queued, running or
+        already finished, including finished requests recovered from
+        the journal after a server restart — instead of executing
+        twice.  The id is validated against the original request
+        (``ValueError`` on reuse with a different one); this is what
+        lets :class:`repro.core.client.SweepClient` blindly retry a
+        submit whose response was lost to a dropped connection or a
+        server crash."""
         if self._shutdown.is_set():
-            raise RuntimeError("service is shut down")
+            raise ServiceClosedError("service is shut down")
         req = request.normalized()
         with self._lock:
+            if client_id is not None:
+                existing = self._by_client.get(client_id)
+                if existing is not None:
+                    if existing.request != req:
+                        raise ValueError(
+                            f"client id {client_id!r} was already used "
+                            f"for a different request "
+                            f"({existing.id}) — idempotent retries "
+                            f"must resubmit the identical request")
+                    self.counters["deduped"] += 1
+                    return existing
             self._seq += 1
             seq = self._seq
-        t = Ticket(f"req-{seq:06d}", seq, req, self)
+            t = Ticket(f"req-{seq:06d}", seq, req, self,
+                       client_id=client_id)
+            if client_id is not None:
+                self._by_client[client_id] = t
         try:
-            self._queue.offer(t)
+            self._queue.offer(t, tenant=req.tenant,
+                              priority=req.priority)
         except BackpressureError:
             with self._lock:
                 self.counters["rejected"] += 1
+                if client_id is not None \
+                        and self._by_client.get(client_id) is t:
+                    del self._by_client[client_id]
             raise
         self._remember(t)
         self._journal(t)
         with self._lock:
             self.counters["admitted"] += 1
         return t
+
+    def set_tenant(self, name: str, weight: float = 1.0,
+                   max_pending: Optional[int] = None) -> None:
+        """Register (or update) one tenant's fairness policy — DRR
+        weight and optional queued+in-flight pending cap."""
+        self._queue.set_tenant(name, weight=weight,
+                               max_pending=max_pending)
 
     def get(self, ticket_id: str) -> Optional[Ticket]:
         with self._lock:
@@ -484,25 +610,39 @@ class SweepService:
         """Atomically persist one ticket's journal entry (no-op without
         a spool or for non-JSON-able requests).  ``state`` overrides
         the ticket state — used to leave a shutdown-preempted request
-        marked unfinished so recovery re-admits it."""
+        marked unfinished so recovery re-admits it.  Finished DONE
+        entries embed the exact result (:func:`repro.core.stream.
+        result_to_json`) so an idempotent resubmit after a server
+        restart re-attaches and gets the bitwise-identical answer
+        without re-executing."""
         if self.spool_dir is None:
             return
-        try:
-            payload = {"id": t.id, "seq": t.seq,
-                       "state": state or t.state,
-                       "signature": t.signature,
-                       "request": t.request.to_json(),
-                       "error": (str(t._error) if t._error is not None
-                                 else None)}
-        except TypeError:
-            return      # volatile request (live model objects)
-        path = os.path.join(self._requests_dir, f"{t.id}.json")
-        tmp = path + ".tmp"
-        with open(tmp, "w") as fh:
-            json.dump(payload, fh)
-            fh.flush()
-            os.fsync(fh.fileno())
-        os.replace(tmp, path)
+        # One ticket can be journaled concurrently (the submitting
+        # thread right after admission, the worker as it claims): the
+        # lock keeps the shared tmp path from racing os.replace, and
+        # reading t.state *inside* the lock makes the last writer
+        # persist the freshest state.
+        with self._journal_lock:
+            journal_state = state or t.state
+            try:
+                payload = {"id": t.id, "seq": t.seq,
+                           "state": journal_state,
+                           "signature": t.signature,
+                           "client_id": t.client_id,
+                           "request": t.request.to_json(),
+                           "error": (str(t._error)
+                                     if t._error is not None else None)}
+                if journal_state == DONE and t._result is not None:
+                    payload["result"] = ST.result_to_json(t._result)
+            except TypeError:
+                return      # volatile request (live model objects)
+            path = os.path.join(self._requests_dir, f"{t.id}.json")
+            tmp = path + ".tmp"
+            with open(tmp, "w") as fh:
+                json.dump(payload, fh)
+                fh.flush()
+                os.fsync(fh.fileno())
+            os.replace(tmp, path)
 
     def _recover(self) -> None:
         """Re-admit every journaled request left queued or running by a
@@ -528,20 +668,49 @@ class SweepService:
                 req = SweepRequest.from_json(e["request"])
             except (TypeError, ValueError, KeyError):
                 continue
-            t = Ticket(e["id"], int(e.get("seq", 0)), req, self)
+            t = Ticket(e["id"], int(e.get("seq", 0)), req, self,
+                       client_id=e.get("client_id"))
             t.signature = e.get("signature")
-            self._queue.readmit(t)
+            self._queue.readmit(t, tenant=req.tenant,
+                                priority=req.priority)
             self._remember(t)
             self._journal(t)
             self.counters["recovered"] += 1
+        # Finished requests with a journaled result come back as DONE
+        # tickets (never re-executed): an idempotent resubmit from a
+        # client that crashed mid-wait re-attaches and reads the exact
+        # persisted answer.
+        for e in entries:
+            if e.get("state") != DONE or e.get("result") is None:
+                continue
+            try:
+                req = SweepRequest.from_json(e["request"])
+                res = ST.result_from_json(e["result"])
+            except (TypeError, ValueError, KeyError):
+                continue
+            t = Ticket(e["id"], int(e.get("seq", 0)), req, self,
+                       client_id=e.get("client_id"))
+            t.signature = e.get("signature")
+            t.state = DONE
+            t.progress = float(res.stats.get("fraction_complete", 1.0))
+            t._result = res
+            t._done.set()
+            self._remember(t)
+            self.counters["recovered_finished"] += 1
 
     def _remember(self, t: Ticket) -> None:
         with self._lock:
             self._tickets[t.id] = t
+            if t.client_id is not None:
+                self._by_client[t.client_id] = t
             while len(self._tickets) > self._keep_finished:
                 for tid, old in self._tickets.items():
                     if old.done():
                         del self._tickets[tid]
+                        if old.client_id is not None and \
+                                self._by_client.get(old.client_id) \
+                                is old:
+                            del self._by_client[old.client_id]
                         break
                 else:
                     break       # nothing evictable: keep them all
@@ -564,6 +733,8 @@ class SweepService:
             self.counters[key] += 1
         self._journal(t, state=journal_state)
         t._done.set()
+        with t._snap_cond:          # wake watchers blocked on progress
+            t._snap_cond.notify_all()
 
     # -- internals: planning --------------------------------------------
 
@@ -602,7 +773,13 @@ class SweepService:
                                            compatible=compat,
                                            max_batch=self._max_fuse)
             if batch:
-                self._execute(batch)
+                try:
+                    self._execute(batch)
+                finally:
+                    # Return the claimed in-flight slots so per-tenant
+                    # pending caps see the true outstanding count.
+                    for t in batch:
+                        self._queue.release(t.tenant)
 
     def _compatible(self, head: Ticket, other: Ticket) -> bool:
         return (head.request.fuse and other.request.fuse
@@ -648,6 +825,10 @@ class SweepService:
             for t in members:
                 t.progress = frac
 
+        def on_snapshot(snap: dict) -> None:
+            for t in members:
+                t._update_snapshot(snap)
+
         for t in members:
             t.state = RUNNING
             t.signature = plan.signature
@@ -668,7 +849,9 @@ class SweepService:
                 checkpoint_keep=self._ckpt_keep,
                 retry_policy=self._retry_policy,
                 fault_injector=self._fault_injector,
-                should_stop=should_stop, on_progress=on_progress)
+                should_stop=should_stop, on_progress=on_progress,
+                on_snapshot=on_snapshot,
+                snapshot_every_s=self._snapshot_every_s)
         except Exception as e:
             for t in members:
                 self._finish(t, FAILED, error=e)
@@ -763,11 +946,46 @@ def _result_summary(t: Ticket) -> dict:
     return out
 
 
+def _serve(svc: "SweepService", listen: Optional[str],
+           unix: Optional[str]) -> int:
+    """Networked mode: serve ``svc`` over TCP or a Unix socket until
+    SIGTERM/SIGINT, then drain gracefully.  Prints one JSON ready line
+    (``{"listening": <address>}``) once the socket is bound, so
+    supervisors and tests can wait for startup."""
+    import signal
+
+    from ..runtime.transport import SweepServer, parse_address
+
+    if unix is not None:
+        server = SweepServer(svc, unix_path=unix, own_service=True)
+    else:
+        kind, host, port = parse_address(listen)
+        if kind != "tcp":
+            raise SystemExit(f"--listen wants HOST:PORT, got {listen!r}")
+        server = SweepServer(svc, host=host, port=port,
+                             own_service=True)
+    stop = threading.Event()
+    for signum in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(signum, lambda *_: stop.set())
+    server.start()
+    print(json.dumps({"listening": server.address}), flush=True)
+    try:
+        while not stop.is_set():
+            stop.wait(0.2)
+    finally:
+        server.close(drain=True)
+    print(json.dumps({"health": svc.health()}))
+    return 0
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
-    """Spool-backed batch server: recover + run journaled requests,
-    then requests from ``--requests`` (a JSON-lines file of
-    :meth:`SweepRequest.to_json` payloads), print one JSON summary per
-    finished request plus the final health snapshot."""
+    """Spool-backed sweep server.  Batch mode (default): recover + run
+    journaled requests, then requests from ``--requests`` (a JSON-lines
+    file of :meth:`SweepRequest.to_json` payloads), print one JSON
+    summary per finished request plus the final health snapshot.
+    Networked mode (``--listen HOST:PORT`` or ``--unix PATH``): serve
+    the framed-JSON protocol of :mod:`repro.runtime.transport` until
+    SIGTERM/SIGINT, then drain gracefully."""
     ap = argparse.ArgumentParser(
         prog="python -m repro.service",
         description="Persistent crash-safe sweep server over "
@@ -783,10 +1001,28 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--checkpoint-every-steps", type=int, default=None)
     ap.add_argument("--timeout-s", type=float, default=None,
                     help="per-request result timeout")
+    ap.add_argument("--listen", default=None, metavar="HOST:PORT",
+                    help="serve the framed-JSON protocol on a TCP "
+                         "socket (port 0 picks a free port, printed "
+                         "in the ready line)")
+    ap.add_argument("--unix", default=None, metavar="PATH",
+                    help="serve on a Unix-domain socket at PATH")
+    ap.add_argument("--tenant", action="append", default=[],
+                    metavar="NAME:WEIGHT[:MAX_PENDING]",
+                    help="register a tenant fairness policy "
+                         "(repeatable)")
     args = ap.parse_args(argv)
 
     svc = SweepService(spool_dir=args.spool, capacity=args.capacity,
                        checkpoint_every_steps=args.checkpoint_every_steps)
+    for spec in args.tenant:
+        parts = spec.split(":")
+        svc.set_tenant(parts[0],
+                       weight=float(parts[1]) if len(parts) > 1 else 1.0,
+                       max_pending=(int(parts[2]) if len(parts) > 2
+                                    else None))
+    if args.listen or args.unix:
+        return _serve(svc, args.listen, args.unix)
     try:
         tickets = svc.tickets()     # recovered work first
         if args.requests:

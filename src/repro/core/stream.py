@@ -299,6 +299,114 @@ class StreamResult:
 
 
 # ---------------------------------------------------------------------------
+# Exact JSON codec + progress snapshots (the wire format of the
+# networked service)
+# ---------------------------------------------------------------------------
+
+
+def _jsonable_scalar(v):
+    return v.item() if isinstance(v, np.generic) else v
+
+
+def result_to_json(res: StreamResult) -> dict:
+    """Exact JSON-able encoding of a :class:`StreamResult`.
+
+    Floats round-trip bitwise (Python's ``repr`` emits the shortest
+    exact decimal, and non-finite values use the Python-extended JSON
+    ``NaN``/``Infinity`` tokens), integer index tables stay int64 —
+    :func:`result_from_json` reconstructs a result whose every
+    reduction compares bitwise-equal to the original.  This is both
+    the service's journal format for finished requests and the
+    transport's result frame payload.
+    """
+    hist = None
+    if res.hist is not None:
+        hist = {f: [c.tolist(), e.tolist()]
+                for f, (c, e) in res.hist.items()}
+    return {
+        "schema": "stream-result/v1",
+        "axes": [[k, [_jsonable_scalar(v) for v in vals]]
+                 for k, vals in res.axes.items()],
+        "objectives": list(res.objectives),
+        "maximize": list(res.maximize),
+        "chunk_size": int(res.chunk_size),
+        "n_devices": int(res.n_devices),
+        "min_val": {k: float(v) for k, v in res.min_val.items()},
+        "min_idx": {k: int(v) for k, v in res.min_idx.items()},
+        "finite_counts": {k: int(v)
+                          for k, v in res.finite_counts.items()},
+        "channel_min": {k: float(v) for k, v in res.channel_min.items()},
+        "channel_max": {k: float(v) for k, v in res.channel_max.items()},
+        "axis_valid": [[k, np.asarray(v).tolist()]
+                       for k, v in res.axis_valid.items()],
+        "topk_idx": res.topk_idx.tolist(),
+        "topk_val": res.topk_val.tolist(),
+        "front_indices": res.front_indices.tolist(),
+        "front_values": res.front_values.tolist(),
+        "hist": hist,
+        "stats": {k: float(v) for k, v in res.stats.items()},
+        "constraints": [list(c) for c in res.constraints],
+        "partial": bool(res.partial),
+    }
+
+
+def result_from_json(d: Mapping) -> StreamResult:
+    """Inverse of :func:`result_to_json` (bitwise-exact round-trip)."""
+    n_obj = len(d["objectives"])
+    hist = None
+    if d.get("hist") is not None:
+        hist = {f: (np.asarray(c), np.asarray(e, np.float64))
+                for f, (c, e) in d["hist"].items()}
+    front_v = np.asarray(d["front_values"], np.float64)
+    return StreamResult(
+        axes=OrderedDict((k, tuple(vals)) for k, vals in d["axes"]),
+        objectives=tuple(d["objectives"]),
+        maximize=tuple(d["maximize"]),
+        chunk_size=int(d["chunk_size"]),
+        n_devices=int(d["n_devices"]),
+        min_val=dict(d["min_val"]),
+        min_idx={k: int(v) for k, v in d["min_idx"].items()},
+        finite_counts={k: int(v)
+                       for k, v in d["finite_counts"].items()},
+        channel_min=dict(d["channel_min"]),
+        channel_max=dict(d["channel_max"]),
+        axis_valid=OrderedDict((k, np.asarray(v))
+                               for k, v in d["axis_valid"]),
+        topk_idx=np.asarray(d["topk_idx"], np.int64).reshape(n_obj, -1),
+        topk_val=np.asarray(d["topk_val"],
+                            np.float64).reshape(n_obj, -1),
+        front_indices=np.asarray(d["front_indices"], np.int64),
+        front_values=front_v.reshape(-1, n_obj),
+        hist=hist,
+        stats=dict(d["stats"]),
+        constraints=tuple((f, op, v) for f, op, v in d["constraints"]),
+        partial=bool(d["partial"]),
+    )
+
+
+def _progress_snapshot(folded: int, n_total: int, front_vals, front_idx,
+                       objectives, sign) -> dict:
+    """JSON-able progress snapshot over the folded contiguous prefix
+    ``[0, folded)``: fraction complete, running per-objective best
+    (value + flat index, read off the running front — the single-
+    objective optimum is always a non-dominated point) and front size.
+    The running front is conservatively pre-filtered against probe
+    witnesses from the whole grid, so a mid-run ``best`` can only be
+    *pessimistic* relative to the prefix; the final result (and any
+    cooperative-stop partial) is exact."""
+    best = {}
+    for oi, f in enumerate(objectives):
+        if front_vals.shape[0]:
+            j = int(np.argmin(front_vals[:, oi] * sign[oi]))
+            best[f] = {"value": float(front_vals[j, oi]),
+                       "index": int(front_idx[j])}
+    return {"fraction_complete": (folded / n_total if n_total else 1.0),
+            "front_size": int(front_vals.shape[0]),
+            "partial": True,
+            "best": best}
+
+
+# ---------------------------------------------------------------------------
 # Host-side exact merges
 # ---------------------------------------------------------------------------
 
@@ -663,7 +771,9 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                 fault_injector=None,
                 plan: Optional[StreamPlan] = None,
                 should_stop=None,
-                on_progress=None) -> StreamResult:
+                on_progress=None,
+                on_snapshot=None,
+                snapshot_every_s: float = 0.5) -> StreamResult:
     """Stream Eqs. 1-11 over an arbitrarily large cartesian grid.
 
     Same axes (and ``models=`` workload batch) as
@@ -744,7 +854,12 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
     so a later call resumes where the stop landed.  ``on_progress`` is
     called after each dispatch with the fraction of the grid issued so
     far (also from the producer thread; keep it cheap and
-    thread-safe).
+    thread-safe).  ``on_snapshot`` is called (from the consumer
+    thread, at most every ``snapshot_every_s`` seconds) with a
+    JSON-able consistent progress summary over the folded contiguous
+    prefix — ``fraction_complete``, running per-objective best and
+    front size (see :func:`_progress_snapshot`) — the payload the
+    networked service streams to subscribed clients.
     """
     if plan is None:
         plan = plan_stream(
@@ -849,6 +964,9 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
         # chunks already issued (all of which the consumer folds before
         # the pipeline winds down) instead of the full grid.
         ctl = {"halted": False}
+        # Progress-snapshot throttle (consumer-thread clock), shared
+        # across pipeline incarnations so restarts don't burst emits.
+        snap_t = {"last": time.perf_counter()}
 
         def drive():
             # One incarnation of the pipeline: rebuild the compiled
@@ -1002,6 +1120,17 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                         buf_n += len(fl)
                 if buf_n >= _MERGE_EVERY:
                     merge()
+                if (on_snapshot is not None
+                        and time.perf_counter() - snap_t["last"]
+                        >= snapshot_every_s):
+                    # Fold the pending buffer first so the snapshot's
+                    # running front covers every survivor of the folded
+                    # prefix [0, start + per_step).
+                    merge()
+                    snap_t["last"] = time.perf_counter()
+                    on_snapshot(_progress_snapshot(
+                        min(start + per_step, n_total), n_total,
+                        front_vals, front_idx, objectives, sign))
                 if t_first is None:
                     t_first = time.perf_counter() - t0
                 t_host += time.perf_counter() - th

@@ -1,11 +1,13 @@
 """Distributed runtime: fault tolerance, straggler mitigation, elasticity,
-deterministic fault injection, bounded admission control."""
+deterministic fault injection, multi-tenant fair admission control, and
+the framed-socket transport of the networked sweep service."""
 
 from .admission import (AdmissionQueue, BackpressureError,  # noqa: F401
-                        Deadline)
+                        Deadline, TenantPolicy)
 from .elastic import (MeshPlan, drop_worker, replan_mesh,  # noqa: F401
                       rescale_batch)
 from .fault_injection import (DeviceLostError, FaultInjector,  # noqa: F401
                               FaultPlan, TransientDeviceError)
 from .fault_tolerance import (FaultToleranceController, FTConfig,  # noqa: F401
                               RetryPolicy, StragglerDetector, WorkerState)
+from .transport import SweepServer  # noqa: F401

@@ -7,8 +7,8 @@ layout, and so the name ``repro.service`` can never again be confused
 with the unrelated LLM token-serving scaffolding that now lives in
 :mod:`repro.launch.token_serve`)."""
 
-from .core.service import (CancelledError, SweepRequest,  # noqa: F401
-                           SweepService, Ticket, main)
+from .core.service import (CancelledError, ServiceClosedError,  # noqa: F401
+                           SweepRequest, SweepService, Ticket, main)
 
 if __name__ == "__main__":      # pragma: no cover
     import sys

@@ -207,6 +207,25 @@ class TestHypervolume:
         with pytest.raises(ValueError):
             pareto.hypervolume([[1.0, 2.0]], [3.0, 3.0, 3.0])
 
+    def test_exact_slicer_bounded_above_1000_points_at_3d(self):
+        """d>=3 fronts beyond HV_EXACT_MAX_POINTS non-dominated points
+        must raise a clear error instead of silently hanging in the
+        exponential slicer; d<=2 sweeps stay unbounded."""
+        n = pareto.HV_EXACT_MAX_POINTS + 100
+        t = np.linspace(0.01, 0.99, n)
+        shell3 = np.stack([t, 1.0 - t, 1.0 + np.cos(7.0 * t)], axis=1)
+        assert pareto.non_dominated_mask(shell3).sum() > \
+            pareto.HV_EXACT_MAX_POINTS
+        with pytest.raises(ValueError, match="exceeds the exact"):
+            pareto.hypervolume(shell3, [3.0, 3.0, 3.0])
+        # Dominated bulk does not count against the bound.
+        bulk = np.concatenate([shell3[:4],
+                               np.full((n, 3), 2.5)], axis=0)
+        assert pareto.hypervolume(bulk, [3.0, 3.0, 3.0]) > 0.0
+        # 2-D stays an O(n log n) sweep with no cap.
+        shell2 = np.stack([t, 1.0 - t], axis=1)
+        assert pareto.hypervolume(shell2, [2.0, 2.0]) > 0.0
+
 
 class TestLargeGridPreCull:
     """The sampled dominance-filter pre-cull in pareto_front (engaged

@@ -22,8 +22,9 @@ import numpy as np
 import pytest
 
 from repro.core import pareto, stream, sweep
-from repro.core.service import (CancelledError, SweepRequest, SweepService,
-                                _fusable, _fused_request)
+from repro.core.service import (CancelledError, ServiceClosedError,
+                                SweepRequest, SweepService, _fusable,
+                                _fused_request)
 from repro.runtime import (AdmissionQueue, BackpressureError, Deadline,
                            FaultInjector, FaultPlan)
 
@@ -334,6 +335,98 @@ class TestBackpressure:
             ra = ta.result(timeout=600)
             tb.result(timeout=600)
         _assert_bitwise(ra, solo)
+
+
+class TestIdempotentSubmit:
+    def test_same_client_id_returns_same_ticket(self, solo):
+        with SweepService() as svc:
+            t1 = svc.submit(_request(), client_id="cid-1")
+            t2 = svc.submit(_request(), client_id="cid-1")
+            assert t1 is t2
+            res = t2.result(timeout=600)
+            counters = svc.health()["counters"]
+        _assert_bitwise(res, solo)
+        assert counters["deduped"] == 1
+        assert counters["admitted"] == 1
+        assert counters["executions"] == 1
+
+    def test_same_client_id_different_request_rejected(self):
+        with SweepService() as svc:
+            svc.pause()
+            svc.submit(_request(), client_id="cid-2")
+            with pytest.raises(ValueError, match="already used"):
+                svc.submit(_request(top_k=TOP_K + 1), client_id="cid-2")
+
+    def test_rejected_submit_does_not_burn_the_client_id(self):
+        with SweepService(capacity=1) as svc:
+            svc.pause()
+            svc.submit(_request())
+            with pytest.raises(BackpressureError):
+                svc.submit(_request(top_k=2), client_id="cid-3")
+            svc.resume()
+            svc.tickets()[0].result(timeout=600)
+            # The id must be reusable: the rejection rolled back its
+            # reservation instead of poisoning future submits.
+            t = svc.submit(_request(top_k=2), client_id="cid-3")
+            t.result(timeout=600)
+
+    def test_finished_request_recovered_with_result(self, tmp_path,
+                                                    solo):
+        """A DONE request journals its result; a fresh service over the
+        same spool re-attaches the idempotent client id to the finished
+        ticket without re-executing."""
+        spool = str(tmp_path / "spool")
+        with SweepService(spool_dir=spool) as svc:
+            first = svc.submit(_request(), client_id="cid-4")
+            r1 = first.result(timeout=600)
+        with SweepService(spool_dir=spool) as svc2:
+            counters = svc2.health()["counters"]
+            assert counters["recovered_finished"] == 1
+            t = svc2.submit(_request(), client_id="cid-4")
+            assert t.done() and t.state == "done"
+            r2 = t.result(timeout=10)
+            assert svc2.health()["counters"]["executions"] == 0
+        _assert_bitwise(r1, solo)
+        _assert_bitwise(r2, solo)
+
+    def test_tenant_and_priority_round_trip(self):
+        req = _request(tenant="alice", priority=3).normalized()
+        clone = SweepRequest.from_json(
+            json.loads(json.dumps(req.to_json())))
+        assert clone.tenant == "alice" and clone.priority == 3
+        assert clone == req
+
+
+class TestServiceShutdown:
+    def test_queued_ticket_fails_fast_when_service_closes(self):
+        """`Ticket.result()` must never hang on a ticket nothing will
+        ever finish: closing the service fails leftovers with
+        ServiceClosedError instead of leaving waiters blocked."""
+        svc = SweepService()
+        svc.pause()
+        t = svc.submit(_request())
+        svc.close(drain=False)
+        with pytest.raises(ServiceClosedError, match="service closed"):
+            t.result(timeout=30)
+        assert t.done()
+
+    def test_closed_queued_ticket_resumes_on_restarted_spool(self,
+                                                             tmp_path,
+                                                             solo):
+        """The fail-fast close keeps the journal state pre-shutdown, so
+        a service restarted over the same spool still recovers and
+        finishes the request."""
+        spool = str(tmp_path / "spool")
+        svc = SweepService(spool_dir=spool)
+        svc.pause()
+        t = svc.submit(_request())
+        svc.close(drain=False)
+        with pytest.raises(ServiceClosedError):
+            t.result(timeout=30)
+        with SweepService(spool_dir=spool) as svc2:
+            assert svc2.health()["counters"]["recovered"] == 1
+            res = svc2.tickets()[0].result(timeout=600)
+        _assert_bitwise(res, solo)
 
 
 class TestDeadlinesAndCancel:

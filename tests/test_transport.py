@@ -1,0 +1,329 @@
+"""Networked sweep service: framing, reconnect, idempotency, streaming.
+
+The wire path (`repro.runtime.transport.SweepServer` +
+`repro.core.client.SweepClient`) must add *zero* semantics on top of
+the in-process service: a networked result decodes bitwise-identical
+to a solo `stream_grid` run, a retried submit after a dropped
+connection (or a full server SIGKILL + restart over the same spool)
+attaches to the existing ticket instead of executing twice, and
+overload rejections carry the same `BackpressureError` fields the
+in-process API raises — queue depth, capacity, tenant, retry-after.
+"""
+
+import json
+import os
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import stream
+from repro.core.client import RemoteError, SweepClient
+from repro.core.service import SweepRequest, SweepService
+from repro.runtime import BackpressureError, SweepServer
+from repro.runtime import transport
+
+# Two chunks of 97 over 192 configs: enough steps that the progress
+# stream emits at least one consistent prefix snapshot before the
+# final frame.
+GRID = dict(
+    agg_nodes=("7nm", "16nm"),
+    sensor_nodes=("7nm", "16nm"),
+    detnet_fps=tuple(float(f) for f in range(5, 65, 5)),
+    keynet_fps=(30.0, 45.0),
+    num_cameras=(2.0, 4.0),
+)
+CHUNK = 97
+TOP_K = 4
+
+
+def _request(**kw):
+    kw.setdefault("grid", GRID)
+    kw.setdefault("track", "all")
+    kw.setdefault("chunk_size", CHUNK)
+    kw.setdefault("top_k", TOP_K)
+    return SweepRequest(**kw)
+
+
+def _assert_bitwise(res, ref):
+    assert res.min_val == ref.min_val
+    assert res.min_idx == ref.min_idx
+    assert res.finite_counts == ref.finite_counts
+    assert np.array_equal(res.topk_idx, ref.topk_idx)
+    assert np.array_equal(res.topk_val, ref.topk_val)
+    assert np.array_equal(res.front_indices, ref.front_indices)
+    assert np.array_equal(res.front_values, ref.front_values)
+
+
+# ---------------------------------------------------------------------------
+# Framing and addressing (no server)
+# ---------------------------------------------------------------------------
+
+
+class TestFraming:
+    def _pair(self):
+        return socket.socketpair()
+
+    def test_round_trip_including_non_finite(self):
+        a, b = self._pair()
+        try:
+            msg = {"op": "x", "v": [1.5, float("nan"), float("inf")],
+                   "s": "naïve"}
+            a.sendall(transport.encode_frame(msg))
+            out = transport.read_frame(b)
+            assert out["op"] == "x" and out["s"] == "naïve"
+            assert out["v"][0] == 1.5
+            assert np.isnan(out["v"][1]) and np.isinf(out["v"][2])
+        finally:
+            a.close(), b.close()
+
+    def test_clean_eof_returns_none(self):
+        a, b = self._pair()
+        a.close()
+        try:
+            assert transport.read_frame(b) is None
+        finally:
+            b.close()
+
+    def test_torn_frame_raises_connection_error(self):
+        a, b = self._pair()
+        try:
+            frame = transport.encode_frame({"op": "x"})
+            a.sendall(frame[: len(frame) - 2])
+            a.close()
+            with pytest.raises(ConnectionError):
+                transport.read_frame(b)
+        finally:
+            b.close()
+
+    def test_oversized_announcement_rejected_before_allocation(self):
+        a, b = self._pair()
+        try:
+            a.sendall(transport._LEN.pack(2 ** 31))
+            with pytest.raises(ConnectionError, match="cap"):
+                transport.read_frame(b, max_frame=1024)
+        finally:
+            a.close(), b.close()
+
+    def test_encode_rejects_oversized_payload(self):
+        with pytest.raises(ValueError, match="exceeds"):
+            transport.encode_frame(
+                {"blob": "x" * (transport.MAX_FRAME + 1)})
+
+    def test_parse_address(self):
+        assert transport.parse_address("127.0.0.1:9000") == \
+            ("tcp", "127.0.0.1", 9000)
+        assert transport.parse_address(":9000") == \
+            ("tcp", "127.0.0.1", 9000)
+        assert transport.parse_address("/tmp/x.sock") == \
+            ("unix", "/tmp/x.sock", None)
+        assert transport.parse_address("./rel.sock") == \
+            ("unix", "./rel.sock", None)
+
+
+# ---------------------------------------------------------------------------
+# Live server over a Unix socket (one service per module — compile once)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served(tmp_path_factory):
+    sock = str(tmp_path_factory.mktemp("net") / "svc.sock")
+    svc = SweepService(capacity=8, snapshot_every_s=0.0)
+    svc.set_tenant("capped", weight=1.0, max_pending=1)
+    server = SweepServer(svc, unix_path=sock, heartbeat_s=0.1,
+                         own_service=True).start()
+    yield server
+    server.close(drain=False, timeout=10.0)
+
+
+@pytest.fixture(scope="module")
+def solo():
+    return stream.stream_grid(**GRID, track="all", chunk_size=CHUNK,
+                              top_k=TOP_K)
+
+
+@pytest.fixture()
+def client(served):
+    with SweepClient(served.address, reconnect_timeout_s=10.0) as cli:
+        yield cli
+
+
+class TestNetworkedService:
+    def test_ping_and_health(self, client):
+        out = client.ping()
+        assert out["pong"] is True
+        assert out["protocol"] == transport.PROTOCOL
+        assert "counters" in client.health()
+
+    def test_result_is_bitwise_identical_with_snapshots(self, client,
+                                                        solo):
+        snaps = []
+        t = client.submit(_request())
+        res = t.result(timeout=600, on_progress=snaps.append)
+        _assert_bitwise(res, solo)
+        assert not res.partial
+        assert len(snaps) >= 1
+        fracs = [s["fraction_complete"] for s in snaps]
+        assert fracs == sorted(fracs)          # consistent prefix only
+        assert all(0.0 < f <= 1.0 for f in fracs)
+        assert all("best" in s and s["partial"] for s in snaps)
+
+    def test_resubmit_same_client_id_dedupes(self, client):
+        t1 = client.submit(_request(), client_id="idem-1")
+        t2 = client.submit(_request(), client_id="idem-1")
+        assert t1.id == t2.id
+        res1 = t1.result(timeout=600)
+        res2 = t2.result(timeout=600)
+        _assert_bitwise(res1, res2)
+        assert client.health()["counters"]["deduped"] >= 1
+
+    def test_same_client_id_different_request_rejected(self, client):
+        client.submit(_request(), client_id="idem-2")
+        with pytest.raises(ValueError, match="already used"):
+            client.submit(_request(top_k=TOP_K + 1),
+                          client_id="idem-2")
+
+    def test_unknown_ticket_is_not_found(self, client):
+        with pytest.raises(RemoteError) as ei:
+            client.status("nope-404")
+        assert ei.value.kind == "not_found"
+
+    def test_unknown_op_is_bad_request(self, served):
+        s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        s.connect(served.address)
+        try:
+            s.sendall(transport.encode_frame({"op": "frobnicate",
+                                              "rid": "r1"}))
+            out = transport.read_frame(s)
+            assert out["error"] == "bad_request"
+            assert out["rid"] == "r1"
+        finally:
+            s.close()
+
+    def test_backpressure_fields_survive_the_wire(self, client,
+                                                  served):
+        served.service.pause()
+        try:
+            # tenant "capped" allows one pending request; the second
+            # must reject naming the tenant with a retry hint.
+            ok = client.submit(_request(tenant="capped"),
+                               client_id="bp-1")
+            with pytest.raises(BackpressureError) as ei:
+                client.submit(_request(tenant="capped",
+                                       chunk_size=CHUNK + 3),
+                              client_id="bp-2")
+            err = ei.value
+            assert err.tenant == "capped"
+            assert err.queue_depth == 1 and err.capacity == 1
+            assert err.retry_after_s is not None
+            assert "retry after" in str(err)
+            client.cancel(ok.id)
+        finally:
+            served.service.resume()
+
+    def test_client_reconnects_transparently(self, client):
+        assert client.ping()["pong"] is True
+        # Sever the connection behind the client's back; the next call
+        # must reconnect and succeed without surfacing an error.
+        client._sock.shutdown(socket.SHUT_RDWR)
+        client._sock.close()
+        assert client.ping()["pong"] is True
+        assert client.counters["reconnects"] >= 2
+
+    def test_watch_timeout_is_a_timeout_not_a_disconnect(self, client,
+                                                         served):
+        served.service.pause()
+        try:
+            t = client.submit(_request(chunk_size=CHUNK + 5),
+                              client_id="slow-1")
+            with pytest.raises(TimeoutError):
+                t.result(timeout=0.3)
+            # The connection survived: an immediate ping reuses it.
+            before = client.counters["reconnects"]
+            client.ping()
+            assert client.counters["reconnects"] == before
+            client.cancel(t.id)
+        finally:
+            served.service.resume()
+
+
+# ---------------------------------------------------------------------------
+# Chaos: SIGKILL the listening server mid-request (the chaos gate)
+# ---------------------------------------------------------------------------
+
+
+class TestServerKillReconnect:
+    """SIGKILL a listening server while a connected client waits on a
+    result; a fresh server over the same spool + socket must let the
+    client reconnect, dedupe its idempotent resubmit onto the recovered
+    ticket, resume from the checkpoint and deliver the bitwise solo
+    answer."""
+
+    @staticmethod
+    def _start_server(sock_path: str, spool: str):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=1")
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src")]
+            + env.get("PYTHONPATH", "").split(os.pathsep))
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.service",
+             "--unix", sock_path, "--spool", spool,
+             "--checkpoint-every-steps", "1"],
+            env=env, stdout=subprocess.PIPE,
+            stderr=subprocess.DEVNULL, text=True)
+        ready = json.loads(proc.stdout.readline())
+        assert ready["listening"] == sock_path, ready
+        return proc
+
+    def test_kill_reconnect_dedupe_bitwise(self, tmp_path, solo):
+        sock_path = str(tmp_path / "svc.sock")
+        spool = str(tmp_path / "spool")
+        server_a = self._start_server(sock_path, spool)
+        cli = SweepClient(sock_path, reconnect_timeout_s=240.0,
+                          heartbeat_grace_s=8.0)
+        ticket = cli.submit(_request(), client_id="chaos-1")
+        first_id = ticket.id
+        seen = {"frac": 0.0}
+        box = {}
+
+        def wait_result():
+            try:
+                box["res"] = ticket.result(
+                    timeout=600,
+                    on_progress=lambda s: seen.__setitem__(
+                        "frac", s["fraction_complete"]))
+            except BaseException as e:     # surfaced by the assert
+                box["err"] = e
+
+        th = threading.Thread(target=wait_result)
+        th.start()
+        deadline = time.monotonic() + 300
+        while seen["frac"] == 0.0 and th.is_alive() \
+                and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert seen["frac"] > 0.0, "no progress before kill"
+        server_a.kill()                    # SIGKILL: no drain, no close
+        server_a.wait(30)
+        server_b = self._start_server(sock_path, spool)
+        try:
+            th.join(600)
+            assert "err" not in box, repr(box.get("err"))
+            res = box["res"]
+            # Idempotent dedupe: the re-attach resubmit landed on the
+            # journal-recovered ticket, not a new execution.
+            assert ticket.id == first_id
+            assert res.stats["resumed_from_step"] > 0
+            _assert_bitwise(res, solo)
+            assert cli.counters["reconnects"] >= 2
+        finally:
+            cli.close()
+            server_b.send_signal(signal.SIGTERM)
+            server_b.wait(60)

@@ -17,6 +17,9 @@ Emits ``name,value,derived`` CSV rows:
   * scenario_bench — session scenario engine: closed-form oracles +
                     10^6 (config x trace) streaming throughput over the
                     battery/thermal channels (BENCH_scenario.json)
+  * service_bench — worker-pool scale-out: 1/2/4-worker throughput at
+                    10^7 configs + p50/p95 ticket latency under 8
+                    tenants, bitwise-anchored (BENCH_service.json)
 
 ``--smoke`` runs the fast CI gate instead: a sequence of *named steps*
 (tiny grids, hard asserts), each bounded by a per-step SIGALRM timeout
@@ -44,7 +47,14 @@ the client to reconnect, dedupe its idempotent resubmit onto the
 recovered ticket and decode a bitwise-identical result; and
 ``net-fairness`` asserts the 1:3 weight share under sustained
 overload, priority aging (no starvation), and wire-carried
-backpressure fields (depth, capacity, tenant, retry-after).
+backpressure fields (depth, capacity, tenant, retry-after);
+``net-scaleout`` serves a watched request through a 2-process worker
+pool behind an HMAC-authenticated server — bitwise parity, >= 2
+leased parts folded, per-chunk deltas on the wire, bad tokens
+rejected before parsing; and ``worker-kill-reclaim`` SIGKILLs one of
+three live workers mid-lease and requires the survivors to reclaim
+the orphaned lease (attempt >= 2) and drain to the bitwise solo
+answer.
 Perf-path *and* resilience regressions fail CI, not just benchmarks.
 """
 
@@ -111,7 +121,7 @@ def dosc_advisor_rows():
 
 SUITES = ["power_tables", "rbe_roofline", "tpu_roofline", "kernel_bench",
           "dosc_advisor", "sweep_bench", "pareto_bench", "stream_bench",
-          "scenario_bench"]
+          "scenario_bench", "service_bench"]
 
 
 def _smoke_stream_parity(ctx):
@@ -588,6 +598,132 @@ def _smoke_net_fairness(ctx):
     ]
 
 
+def _smoke_net_scaleout(ctx):
+    """The scale-out gate: a SweepService with a 2-process worker pool
+    behind an HMAC-authenticated SweepServer must serve a watched
+    request bitwise-identical to the solo run, fold >= 2 leased parts,
+    stream per-chunk deltas after the first full snapshot, and reject
+    a bad token before parsing any frame."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.core import stream
+    from repro.core.client import AuthenticationError, SweepClient
+    from repro.core.service import SweepRequest, SweepService
+    from repro.runtime import SweepServer
+
+    grid_kw = ctx["grid_kw"]
+    req = SweepRequest(grid=grid_kw, track="all", chunk_size=31,
+                       scan_chunks=1, top_k=4)
+    ref = stream.stream_grid(**grid_kw, track="all", chunk_size=31,
+                             scan_chunks=1, top_k=4)
+    with tempfile.TemporaryDirectory(prefix="smoke_scaleout_") as tmp:
+        svc = SweepService(capacity=8, snapshot_every_s=0.0, workers=2,
+                           spool_dir=f"{tmp}/spool")
+        with SweepServer(svc, unix_path=f"{tmp}/svc.sock",
+                         own_service=True, heartbeat_s=0.1,
+                         auth_token="smoke-secret") as server:
+            try:
+                with SweepClient(server.address, auth="bad-token") as bad:
+                    bad.ping()
+                raise AssertionError("bad auth token was accepted")
+            except AuthenticationError:
+                pass
+            assert server.counters["auth_failures"] >= 1
+            with SweepClient(server.address,
+                             auth="smoke-secret") as cli:
+                snaps: list = []
+                t = cli.submit(req, client_id="smoke-scaleout-1")
+                res = t.result(timeout=600,
+                               on_progress=snaps.append)
+                tr = cli.health()["transport"]
+            assert svc.counters["pooled_executions"] == 1, svc.counters
+            assert res.stats["n_parts"] >= 2, res.stats
+            assert res.stats["watch_wire_bytes"] > 0, res.stats
+            assert tr["watch_delta_bytes"] > 0, tr
+            assert all(s["fraction_complete"] <=
+                       s2["fraction_complete"] for s, s2 in
+                       zip(snaps, snaps[1:])), "snapshots regressed"
+        assert res.min_val == ref.min_val and \
+            res.min_idx == ref.min_idx, "pooled argmin drifted"
+        assert np.array_equal(res.topk_idx, ref.topk_idx) and \
+            np.array_equal(res.topk_val, ref.topk_val), \
+            "pooled top-k drifted"
+        assert np.array_equal(res.front_indices, ref.front_indices) \
+            and np.array_equal(res.front_values, ref.front_values), \
+            "pooled front drifted"
+    return [("smoke.net_scaleout", 1.0,
+             f"2-worker pool behind auth'd server: "
+             f"{int(res.stats['n_parts'])} parts folded bitwise, "
+             f"deltas on the wire")]
+
+
+def _smoke_worker_kill_reclaim(ctx):
+    """The reclaim gate: SIGKILL one live worker of a pool mid-lease;
+    the survivors must reclaim the orphaned lease after its heartbeat
+    expires (attempt >= 2) and drain the job to the bitwise solo
+    answer."""
+    import os
+    import signal
+    import tempfile
+
+    import numpy as np
+
+    from repro.core import stream
+    from repro.core.service import SweepRequest
+    from repro.runtime import workers as wk
+
+    grid_kw = ctx["grid_kw"]
+    req = SweepRequest(grid=grid_kw, track="all", chunk_size=31,
+                       scan_chunks=1, top_k=4)
+    ref = stream.stream_grid(**grid_kw, track="all", chunk_size=31,
+                             scan_chunks=1, top_k=4)
+    with tempfile.TemporaryDirectory(prefix="smoke_reclaim_") as spool:
+        handle = wk.dispatch_job(spool, req, n_leases=6,
+                                 checkpoint_every_steps=1)
+        with wk.WorkerPool(spool, 3, ttl_s=2.0, respawn=False) as pool:
+            victim = None
+            deadline = time.time() + 240
+            while victim is None and time.time() < deadline:
+                st = handle.poll()
+                if st["done"]:
+                    break
+                for ls in st["leases"]:
+                    if ls["state"] == "leased" \
+                            and ls["owner"] in pool.pids():
+                        victim = int(ls["owner"])
+                        break
+                time.sleep(0.02)
+            assert victim is not None, "no worker claimed a lease"
+            os.kill(victim, signal.SIGKILL)
+            deadline = time.time() + 240
+            while time.time() < deadline:
+                st = handle.poll()
+                assert not st["failed"], st["failed"]
+                if st["done"]:
+                    break
+                time.sleep(0.1)
+            st = handle.poll()
+            assert st["done"], f"job did not drain: {st['states']}"
+        attempts = max(int(ls["attempt"]) for ls in st["leases"])
+        assert attempts >= 2, \
+            "killed worker's lease was never reclaimed"
+        res = handle.result()
+        assert res.min_val == ref.min_val and \
+            res.min_idx == ref.min_idx, "reclaimed argmin drifted"
+        assert np.array_equal(res.topk_idx, ref.topk_idx) and \
+            np.array_equal(res.topk_val, ref.topk_val), \
+            "reclaimed top-k drifted"
+        assert np.array_equal(res.front_indices, ref.front_indices) \
+            and np.array_equal(res.front_values, ref.front_values), \
+            "reclaimed front drifted"
+    return [("smoke.worker_kill_reclaim", 1.0,
+             f"worker SIGKILL -> lease reclaimed (max attempt "
+             f"{attempts}) -> {int(res.stats['n_parts'])} parts folded "
+             f"bitwise")]
+
+
 #: The named, individually-timed smoke steps, in dependency order
 #: (``stream_parity`` seeds the shared dense reference).
 SMOKE_STEPS = [
@@ -602,6 +738,8 @@ SMOKE_STEPS = [
     ("service", _smoke_service),
     ("net-kill-reconnect", _smoke_net_kill_reconnect),
     ("net-fairness", _smoke_net_fairness),
+    ("net-scaleout", _smoke_net_scaleout),
+    ("worker-kill-reclaim", _smoke_worker_kill_reclaim),
 ]
 
 

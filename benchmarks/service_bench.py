@@ -1,0 +1,184 @@
+"""Worker-pool scale-out: service throughput scaling + ticket latency.
+
+    PYTHONPATH=src python -m benchmarks.service_bench
+
+Measures the sweep service's horizontal scale-out path
+(`SweepService(workers=N)` dispatching onto the chunk-range lease
+board of `repro.runtime.workers`) at 10^7 configurations for 1 / 2 / 4
+worker processes:
+
+* aggregate throughput (`configs_per_s`) of one large pooled job per
+  worker count, plus the wall-clock speedup of 4 workers over 1;
+* submit-to-result ticket latency (p50 / p95) under 8 concurrent
+  tenants, each submitting its own ~10^5-config job through the
+  multi-tenant admission queue;
+* the exactness anchor: every pooled fold must be bitwise-identical
+  to a solo in-process `stream_grid` run of the same grid — scaling
+  out must change *nothing* but the wall clock.
+
+Scaling is physical, so the snapshot records ``host_cores``: the
+``speedup_4v1 >= 2.5`` gate is asserted only when the host actually
+has >= 4 cores to scale onto (a single-core container runs the same
+benchmark honestly and records ~1x).  Bitwise parity is asserted
+unconditionally.  Emits ``name,value,derived`` rows and snapshots
+``BENCH_service.json`` at the repo root.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import threading
+import time
+
+import numpy as np
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_service.json"
+
+from benchmarks.stream_bench import _grid_for  # noqa: E402
+
+#: The scaling workload (~10^7 configs, the stream-bench grid).
+N_BIG = 10_000_000
+WORKER_COUNTS = (1, 2, 4)
+N_TENANTS = 8
+#: Gate: 4 workers must beat 1 worker by this factor on hosts with
+#: enough cores for the ratio to be physical.
+MIN_SPEEDUP_4V1 = 2.5
+
+
+def _bitwise_equal(res, ref) -> bool:
+    return (res.min_val == ref.min_val
+            and res.min_idx == ref.min_idx
+            and res.finite_counts == ref.finite_counts
+            and np.array_equal(res.topk_idx, ref.topk_idx)
+            and np.array_equal(res.topk_val, ref.topk_val)
+            and np.array_equal(res.front_indices, ref.front_indices)
+            and np.array_equal(res.front_values, ref.front_values))
+
+
+def _tenant_latencies(svc, grid: dict) -> dict:
+    """Submit one distinct ~10^5-config job per tenant from 8 threads
+    at once; return p50/p95 submit-to-result seconds."""
+    from repro.core.service import SweepRequest
+
+    lat = [0.0] * N_TENANTS
+    errs: list = []
+
+    def one(i: int) -> None:
+        # A private fps point per tenant: 8 distinct jobs, no fusion
+        # or dedupe shortcuts — each rides the pool on its own.
+        g = dict(grid, keynet_fps=(15.0 + i, 30.0))
+        t0 = time.perf_counter()
+        try:
+            svc.submit(SweepRequest(grid=g, tenant=f"tenant-{i}"),
+                       ).result(timeout=3600)
+        except BaseException as e:          # pragma: no cover
+            errs.append(e)
+        lat[i] = time.perf_counter() - t0
+
+    threads = [threading.Thread(target=one, args=(i,))
+               for i in range(N_TENANTS)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    if errs:
+        raise errs[0]
+    return {"ticket_p50_s": round(float(np.percentile(lat, 50)), 3),
+            "ticket_p95_s": round(float(np.percentile(lat, 95)), 3)}
+
+
+def rows():
+    from repro.core import stream
+    from repro.core.service import SweepRequest, SweepService
+
+    host_cores = os.cpu_count() or 1
+    big_grid = _grid_for(N_BIG)
+    small_grid = _grid_for(100_000)
+    warm_grid = _grid_for(0)                # the 10,880-config reference
+
+    # The exactness anchor: one solo in-process run of the big grid.
+    ref = stream.stream_grid(**big_grid, track="all")
+    n_big = int(ref.n_configs)
+
+    out = []
+    per_worker: dict = {}
+    bitwise_all = True
+    for w in WORKER_COUNTS:
+        svc = SweepService(capacity=64, snapshot_every_s=0.0, workers=w)
+        try:
+            # Warm the pool: the worker processes import jax and run a
+            # small job before the timed one, so process startup is not
+            # billed to the scaling curve.
+            svc.submit(SweepRequest(grid=warm_grid,
+                                    track="all")).result(timeout=3600)
+            t0 = time.perf_counter()
+            res = svc.submit(SweepRequest(grid=big_grid,
+                                          track="all")).result(
+                                              timeout=3600)
+            wall = time.perf_counter() - t0
+            ok = _bitwise_equal(res, ref)
+            bitwise_all = bitwise_all and ok
+            assert svc.counters["pooled_executions"] >= 2, svc.counters
+            per_worker[str(w)] = {
+                "wall_s": round(wall, 2),
+                "configs_per_s": round(n_big / wall, 1),
+                "n_parts": int(res.stats["n_parts"]),
+                "leases_reissued": int(svc.counters["leases_reissued"]),
+                "bitwise_identical": bool(ok),
+            }
+            per_worker[str(w)].update(
+                _tenant_latencies(svc, small_grid))
+        finally:
+            svc.close()
+        pw = per_worker[str(w)]
+        out.append((f"service.w{w}.configs_per_s",
+                    pw["configs_per_s"],
+                    f"{w}-worker pool over {n_big} configs, "
+                    f"{pw['n_parts']} leases folded"))
+        out.append((f"service.w{w}.ticket_p50_s", pw["ticket_p50_s"],
+                    f"{N_TENANTS} concurrent tenants, ~1e5 configs "
+                    f"each"))
+        out.append((f"service.w{w}.ticket_p95_s", pw["ticket_p95_s"],
+                    "tail of the same tenant burst"))
+
+    assert bitwise_all, \
+        "a pooled fold diverged from the solo run — scale-out broke " \
+        "exactness"
+
+    speedup = (per_worker["1"]["wall_s"] / per_worker["4"]["wall_s"])
+    gated = host_cores >= max(WORKER_COUNTS)
+    if gated:
+        assert speedup >= MIN_SPEEDUP_4V1, (
+            f"4-worker speedup {speedup:.2f}x < {MIN_SPEEDUP_4V1}x on a "
+            f"{host_cores}-core host")
+    out.append(("service.speedup_4v1", round(speedup, 3),
+                (f"gated >= {MIN_SPEEDUP_4V1}x ({host_cores} cores)"
+                 if gated else
+                 f"informational: only {host_cores} host core(s), "
+                 f"scaling is not physical here")))
+    out.append(("service.bitwise_identical", 1.0,
+                "every pooled fold == solo run, all worker counts"))
+
+    snapshot = {
+        "bench": "service_scaleout",
+        "n_configs": n_big,
+        "host_cores": host_cores,
+        "tenants": N_TENANTS,
+        "workers": per_worker,
+        "speedup_4v1": round(speedup, 3),
+        "speedup_gate": MIN_SPEEDUP_4V1,
+        "speedup_gated": gated,
+        "bitwise_identical": bitwise_all,
+    }
+    BENCH_JSON.write_text(json.dumps(snapshot, indent=2) + "\n")
+    return out
+
+
+if __name__ == "__main__":
+    print("name,value,derived")
+    for name, val, derived in rows():
+        print(f"{name},{val:.6g},{derived}")
+    print(f"(snapshot written to {BENCH_JSON})")

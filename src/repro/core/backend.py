@@ -584,6 +584,22 @@ def merge_device_carries(carry, k: int):
     return merged
 
 
+def stack_host_carries(carries: Sequence[dict]) -> dict:
+    """Stack N host carries (:func:`init_carry` layout) into the
+    ``(n, ...)`` leading-axis form :func:`merge_device_carries` folds.
+
+    This is the bridge the multi-process worker pool uses: each worker
+    persists its leased range's merged carry (already in the
+    device-count-independent serialization form), and the service
+    stacks the per-range carries exactly like per-device shards before
+    one associative, bitwise-exact merge.  Histogram-less and
+    histogram-carrying carries must not mix — the pytree structures
+    differ and ``tree_map`` would fail loudly, which is the right
+    outcome for a corrupted part set.
+    """
+    return jax.tree_util.tree_map(lambda *xs: np.stack(xs), *carries)
+
+
 def _hash_update(h, obj) -> None:
     """Recursively fold ``obj`` into hash ``h`` content-wise.
 

@@ -38,13 +38,16 @@ that outlasts ``reconnect_timeout_s`` raises ``ConnectionError``.
 
 from __future__ import annotations
 
+import queue as _queue
 import random
 import socket
+import threading
 import time
 import uuid
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence, Union
 
 from ..runtime.admission import BackpressureError
+from ..runtime.transport import AuthenticationError  # re-export
 from ..runtime import transport as T
 from . import service as CS
 from . import stream as ST
@@ -115,6 +118,7 @@ class RemoteTicket:
         in-process path."""
         deadline = (None if timeout is None
                     else time.monotonic() + timeout)
+        wire_before = self._client.counters.get("bytes_in", 0)
         while True:
             remaining = (None if deadline is None
                          else deadline - time.monotonic())
@@ -152,20 +156,39 @@ class RemoteTicket:
                     continue
                 raise
             self.state = final.get("state", self.state)
-            return ST.result_from_json(final["result"])
+            res = ST.result_from_json(final["result"])
+            # Wire bytes this wait cost (submit + watch stream + final
+            # frame) — the delta-streaming savings show up right here.
+            res.stats["watch_wire_bytes"] = float(
+                self._client.counters.get("bytes_in", 0) - wire_before)
+            return res
 
     def _on_event(self, on_progress):
+        held = {"snap": None}
+
         def handle(frame: dict) -> None:
             self.state = frame.get("state", self.state)
-            if on_progress is not None and "snapshot" in frame:
-                on_progress(frame["snapshot"])
+            if "snapshot" in frame:
+                held["snap"] = dict(frame["snapshot"])
+            elif "delta" in frame:
+                # Per-chunk delta frames: fold into the held baseline
+                # (the server always re-baselines a fresh watch, so
+                # the first frame is never a delta).
+                held["snap"] = ST.apply_result_delta(held["snap"],
+                                                     frame["delta"])
+            else:
+                return
+            if on_progress is not None:
+                on_progress(held["snap"])
         return handle
 
 
 class SweepClient:
     """Socket client for a :class:`~repro.runtime.transport.
     SweepServer` at ``address`` (``"host:port"`` for TCP, a filesystem
-    path for a Unix socket).
+    path for a Unix socket) — or a *sequence* of replica addresses,
+    in which case connection failures rotate through them (failover)
+    and :meth:`submit` can hedge across them (``hedge_s=``).
 
     One connection, created lazily and replaced transparently: every
     call retries connect/send/receive failures with capped exponential
@@ -173,30 +196,43 @@ class SweepClient:
     (then ``ConnectionError``).  ``heartbeat_grace_s`` bounds how long
     a blocking call waits without hearing *anything* (data, progress
     or heartbeat frames) before declaring the connection dead — keep
-    it a few multiples of the server's ``heartbeat_s``.  Thread-safe
-    per instance only if each thread uses its own client.
+    it a few multiples of the server's ``heartbeat_s``.  ``auth``
+    answers the server's HMAC challenge (see ``--auth-token``); a
+    missing or rejected token raises :class:`AuthenticationError`
+    immediately — credentials are never retried.  Thread-safe per
+    instance only if each thread uses its own client.
     """
 
-    def __init__(self, address: str,
+    def __init__(self, address: Union[str, Sequence[str]],
                  connect_timeout_s: float = 5.0,
                  reconnect_timeout_s: float = 60.0,
                  backoff_s: float = 0.05,
                  backoff_max_s: float = 2.0,
                  heartbeat_grace_s: float = 10.0,
                  max_frame: int = T.MAX_FRAME,
+                 auth: Optional[str] = None,
                  rng: Optional[random.Random] = None):
-        self.address = address
+        addrs = ([address] if isinstance(address, str)
+                 else list(address))
+        if not addrs:
+            raise ValueError("need at least one server address")
+        self.addresses = tuple(addrs)
+        self.address = addrs[0]
+        self._addr_i = 0
         self._connect_timeout_s = float(connect_timeout_s)
         self._reconnect_timeout_s = float(reconnect_timeout_s)
         self._backoff_s = float(backoff_s)
         self._backoff_max_s = float(backoff_max_s)
         self._grace_s = float(heartbeat_grace_s)
         self._max_frame = int(max_frame)
+        self._auth = auth
         self._rng = rng if rng is not None else random.Random()
         self._sock: Optional[socket.socket] = None
         self._rid = 0
         self._attempt = 0
-        self.counters = {"reconnects": 0, "retries": 0, "calls": 0}
+        self.counters = {"reconnects": 0, "retries": 0, "calls": 0,
+                         "failovers": 0, "hedged_submits": 0,
+                         "bytes_in": 0}
 
     # -- lifecycle -------------------------------------------------------
 
@@ -223,19 +259,74 @@ class SweepClient:
         return self._call({"op": "health"})["health"]
 
     def submit(self, request: CS.SweepRequest,
-               client_id: Optional[str] = None) -> RemoteTicket:
+               client_id: Optional[str] = None,
+               hedge_s: Optional[float] = None) -> RemoteTicket:
         """Submit one request; returns a :class:`RemoteTicket`.
         ``client_id`` defaults to a fresh ``uuid4`` — keep the
         returned ticket's id to re-attach from another process.
         Raises :class:`~repro.runtime.admission.BackpressureError`
         (with the server's retry-after hint) on overload — overload is
-        never retried blindly."""
+        never retried blindly.
+
+        ``hedge_s`` (with multiple replica addresses) *hedges* the
+        submit: the primary gets a head start of ``hedge_s`` seconds,
+        then each further replica is raced in ``hedge_s`` stagger; the
+        first answer wins.  All legs share one idempotent
+        ``client_id``, so the service executes at most once no matter
+        how many legs land — the loser is deduplicated, never run."""
         cid = client_id or f"cli-{uuid.uuid4().hex}"
-        out = self._call({"op": "submit",
-                          "request": request.to_json(),
-                          "client_id": cid})
+        payload = {"op": "submit", "request": request.to_json(),
+                   "client_id": cid}
+        if hedge_s is not None and len(self.addresses) > 1:
+            out = self._hedged_call(payload, float(hedge_s))
+        else:
+            out = self._call(payload)
         return RemoteTicket(self, request.normalized(), cid,
                             out["id"], out.get("state", "queued"))
+
+    def _hedged_call(self, payload: dict, hedge_s: float) -> dict:
+        """Race one call across every replica address with ``hedge_s``
+        stagger; first successful response wins, later legs are
+        abandoned (their submits deduplicate server-side).  Raises the
+        first leg error only when every leg failed."""
+        self.counters["hedged_submits"] += 1
+        results: "_queue.Queue" = _queue.Queue()
+        won = threading.Event()
+
+        def leg(addr: str, delay: float) -> None:
+            if delay > 0 and won.wait(delay):
+                results.put(("skipped", None))
+                return
+            try:
+                with SweepClient(
+                        addr, auth=self._auth,
+                        connect_timeout_s=self._connect_timeout_s,
+                        reconnect_timeout_s=self._reconnect_timeout_s,
+                        backoff_s=self._backoff_s,
+                        backoff_max_s=self._backoff_max_s,
+                        heartbeat_grace_s=self._grace_s,
+                        max_frame=self._max_frame) as c:
+                    results.put(("ok", c._call(dict(payload))))
+            except Exception as e:
+                results.put(("err", e))
+
+        threads = [threading.Thread(target=leg, args=(a, i * hedge_s),
+                                    daemon=True)
+                   for i, a in enumerate(self.addresses)]
+        for th in threads:
+            th.start()
+        first_err: Optional[Exception] = None
+        for _ in threads:
+            kind, val = results.get()
+            if kind == "ok":
+                won.set()
+                return val
+            if kind == "err" and first_err is None:
+                first_err = val
+        won.set()
+        raise first_err if first_err is not None else ConnectionError(
+            f"no replica of {self.addresses} answered the hedged "
+            f"submit")
 
     def status(self, ticket_id: str) -> dict:
         return self._call({"op": "status", "id": ticket_id})
@@ -261,8 +352,21 @@ class SweepClient:
             target = (host, port)
         s.settimeout(self._connect_timeout_s)
         s.connect(target)
+        try:
+            T.client_handshake(s, auth=self._auth)
+        except BaseException:
+            s.close()
+            raise
         s.settimeout(self._grace_s)
         return s
+
+    def _rotate(self) -> None:
+        """After a connection failure: point at the next replica
+        address (no-op with a single address)."""
+        if len(self.addresses) > 1:
+            self._addr_i = (self._addr_i + 1) % len(self.addresses)
+            self.address = self.addresses[self._addr_i]
+            self.counters["failovers"] += 1
 
     def _backoff_once(self) -> None:
         """One capped-exponential, full-jitter sleep (shared by the
@@ -304,7 +408,8 @@ class SweepClient:
                 self._sock.sendall(
                     T.encode_frame(dict(payload, rid=rid)))
                 while final is None:
-                    frame = T.read_frame(self._sock, self._max_frame)
+                    frame = T.read_frame(self._sock, self._max_frame,
+                                         self.counters)
                     if frame is None:
                         raise ConnectionError("server closed the "
                                               "connection")
@@ -312,12 +417,17 @@ class SweepClient:
                         continue        # stale frame from a prior call
                     if on_event is not None:
                         on_event(frame)
-                    if frame.get("hb") or "snapshot" in frame:
+                    if frame.get("hb") or "snapshot" in frame \
+                            or "delta" in frame:
                         continue        # liveness / streaming frames
                     final = frame
+            except AuthenticationError:
+                self._drop()
+                raise           # a bad credential never heals by retry
             except (ConnectionError, BrokenPipeError, socket.timeout,
                     OSError) as e:
                 self._drop()
+                self._rotate()
                 if time.monotonic() >= give_up:
                     raise ConnectionError(
                         f"could not reach sweep server at "

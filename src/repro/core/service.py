@@ -95,6 +95,16 @@ QUEUED, RUNNING, DONE, FAILED, CANCELLED = (
     "queued", "running", "done", "failed", "cancelled")
 
 
+class _PoolPreempted(Exception):
+    """Internal: shutdown hit a pooled execution — leave the tickets
+    unfinished (``close()`` journals them still-RUNNING) so recovery
+    over the same spool reattaches to the lease board."""
+
+
+class _PoolCancelled(Exception):
+    """Internal: every member of a pooled execution cancelled."""
+
+
 class CancelledError(RuntimeError):
     """The request was cancelled before any chunk was dispatched."""
 
@@ -183,6 +193,21 @@ class SweepRequest:
     @classmethod
     def from_json(cls, d: Mapping) -> "SweepRequest":
         return cls(**d).normalized()
+
+
+def plan_kwargs(req: SweepRequest) -> dict:
+    """The exact :func:`repro.core.stream.plan_stream` kwargs a request
+    resolves to.  Shared by the in-process executor and the worker-pool
+    processes (:mod:`repro.runtime.workers`) so both sides derive the
+    same plan — and therefore the same ``plan.signature`` — from one
+    journaled request."""
+    kw = dict(req.grid)
+    kw.update(chunk_size=req.chunk_size, top_k=req.top_k,
+              objectives=req.objectives, maximize=req.maximize,
+              track=req.track, constraints=req.constraints,
+              hist_bins=req.hist_bins, hist_ranges=req.hist_ranges,
+              backend=req.backend, scan_chunks=req.scan_chunks)
+    return kw
 
 
 def _request_fields(req: SweepRequest, kfields: tuple) -> tuple:
@@ -402,11 +427,19 @@ class SweepService:
                  poll_s: float = 0.05,
                  tenants: Optional[Mapping] = None,
                  aging_s: float = 30.0,
-                 snapshot_every_s: float = 0.5):
+                 snapshot_every_s: float = 0.5,
+                 workers: int = 0,
+                 worker_ttl_s: float = 10.0,
+                 lease_splits: Optional[int] = None):
+        self._own_spool = workers > 0 and spool_dir is None
+        if self._own_spool:
+            import tempfile
+            spool_dir = tempfile.mkdtemp(prefix="sweep-spool-")
         self.spool_dir = spool_dir
         self._queue = AdmissionQueue(capacity,
                                      tenants=dict(tenants or {}),
-                                     aging_s=aging_s)
+                                     aging_s=aging_s,
+                                     executors=max(1, int(workers)))
         self._snapshot_every_s = float(snapshot_every_s)
         self._fuse = bool(fuse)
         self._max_fuse = max(1, int(max_fuse))
@@ -440,11 +473,19 @@ class SweepService:
             "retries": 0, "restarts": 0, "chunks_reissued": 0,
             "elastic_replans": 0, "checkpoints_written": 0,
             "stragglers": 0, "step_timeouts": 0,
+            # Worker-pool counters (stay 0 without ``workers=``):
+            "pooled_executions": 0, "leases_reissued": 0,
         }
         if spool_dir is not None:
             os.makedirs(self._requests_dir, exist_ok=True)
             if recover:
                 self._recover()
+        self._pool = None
+        self._lease_splits = lease_splits
+        if workers > 0:
+            from ..runtime import workers as WK
+            self._pool = WK.WorkerPool(self.spool_dir, int(workers),
+                                       ttl_s=float(worker_ttl_s))
         self._worker = threading.Thread(target=self._run_worker,
                                         daemon=True,
                                         name="sweep-service-worker")
@@ -474,6 +515,11 @@ class SweepService:
                 time.sleep(self._poll_s)
         self._shutdown.set()
         self._worker.join(timeout)
+        if self._pool is not None:
+            self._pool.stop()
+            if self._own_spool:
+                import shutil
+                shutil.rmtree(self.spool_dir, ignore_errors=True)
         for t in self.tickets():
             if not t.done():
                 pre_state = t.state
@@ -583,7 +629,11 @@ class SweepService:
                           "hits": counters.pop("plan_hits"),
                           "misses": counters.pop("plan_misses")}
             running = sorted(self._running)
+        workers = (None if self._pool is None else
+                   {"n": self._pool.n, "alive": self._pool.alive(),
+                    "pids": self._pool.pids()})
         return {
+            "workers": workers,
             "alive": self._worker.is_alive()
             and not self._shutdown.is_set(),
             "paused": self._paused.is_set(),
@@ -742,13 +792,7 @@ class SweepService:
         """Resolve (or fetch) the content-signature-keyed plan — the
         LRU that keeps :func:`repro.core.backend.cached_step` hitting
         across requests for byte-identical jobs."""
-        kw = dict(req.grid)
-        kw.update(chunk_size=req.chunk_size, top_k=req.top_k,
-                  objectives=req.objectives, maximize=req.maximize,
-                  track=req.track, constraints=req.constraints,
-                  hist_bins=req.hist_bins, hist_ranges=req.hist_ranges,
-                  backend=req.backend, scan_chunks=req.scan_chunks)
-        plan = ST.plan_stream(**kw)
+        plan = ST.plan_stream(**plan_kwargs(req))
         with self._lock:
             cached = self._plans.get(plan.signature)
             if cached is not None:
@@ -839,19 +883,46 @@ class SweepService:
                 self.counters["fused_requests"] += len(members)
             for t in members:
                 self._running[t.id] = t
+        use_pool = (self._pool is not None
+                    and self._fault_injector is None
+                    and all(t.request.deadline_s is None
+                            for t in members))
+        if use_pool:
+            try:
+                fused.to_json()
+            except TypeError:
+                use_pool = False    # volatile request: run in-process
         try:
-            res = ST.stream_grid(
-                plan=plan, prefetch=self._prefetch,
-                checkpoint_dir=(self._ckpt_dir(plan.signature)
-                                if self.spool_dir is not None else None),
-                checkpoint_every_s=self._ckpt_every_s,
-                checkpoint_every_steps=self._ckpt_every_steps,
-                checkpoint_keep=self._ckpt_keep,
-                retry_policy=self._retry_policy,
-                fault_injector=self._fault_injector,
-                should_stop=should_stop, on_progress=on_progress,
-                on_snapshot=on_snapshot,
-                snapshot_every_s=self._snapshot_every_s)
+            if use_pool:
+                res = self._execute_pooled(fused, plan, should_stop,
+                                           cause, on_progress,
+                                           on_snapshot)
+            else:
+                res = ST.stream_grid(
+                    plan=plan, prefetch=self._prefetch,
+                    checkpoint_dir=(self._ckpt_dir(plan.signature)
+                                    if self.spool_dir is not None
+                                    else None),
+                    checkpoint_every_s=self._ckpt_every_s,
+                    checkpoint_every_steps=self._ckpt_every_steps,
+                    checkpoint_keep=self._ckpt_keep,
+                    retry_policy=self._retry_policy,
+                    fault_injector=self._fault_injector,
+                    should_stop=should_stop, on_progress=on_progress,
+                    on_snapshot=on_snapshot,
+                    snapshot_every_s=self._snapshot_every_s)
+        except _PoolPreempted:
+            # Shutdown mid-pooled-run: leave the tickets unfinished —
+            # close() fails them with journal state RUNNING, and a new
+            # service over this spool reattaches to the lease board.
+            return
+        except _PoolCancelled:
+            for t in members:
+                self._finish(t, CANCELLED,
+                             error=CancelledError(
+                                 f"request {t.id} cancelled during "
+                                 f"pooled execution"))
+            return
         except Exception as e:
             for t in members:
                 self._finish(t, FAILED, error=e)
@@ -883,6 +954,67 @@ class SweepService:
                 self._finish(t, DONE, result=out,
                              journal_state=(RUNNING if preempted
                                             else None))
+
+    def _execute_pooled(self, fused: SweepRequest, plan: ST.StreamPlan,
+                        should_stop, cause, on_progress,
+                        on_snapshot) -> ST.StreamResult:
+        """Run one (possibly fused) request on the worker pool: split
+        the flat-index space into chunk-range leases on the shared
+        spool, let the workers stream them, fold the parts into one
+        bitwise-exact result (:func:`repro.core.stream.merge_results`).
+        The coordinator only polls the lease board: it respawns dead
+        workers (whose leases are reclaimed from their own carry
+        checkpoints) and synthesizes progress snapshots from finished
+        parts."""
+        from ..runtime import workers as WK
+        handle = WK.dispatch_job(
+            self.spool_dir, fused, plan=plan,
+            n_leases=(self._lease_splits
+                      if self._lease_splits is not None
+                      else max(2 * self._pool.n, 4)),
+            checkpoint_every_steps=self._ckpt_every_steps,
+            prefetch=self._prefetch)
+        last_snap = 0.0
+        while True:
+            st = handle.poll()
+            if st["failed"]:
+                handle.cancel()
+                errs = "; ".join(
+                    f"lease {ls['i']} [{ls['start']}, {ls['stop']}): "
+                    f"{ls.get('error')}" for ls in st["failed"])
+                raise RuntimeError(f"pooled execution of "
+                                   f"{plan.signature[:12]} failed: {errs}")
+            if st["done"]:
+                break
+            if should_stop():
+                if cause["why"] == "cancel":
+                    handle.cancel()
+                    self._await_quiesce(handle)
+                    raise _PoolCancelled()
+                raise _PoolPreempted()
+            self._pool.ensure()
+            on_progress(float(st["fraction"]))
+            now = time.monotonic()
+            if now - last_snap >= self._snapshot_every_s:
+                last_snap = now
+                on_snapshot(handle.snapshot(st))
+            time.sleep(self._poll_s)
+        res = handle.result()
+        with self._lock:
+            self.counters["pooled_executions"] += 1
+            self.counters["leases_reissued"] += sum(
+                max(0, int(ls["attempt"]) - 1) for ls in st["leases"])
+        return res
+
+    def _await_quiesce(self, handle, timeout: float = 30.0) -> None:
+        """After a pooled cancel: wait (bounded) until no lease is
+        still leased — workers notice the cancel flag within one
+        heartbeat cycle and abort cooperatively."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if handle.poll()["states"].get("leased", 0) == 0:
+                return
+            time.sleep(self._poll_s)
 
     @staticmethod
     def _member_result(fused: SweepRequest, plan: ST.StreamPlan,
@@ -947,7 +1079,8 @@ def _result_summary(t: Ticket) -> dict:
 
 
 def _serve(svc: "SweepService", listen: Optional[str],
-           unix: Optional[str]) -> int:
+           unix: Optional[str],
+           auth_token: Optional[str] = None) -> int:
     """Networked mode: serve ``svc`` over TCP or a Unix socket until
     SIGTERM/SIGINT, then drain gracefully.  Prints one JSON ready line
     (``{"listening": <address>}``) once the socket is bound, so
@@ -957,13 +1090,14 @@ def _serve(svc: "SweepService", listen: Optional[str],
     from ..runtime.transport import SweepServer, parse_address
 
     if unix is not None:
-        server = SweepServer(svc, unix_path=unix, own_service=True)
+        server = SweepServer(svc, unix_path=unix, own_service=True,
+                             auth_token=auth_token)
     else:
         kind, host, port = parse_address(listen)
         if kind != "tcp":
             raise SystemExit(f"--listen wants HOST:PORT, got {listen!r}")
         server = SweepServer(svc, host=host, port=port,
-                             own_service=True)
+                             own_service=True, auth_token=auth_token)
     stop = threading.Event()
     for signum in (signal.SIGTERM, signal.SIGINT):
         signal.signal(signum, lambda *_: stop.set())
@@ -1011,10 +1145,29 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     metavar="NAME:WEIGHT[:MAX_PENDING]",
                     help="register a tenant fairness policy "
                          "(repeatable)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="spawn N worker processes over the spool and "
+                         "run eligible requests via chunk-range "
+                         "leasing (0 = in-process execution)")
+    ap.add_argument("--worker-ttl-s", type=float, default=10.0,
+                    help="lease heartbeat TTL: a worker silent this "
+                         "long is presumed dead and its range is "
+                         "reissued from its carry checkpoint")
+    ap.add_argument("--lease-splits", type=int, default=None,
+                    help="lease count per job (default 2x workers, "
+                         "min 4)")
+    ap.add_argument("--auth-token", default=None,
+                    help="shared secret for the socket handshake "
+                         "(clients must pass auth=; unauthenticated "
+                         "connections are rejected before any JSON "
+                         "is parsed)")
     args = ap.parse_args(argv)
 
     svc = SweepService(spool_dir=args.spool, capacity=args.capacity,
-                       checkpoint_every_steps=args.checkpoint_every_steps)
+                       checkpoint_every_steps=args.checkpoint_every_steps,
+                       workers=args.workers,
+                       worker_ttl_s=args.worker_ttl_s,
+                       lease_splits=args.lease_splits)
     for spec in args.tenant:
         parts = spec.split(":")
         svc.set_tenant(parts[0],
@@ -1022,7 +1175,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                        max_pending=(int(parts[2]) if len(parts) > 2
                                     else None))
     if args.listen or args.unix:
-        return _serve(svc, args.listen, args.unix)
+        return _serve(svc, args.listen, args.unix,
+                      auth_token=args.auth_token)
     try:
         tickets = svc.tickets()     # recovered work first
         if args.requests:

@@ -403,7 +403,83 @@ def _progress_snapshot(folded: int, n_total: int, front_vals, front_idx,
     return {"fraction_complete": (folded / n_total if n_total else 1.0),
             "front_size": int(front_vals.shape[0]),
             "partial": True,
-            "best": best}
+            "best": best,
+            # Running-front membership, rows sorted by flat index (the
+            # merge invariant).  A flat index's objective vector never
+            # changes, so the delta codec below can key front changes
+            # purely by index (entrant / evict records).
+            "front": {"i": [int(i) for i in front_idx],
+                      "v": [[float(x) for x in row]
+                            for row in front_vals]}}
+
+
+def result_delta_to_json(prev: Optional[Mapping],
+                         cur: Mapping) -> dict:
+    """Per-chunk *delta* between two consecutive progress snapshots.
+
+    The networked ``watch`` stream sends one full snapshot (the
+    baseline) and then only deltas: changed top-level scalars, changed
+    per-objective running-best records, and front entrant/evict
+    records keyed by flat index (a config's objective vector is
+    immutable, so membership changes are the whole story).  With
+    ``prev=None`` the delta is the full snapshot.
+    :func:`apply_result_delta` reconstructs ``cur`` exactly — the
+    round trip is pinned value-equal in the tests, and the *final*
+    result always travels through :func:`result_to_json`, so delta
+    streaming can never touch result exactness.
+    """
+    if prev is None:
+        return dict(cur)
+    out: dict = {}
+    for k in ("fraction_complete", "front_size", "partial"):
+        if prev.get(k) != cur.get(k):
+            out[k] = cur[k]
+    pb, cb = prev.get("best", {}), cur.get("best", {})
+    changed = {f: v for f, v in cb.items() if pb.get(f) != v}
+    if changed:
+        out["best"] = changed
+    gone = [f for f in pb if f not in cb]
+    if gone:
+        out["best_del"] = gone
+    pf = prev.get("front") or {"i": [], "v": []}
+    cf = cur.get("front") or {"i": [], "v": []}
+    pset = set(pf["i"])
+    add_i = [i for i in cf["i"] if i not in pset]
+    if add_i:
+        vmap = dict(zip(cf["i"], cf["v"]))
+        out["front_add"] = {"i": add_i, "v": [vmap[i] for i in add_i]}
+    dels = sorted(pset - set(cf["i"]))
+    if dels:
+        out["front_del"] = dels
+    return out
+
+
+def apply_result_delta(prev: Optional[Mapping],
+                       delta: Mapping) -> dict:
+    """Inverse of :func:`result_delta_to_json`: fold one delta into the
+    previous snapshot, reconstructing the full snapshot dict (rows
+    re-sorted by flat index — the snapshot invariant)."""
+    if prev is None:
+        return dict(delta)
+    cur = dict(prev)
+    for k in ("fraction_complete", "front_size", "partial"):
+        if k in delta:
+            cur[k] = delta[k]
+    best = dict(prev.get("best", {}))
+    best.update(delta.get("best", {}))
+    for f in delta.get("best_del", ()):
+        best.pop(f, None)
+    cur["best"] = best
+    pf = prev.get("front") or {"i": [], "v": []}
+    rows = dict(zip(pf["i"], pf["v"]))
+    for i in delta.get("front_del", ()):
+        rows.pop(i, None)
+    add = delta.get("front_add")
+    if add:
+        rows.update(zip(add["i"], add["v"]))
+    idx = sorted(rows)
+    cur["front"] = {"i": idx, "v": [rows[i] for i in idx]}
+    return cur
 
 
 # ---------------------------------------------------------------------------
@@ -770,6 +846,7 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                 retry_policy: Optional[RetryPolicy] = None,
                 fault_injector=None,
                 plan: Optional[StreamPlan] = None,
+                flat_range: Optional[tuple] = None,
                 should_stop=None,
                 on_progress=None,
                 on_snapshot=None,
@@ -844,7 +921,20 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
     :class:`StreamPlan` (see :func:`plan_stream`) — when given, the
     axis/objective/backend arguments above are ignored in its favor;
     a long-lived process reusing one plan object across calls is what
-    keeps the compiled chunk step cached.  ``should_stop`` is a
+    keeps the compiled chunk step cached.  ``flat_range=(start, stop)``
+    restricts the sweep to one contiguous slice of the flat-index
+    space — the unit of work a multi-process worker pool leases
+    (:mod:`repro.runtime.workers`): every reduction is exact over
+    ``[start, stop)``, the carry keeps the device-count-independent
+    serialization form, and :func:`merge_results` folds the per-range
+    results of a full tiling back into the bitwise single-process
+    answer.  Because the compiled step masks lanes only against the
+    *grid* end, ``stop`` must land on a dispatch boundary
+    (``(stop - start) % (chunk * scan_chunks * n_devices) == 0``)
+    unless it is the grid end itself — pin ``chunk_size`` and
+    ``scan_chunks`` explicitly when carving ranges.  ``stats`` gains
+    ``range_start``/``range_stop``, and ``fraction_complete`` (and
+    progress snapshots) are relative to the range.  ``should_stop`` is a
     zero-argument callable polled before every chunk dispatch (on the
     producer thread in the pipelined path): when it returns truthy the
     executor stops issuing work within one chunk, folds everything
@@ -854,12 +944,17 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
     so a later call resumes where the stop landed.  ``on_progress`` is
     called after each dispatch with the fraction of the grid issued so
     far (also from the producer thread; keep it cheap and
-    thread-safe).  ``on_snapshot`` is called (from the consumer
-    thread, at most every ``snapshot_every_s`` seconds) with a
-    JSON-able consistent progress summary over the folded contiguous
-    prefix — ``fraction_complete``, running per-objective best and
-    front size (see :func:`_progress_snapshot`) — the payload the
-    networked service streams to subscribed clients.
+    thread-safe) — and only after any checkpoint due for that step is
+    durably on disk, so every observed fraction is resumable: a kill
+    right after a progress event never restarts from before it.
+    ``on_snapshot`` is called (from the consumer thread, at most every
+    ``snapshot_every_s`` seconds) with a JSON-able consistent progress
+    summary over the folded contiguous prefix — ``fraction_complete``,
+    running per-objective best and front size (see
+    :func:`_progress_snapshot`) — the payload the networked service
+    streams to subscribed clients; snapshots obey the same durability
+    ordering (a step with a checkpoint due emits its snapshot only
+    after the checkpoint is on disk).
     """
     if plan is None:
         plan = plan_stream(
@@ -892,7 +987,27 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
     dev_list = list(plan.dev_list)
     n_dev = max(1, len(dev_list))
     per_step = chunk * scan * n_dev
-    n_steps = math.ceil(n_total / per_step)
+    if flat_range is None:
+        start0, stop0 = 0, n_total
+    else:
+        start0, stop0 = int(flat_range[0]), int(flat_range[1])
+        if not 0 <= start0 < stop0 <= n_total:
+            raise ValueError(
+                f"flat_range {flat_range} outside the grid "
+                f"[0, {n_total})")
+        if stop0 != n_total and (stop0 - start0) % per_step:
+            # The compiled step masks lanes only against the grid end
+            # (flat < n_total), so an interior stop must land on a
+            # dispatch boundary or the last dispatch would fold lanes
+            # belonging to the next range.
+            raise ValueError(
+                f"flat_range length {stop0 - start0} is not a multiple "
+                f"of the dispatch quantum {per_step} (chunk {chunk} x "
+                f"scan {scan} x {n_dev} device(s)) and stop != n_total "
+                f"({n_total}): pass chunk_size/scan_chunks explicitly "
+                f"and carve ranges on dispatch boundaries")
+    span = stop0 - start0
+    n_steps = math.ceil(span / per_step)
     prefetch = max(0, int(prefetch))
 
     t0 = time.perf_counter()
@@ -919,13 +1034,16 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
         state = {"carry": B.init_carry(spec),
                  "front_vals": np.empty((0, d)),
                  "front_idx": np.empty((0,), np.int64),
-                 "base": 0}
+                 "base": start0}
         mgr = None
         signature = ""
         if checkpoint_dir is not None:
             mgr = CheckpointManager(checkpoint_dir,
                                     keep=max(1, int(checkpoint_keep)))
-            signature = plan.signature
+            # Ranged runs suffix the signature so a lease's checkpoint
+            # can never restore into a different range of the same job.
+            signature = (plan.signature if flat_range is None else
+                         f"{plan.signature}:r{start0}-{stop0}")
             _resume_into(mgr, signature, state, counters, chunk)
 
         def write_checkpoint():
@@ -978,7 +1096,7 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
             nonlocal t_first, t_wait, t_host, t_dispatch, n_fallback
             nonlocal dispatched_flat
             base = state["base"]
-            if base >= n_total:     # resumed-from-complete: nothing left
+            if base >= stop0:       # resumed-from-complete: nothing left
                 return
             n_dev = max(1, len(dev_list))
             run = B.cached_step(spec, plan.backend, scan, n_dev,
@@ -995,7 +1113,7 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                 put = (lambda t: jax.device_put(t, dev_target))
             axvals_j = put(tuple(axis_vals))
             per_step = chunk * scan * n_dev
-            n_steps = -(-(n_total - base) // per_step)
+            n_steps = -(-(stop0 - base) // per_step)
             # Snapshot carry -> device: merged state on shard 0, fresh
             # inits on the rest (the merge is associative and exact, so
             # a snapshot restores onto any device count).  np.array
@@ -1087,12 +1205,31 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
 
             n_sub = n_dev * scan        # chunks folded per dispatch
 
-            def process(item):
+            def maybe_snapshot(covered):
+                # Emit a consistent progress snapshot over the folded
+                # prefix [start0, covered) if the cadence allows it.
+                if (on_snapshot is not None
+                        and time.perf_counter() - snap_t["last"]
+                        >= snapshot_every_s):
+                    # Fold the pending buffer first so the snapshot's
+                    # running front covers every survivor of the folded
+                    # prefix.
+                    merge()
+                    snap_t["last"] = time.perf_counter()
+                    on_snapshot(_progress_snapshot(
+                        covered - start0, span,
+                        front_vals, front_idx, objectives, sign))
+
+            def process(item, defer_snap=False):
                 # Survivor layout per dispatch: [device,][scan,] cap —
                 # both optional leading axes flatten device-major /
                 # scan-minor, which is exactly ascending chunk order
                 # (device di covers the scan contiguous chunks at
-                # start + di*scan*chunk).
+                # start + di*scan*chunk).  ``defer_snap`` suppresses
+                # the snapshot for steps with a checkpoint due: the
+                # driver re-emits it after the checkpoint is durable,
+                # so a watcher can never observe progress that a kill
+                # right after the frame would roll back past.
                 nonlocal buf_n, t_wait, t_host, t_first, n_fallback
                 start, surv = item
                 tw = time.perf_counter()
@@ -1120,17 +1257,8 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                         buf_n += len(fl)
                 if buf_n >= _MERGE_EVERY:
                     merge()
-                if (on_snapshot is not None
-                        and time.perf_counter() - snap_t["last"]
-                        >= snapshot_every_s):
-                    # Fold the pending buffer first so the snapshot's
-                    # running front covers every survivor of the folded
-                    # prefix [0, start + per_step).
-                    merge()
-                    snap_t["last"] = time.perf_counter()
-                    on_snapshot(_progress_snapshot(
-                        min(start + per_step, n_total), n_total,
-                        front_vals, front_idx, objectives, sign))
+                if not defer_snap:
+                    maybe_snapshot(min(start + per_step, stop0))
                 if t_first is None:
                     t_first = time.perf_counter() - t0
                 t_host += time.perf_counter() - th
@@ -1161,7 +1289,7 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                 nonlocal t_dispatch, dispatched_flat
                 start = base + si * per_step
                 dispatched_flat = max(dispatched_flat,
-                                      min(start + per_step, n_total))
+                                      min(start + per_step, stop0))
                 tstep = time.perf_counter()
                 if fault_injector is not None:
                     backoff = policy.backoff_s
@@ -1185,9 +1313,17 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                 if (policy.step_timeout_s is not None
                         and dur > policy.step_timeout_s):
                     counters["step_timeouts"] += 1.0
-                if on_progress is not None:
-                    on_progress(min(1.0, dispatched_flat / n_total))
                 return c, surv
+
+            def report_progress():
+                # Called by the drive loops *after* any checkpoint due
+                # for the step has been written, so with a step-cadence
+                # checkpoint every observed progress fraction is backed
+                # by a durable snapshot — a kill right after a progress
+                # event can never resume from before it.
+                if on_progress is not None:
+                    on_progress(min(1.0, (dispatched_flat - start0)
+                                    / span))
 
             def ckpt_due(si):
                 # Snapshot cadence, decided dispatch-side.  The last
@@ -1215,7 +1351,7 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                 state["carry"] = merged
                 state["front_vals"] = front_vals.copy()
                 state["front_idx"] = front_idx.copy()
-                state["base"] = min(base + (si + 1) * per_step, n_total)
+                state["base"] = min(base + (si + 1) * per_step, stop0)
 
             rebuild_filter()                # front/seed filter
             if prefetch == 0 or n_steps == 1:
@@ -1226,12 +1362,17 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                         ctl["halted"] = True
                         break
                     carry, surv = dispatch(si, carry)
-                    process((base + si * per_step, surv))
+                    due = ckpt_due(si)
+                    process((base + si * per_step, surv),
+                            defer_snap=due)
                     if si == 0 and n_steps > 1:
                         merge()
-                    if ckpt_due(si):
+                    if due:
                         commit_state(si, snapshot_carry(carry))
                         write_checkpoint()
+                        maybe_snapshot(min(base + (si + 1) * per_step,
+                                           stop0))
+                    report_progress()
             else:
                 # Async double-buffered pipeline: a producer thread
                 # drives the chunk chain (XLA releases the GIL while a
@@ -1277,13 +1418,14 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                                     ctl["halted"] = True
                                     break
                                 carry, surv = dispatch(si, carry)
+                                due = ckpt_due(si)
                                 if not put_or_stop(
                                         ("surv", base + si * per_step,
-                                         surv)):
+                                         surv, due)):
                                     break
                                 if si == 0:
                                     filter_ready.wait()
-                                if ckpt_due(si):
+                                if due:
                                     # Durability barrier: no later chunk
                                     # dispatches until the snapshot is
                                     # on disk, so a kill at step s can
@@ -1299,6 +1441,7 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                                     while not ckpt_done.wait(0.05):
                                         if stop.is_set():
                                             break
+                                report_progress()
                     except BaseException as e:  # pragma: no cover
                         box["err"] = e
                     finally:
@@ -1317,8 +1460,14 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
                             commit_state(item[1], item[2])
                             write_checkpoint()
                             ckpt_done.set()
+                            # The deferred snapshot for this step: the
+                            # checkpoint is durable, so the progress it
+                            # reports can no longer be rolled back.
+                            maybe_snapshot(min(base + (item[1] + 1)
+                                               * per_step, stop0))
                             continue
-                        process((item[1], item[2]))
+                        process((item[1], item[2]),
+                                defer_snap=item[3])
                         if first:
                             merge()
                             filter_ready.set()
@@ -1356,8 +1505,8 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
             # producer enqueues each survivor set before checking the
             # hook again), so the snapshot is the exact contiguous
             # prefix [0, base).
-            state["base"] = (min(dispatched_flat, n_total)
-                             if ctl["halted"] else n_total)
+            state["base"] = (min(dispatched_flat, stop0)
+                             if ctl["halted"] else stop0)
 
         def reissue_count():
             # Chunks dispatched past the snapshot when an incarnation
@@ -1413,23 +1562,28 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
     carry = state["carry"]
     front_vals = state["front_vals"]
     front_idx = state["front_idx"]
-    partial = int(state["base"]) < n_total
+    partial = int(state["base"]) < stop0
     stats = {
         "n_configs": float(n_total),
         "n_chunks": float(n_steps),
-        # Fraction of the flat-index space folded into this result —
-        # 1.0 for a complete sweep; after a cooperative halt
+        # Fraction of the (range's) flat-index space folded into this
+        # result — 1.0 for a complete sweep; after a cooperative halt
         # (should_stop / deadline) the reductions cover exactly the
-        # contiguous prefix [0, fraction_complete * n_configs).
-        "fraction_complete": (int(state["base"]) / n_total
-                              if n_total else 1.0),
+        # contiguous prefix [range_start, fraction_complete * span).
+        "fraction_complete": ((int(state["base"]) - start0) / span
+                              if span else 1.0),
+        # The leased flat-index slice this result reduces (the whole
+        # grid unless flat_range= was given) — merge_results' tiling
+        # contract.
+        "range_start": float(start0),
+        "range_stop": float(stop0),
         "total_s": total_s,
         "first_chunk_s": t_first if t_first is not None else total_s,
-        "configs_per_s": n_total / total_s if total_s else float("inf"),
+        "configs_per_s": span / total_s if total_s else float("inf"),
         "steady_configs_per_s": (
-            (n_total - min(per_step, n_total))
+            (span - min(per_step, span))
             / max(total_s - (t_first or 0.0), 1e-9)
-            if n_steps > 1 else n_total / max(total_s, 1e-9)),
+            if n_steps > 1 else span / max(total_s, 1e-9)),
         # Pipeline accounting: host_merge_s is time spent in the exact
         # merges/buffering; device_wait_s is time blocked fetching chunk
         # survivors (≈ un-hidden device compute).  prefetch > 0 shrinks
@@ -1489,3 +1643,165 @@ def stream_grid(cuts: Optional[Iterable[int]] = None,
 
 #: Moved to the backend layer as the carry serialization contract.
 _merge_device_carries = B.merge_device_carries
+
+
+# ---------------------------------------------------------------------------
+# Cross-range folding (the worker pool's merge step)
+# ---------------------------------------------------------------------------
+
+
+def _carry_from_result(res: StreamResult, sign: np.ndarray,
+                       n_total: int) -> dict:
+    """Reconstruct the serialization-form carry of one
+    :class:`StreamResult` — exact, because the result's deliverables
+    *are* the carry fields up to the orientation flip (``topk_val`` is
+    stored ``carry * sign`` with ``sign`` in ±1, so multiplying by
+    ``sign`` again is a bitwise round trip, including the ±inf
+    sentinels)."""
+    fields = tuple(res.min_val)
+    carry = {
+        "min_val": np.array([res.min_val[f] for f in fields],
+                            np.float64),
+        "min_idx": np.array([res.min_idx[f] for f in fields], np.int64),
+        "finite": np.array([res.finite_counts[f] for f in fields],
+                           np.int64),
+        "fmin": np.array([res.channel_min[f] for f in fields],
+                         np.float64),
+        "fmax": np.array([res.channel_max[f] for f in fields],
+                         np.float64),
+        "topk_val": np.asarray(res.topk_val, np.float64)
+        * sign[:, None],
+        "topk_idx": np.where(
+            np.isfinite(res.topk_val),
+            np.asarray(res.topk_idx, np.int64), n_total),
+    }
+    if res.hist is not None:
+        carry["hist"] = np.stack(
+            [np.asarray(res.hist[f][0], np.int64)
+             for f in res.objectives])
+    return carry
+
+
+def merge_results(parts: Sequence[StreamResult]) -> StreamResult:
+    """Fold per-range :class:`StreamResult` parts (``flat_range=`` runs
+    whose ranges tile ``[0, n_configs)``) into one complete result,
+    bitwise-identical to a single-process sweep of the whole grid.
+
+    Exactness comes from the same two ingredients the multi-device
+    pmap path uses: every carry reduction is associative with the
+    dense-path tie rules (:func:`repro.core.backend.
+    merge_device_carries` — lexicographic ``(value, index)`` argmin,
+    two-key sorted top-k merge, plain sums/min/max), and the exact
+    front merge (:func:`_merge_into_front`) over the parts' disjoint
+    exact fronts.  Parts may arrive in any order; they are sorted by
+    ``range_start``.  Raises :class:`ValueError` on gaps, overlaps,
+    incomplete (``partial=True``) parts, or mismatched specs — a torn
+    part set must never fold silently.
+    """
+    if not parts:
+        raise ValueError("merge_results needs at least one part")
+    parts = sorted(parts, key=lambda r: r.stats.get("range_start", 0.0))
+    first = parts[0]
+    n_total = first.n_configs
+    fields = tuple(first.min_val)
+    sign = np.where([o in first.maximize for o in first.objectives],
+                    -1.0, 1.0)
+    cursor = 0
+    for r in parts:
+        if (r.axes != first.axes or r.objectives != first.objectives
+                or r.maximize != first.maximize
+                or tuple(r.min_val) != fields
+                or r.constraints != first.constraints):
+            raise ValueError("merge_results: parts from different "
+                             "sweep specifications")
+        start = int(r.stats.get("range_start", 0))
+        stop = int(r.stats.get("range_stop", r.n_configs))
+        if start != cursor:
+            raise ValueError(
+                f"merge_results: range gap/overlap at flat index "
+                f"{cursor} (next part starts at {start})")
+        if r.partial:
+            raise ValueError(
+                f"merge_results: part [{start}, {stop}) is partial "
+                f"({r.stats.get('fraction_complete', 0.0):.1%})")
+        cursor = stop
+    if cursor != n_total:
+        raise ValueError(f"merge_results: ranges cover [0, {cursor}) "
+                         f"of {n_total} configs")
+
+    t0 = time.perf_counter()
+    k = first.topk_idx.shape[1]
+    stacked = B.stack_host_carries(
+        [_carry_from_result(r, sign, n_total) for r in parts])
+    carry = B.merge_device_carries(stacked, k)
+
+    d = len(first.objectives)
+    front_vals = np.empty((0, d))
+    front_idx = np.empty((0,), np.int64)
+    for r in parts:
+        front_vals, front_idx = _merge_into_front(
+            front_vals, front_idx,
+            np.asarray(r.front_values, np.float64),
+            np.asarray(r.front_indices, np.int64), sign)
+
+    hist_out = None
+    if first.hist is not None:
+        for r in parts[1:]:
+            for oi, f in enumerate(first.objectives):
+                if not np.array_equal(r.hist[f][1], first.hist[f][1]):
+                    raise ValueError(
+                        f"merge_results: histogram edges of {f!r} "
+                        f"differ across parts")
+        hist_out = {f: (np.asarray(carry["hist"][oi]),
+                        np.asarray(first.hist[f][1]).copy())
+                    for oi, f in enumerate(first.objectives)}
+
+    summed = ("retries", "restarts", "checkpoints_written",
+              "checkpoint_write_s", "chunks_reissued", "elastic_replans",
+              "stragglers", "step_timeouts", "fallback_chunks",
+              "n_chunks", "host_merge_s", "device_wait_s", "dispatch_s")
+    total_s = max(float(r.stats.get("total_s", 0.0)) for r in parts)
+    stats = {
+        "n_configs": float(n_total),
+        "fraction_complete": 1.0,
+        "range_start": 0.0,
+        "range_stop": float(n_total),
+        "n_parts": float(len(parts)),
+        # Wall-clock of the slowest part: with parts running
+        # concurrently (the worker pool) this is the aggregate job
+        # duration, so configs_per_s is the *aggregate* throughput.
+        "total_s": total_s,
+        "configs_per_s": (n_total / total_s if total_s
+                          else float("inf")),
+        "first_chunk_s": min(float(r.stats.get("first_chunk_s", 0.0))
+                             for r in parts),
+        "merge_s": 0.0,
+        **{kk: float(sum(r.stats.get(kk, 0.0) for r in parts))
+           for kk in summed},
+    }
+
+    topk_val = carry["topk_val"] * sign[:, None]
+    topk_idx = np.where(np.isfinite(carry["topk_val"]),
+                        carry["topk_idx"], n_total)
+    stats["merge_s"] = time.perf_counter() - t0
+    return StreamResult(
+        axes=first.axes, objectives=first.objectives,
+        maximize=first.maximize, chunk_size=first.chunk_size,
+        n_devices=sum(r.n_devices for r in parts),
+        min_val={f: float(carry["min_val"][i])
+                 for i, f in enumerate(fields)},
+        min_idx={f: int(carry["min_idx"][i])
+                 for i, f in enumerate(fields)},
+        finite_counts={f: int(carry["finite"][i])
+                       for i, f in enumerate(fields)},
+        channel_min={f: float(carry["fmin"][i])
+                     for i, f in enumerate(fields)},
+        channel_max={f: float(carry["fmax"][i])
+                     for i, f in enumerate(fields)},
+        axis_valid=OrderedDict(
+            (kk, np.asarray(v).copy())
+            for kk, v in first.axis_valid.items()),
+        topk_val=topk_val, topk_idx=topk_idx,
+        front_indices=front_idx, front_values=front_vals,
+        hist=hist_out, stats=stats, constraints=first.constraints,
+        partial=False)

@@ -1,6 +1,7 @@
 """Distributed runtime: fault tolerance, straggler mitigation, elasticity,
-deterministic fault injection, multi-tenant fair admission control, and
-the framed-socket transport of the networked sweep service."""
+deterministic fault injection, multi-tenant fair admission control, the
+framed-socket transport of the networked sweep service, and the
+multi-process worker pool (chunk-range leasing over a shared spool)."""
 
 from .admission import (AdmissionQueue, BackpressureError,  # noqa: F401
                         Deadline, TenantPolicy)
@@ -10,4 +11,6 @@ from .fault_injection import (DeviceLostError, FaultInjector,  # noqa: F401
                               FaultPlan, TransientDeviceError)
 from .fault_tolerance import (FaultToleranceController, FTConfig,  # noqa: F401
                               RetryPolicy, StragglerDetector, WorkerState)
-from .transport import SweepServer  # noqa: F401
+from .transport import AuthenticationError, SweepServer  # noqa: F401
+from .workers import (JobHandle, LeaseBoard, WorkerPool,  # noqa: F401
+                      dispatch_job)

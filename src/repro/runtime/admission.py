@@ -197,7 +197,8 @@ class AdmissionQueue:
     def __init__(self, capacity: int,
                  tenants: Optional[Dict[str, TenantPolicy]] = None,
                  aging_s: float = 30.0,
-                 quantum: float = 1.0):
+                 quantum: float = 1.0,
+                 executors: int = 1):
         if int(capacity) < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if not (aging_s > 0.0):
@@ -205,6 +206,9 @@ class AdmissionQueue:
         self.capacity = int(capacity)
         self.aging_s = float(aging_s)
         self.quantum = float(quantum)
+        #: Parallel service width (e.g. the worker-pool size) — scales
+        #: the claim-rate fallback of the ``retry_after_s`` estimate.
+        self.executors = max(1, int(executors))
         self._policies: Dict[str, TenantPolicy] = dict(tenants or {})
         self._queues: "OrderedDict[str, deque]" = OrderedDict()
         self._rr: deque = deque()           # DRR rotation (active tenants)
@@ -215,6 +219,7 @@ class AdmissionQueue:
         self._rseq = 0                      # readmit seqs count downward
         self._paused = False
         self._claim_times: deque = deque(maxlen=32)
+        self._done_times: deque = deque(maxlen=32)
         self._lock = threading.Lock()
         self._not_empty = threading.Condition(self._lock)
 
@@ -312,6 +317,7 @@ class AdmissionQueue:
         """Return one claimed item's in-flight slot (the consumer calls
         this when the item's execution finishes, successfully or not)."""
         with self._lock:
+            self._done_times.append(time.monotonic())
             n = self._inflight.get(tenant, 0)
             if n > 1:
                 self._inflight[tenant] = n - 1
@@ -390,14 +396,29 @@ class AdmissionQueue:
             self._rr.rotate(-1)
 
     def _retry_after_locked(self, n_ahead: int) -> float:
-        """Estimate of when a retry is likely to be admitted: the
-        recent claim rate extrapolated over the backlog ahead (clamped
-        to [0.05s, 60s]; 1s with no service history)."""
+        """Estimate of when a retry is likely to be admitted (clamped
+        to [0.05s, 60s]; 1s with no service history).
+
+        Primary signal: the recent *completion* rate — intervals
+        between :meth:`release` calls — extrapolated over the backlog
+        ahead.  Completions are what actually free capacity, and with
+        parallel consumers they interleave, so their observed rate
+        already includes the service width.  Fallback before any
+        completion lands: the claim rate divided by ``executors`` — a
+        single dispatcher feeding an N-wide worker pool claims on one
+        thread's clock, so the raw claim interval over-estimates the
+        wait by exactly that factor."""
         est = 1.0
-        if len(self._claim_times) >= 2:
+        if len(self._done_times) >= 2:
+            span = self._done_times[-1] - self._done_times[0]
+            if span > 0:
+                per_done = span / (len(self._done_times) - 1)
+                est = per_done * (int(n_ahead) + 1)
+        elif len(self._claim_times) >= 2:
             span = self._claim_times[-1] - self._claim_times[0]
             if span > 0:
-                per_claim = span / (len(self._claim_times) - 1)
+                per_claim = (span / (len(self._claim_times) - 1)
+                             / self.executors)
                 est = per_claim * (int(n_ahead) + 1)
         return float(min(60.0, max(0.05, est)))
 

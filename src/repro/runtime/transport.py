@@ -50,12 +50,35 @@ Error frames are ``{"error": <kind>, "message": ...}`` with kinds
 ``closed``, ``shutting_down`` and ``internal`` —
 :class:`repro.core.client.SweepClient` maps them back to the
 exceptions the in-process API raises.
+
+Protocol 2 additions:
+
+* **Greeting + HMAC handshake** — immediately after accept the server
+  sends a fixed 21-byte greeting ``b"SWG2" + flags + nonce16``.  When
+  the server holds an ``auth_token`` (flag ``0x01``), the client must
+  answer with ``HMAC-SHA256(token, nonce)`` (32 raw bytes) before any
+  frame; the server replies one verdict byte and drops unauthenticated
+  connections *before parsing any JSON*.  Tokens never travel on the
+  wire and every connection gets a fresh nonce (no replay).
+* **Delta watch frames** — the first ``watch`` progress frame on a
+  connection is a full ``{"snapshot", "seq"}`` baseline; subsequent
+  ones are ``{"delta", "seq"}`` per-chunk argmin/front deltas
+  (:func:`repro.core.stream.result_delta_to_json`), which the client
+  folds back with :func:`~repro.core.stream.apply_result_delta`.  The
+  final result still travels as a full exact payload.
+* **Wire accounting** — ``bytes_in`` / ``bytes_out`` plus
+  ``watch_snapshot_bytes`` / ``watch_delta_bytes`` counters, surfaced
+  under ``health()["transport"]``.
 """
 
 from __future__ import annotations
 
+import contextlib
+import hashlib
+import hmac
 import json
 import os
+import secrets
 import socket
 import struct
 import threading
@@ -65,7 +88,21 @@ from typing import Optional
 from .admission import BackpressureError
 
 #: Wire protocol version, echoed in ``ping`` responses.
-PROTOCOL = 1
+PROTOCOL = 2
+
+#: Greeting magic: "SWeep Grid" protocol 2.
+MAGIC = b"SWG2"
+_FLAG_AUTH = 0x01
+_NONCE_LEN = 16
+_MAC_LEN = 32
+_HANDSHAKE_TIMEOUT_S = 10.0
+
+
+class AuthenticationError(RuntimeError):
+    """Raised client-side when the handshake fails: the server demands
+    a token the client does not hold, or rejected the one it sent.
+    Deliberately *not* a :class:`ConnectionError` — the client's
+    reconnect loop must not retry a hopeless credential."""
 
 #: Default cap on one frame's payload (bytes) — large enough for any
 #: realistic result (fronts are O(10^3) rows), small enough that a
@@ -96,10 +133,13 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
 
 
 def read_frame(sock: socket.socket,
-               max_frame: int = MAX_FRAME) -> Optional[dict]:
+               max_frame: int = MAX_FRAME,
+               stats: Optional[dict] = None) -> Optional[dict]:
     """Read one framed JSON message (``None`` on clean EOF between
     frames; :class:`ConnectionError` on a torn frame or oversized
-    length prefix)."""
+    length prefix).  ``stats`` (any dict) gets its ``"bytes_in"`` key
+    bumped by the frame's wire size — both endpoints use this for the
+    delta-streaming accounting."""
     try:
         head = sock.recv(_LEN.size)
     except (TimeoutError, socket.timeout):
@@ -113,7 +153,40 @@ def read_frame(sock: socket.socket,
         raise ConnectionError(
             f"peer announced a {n}-byte frame (cap {max_frame}) — "
             f"corrupt stream or protocol mismatch")
+    if stats is not None:
+        stats["bytes_in"] = stats.get("bytes_in", 0) + _LEN.size + n
     return json.loads(_recv_exact(sock, n).decode("utf-8"))
+
+
+def client_handshake(sock: socket.socket,
+                     auth: Optional[str] = None) -> None:
+    """Client side of the protocol-2 greeting: consume the 21-byte
+    ``MAGIC + flags + nonce`` greeting and, when the server demands
+    auth, answer the HMAC-SHA256 challenge and check the verdict byte.
+    Raises :class:`AuthenticationError` on a missing/rejected token and
+    :class:`ConnectionError` on a non-sweep peer."""
+    old = sock.gettimeout()
+    sock.settimeout(_HANDSHAKE_TIMEOUT_S)
+    try:
+        head = _recv_exact(sock, len(MAGIC) + 1 + _NONCE_LEN)
+        if head[:len(MAGIC)] != MAGIC:
+            raise ConnectionError(
+                f"peer is not a protocol-{PROTOCOL} sweep server "
+                f"(greeting {head[:4]!r})")
+        flags = head[len(MAGIC)]
+        nonce = head[len(MAGIC) + 1:]
+        if flags & _FLAG_AUTH:
+            if auth is None:
+                raise AuthenticationError(
+                    "server requires an auth token — pass "
+                    "SweepClient(auth=...) / --auth-token")
+            sock.sendall(hmac.new(auth.encode("utf-8"), nonce,
+                                  hashlib.sha256).digest())
+            if _recv_exact(sock, 1) != b"\x01":
+                raise AuthenticationError(
+                    "server rejected the auth token")
+    finally:
+        sock.settimeout(old)
 
 
 def parse_address(address: str):
@@ -142,7 +215,8 @@ class SweepServer:
                  unix_path: Optional[str] = None,
                  heartbeat_s: float = 1.0,
                  max_frame: int = MAX_FRAME,
-                 own_service: bool = False):
+                 own_service: bool = False,
+                 auth_token: Optional[str] = None):
         if (unix_path is None) == (port is None):
             raise ValueError("pass exactly one of (host, port) or "
                              "unix_path")
@@ -153,6 +227,7 @@ class SweepServer:
         self._heartbeat_s = float(heartbeat_s)
         self._max_frame = int(max_frame)
         self._own_service = bool(own_service)
+        self._auth_token = auth_token
         self._listener: Optional[socket.socket] = None
         self._accept_thread: Optional[threading.Thread] = None
         self._conns: set = set()
@@ -160,7 +235,10 @@ class SweepServer:
         self._closing = threading.Event()
         self._closed = threading.Event()
         self.counters = {"connections": 0, "frames_in": 0,
-                         "frames_out": 0, "errors": 0}
+                         "frames_out": 0, "errors": 0,
+                         "auth_failures": 0, "bytes_in": 0,
+                         "bytes_out": 0, "watch_snapshot_bytes": 0,
+                         "watch_delta_bytes": 0}
 
     # -- lifecycle -------------------------------------------------------
 
@@ -256,19 +334,56 @@ class SweepServer:
                              daemon=True,
                              name="sweep-server-conn").start()
 
+    def _handshake(self, conn: socket.socket) -> bool:
+        """Server side of the protocol-2 greeting.  With an auth token
+        configured, the connection is dropped unless the peer answers
+        the fresh-nonce HMAC challenge — *before* the server parses a
+        single byte of JSON from it."""
+        nonce = secrets.token_bytes(_NONCE_LEN)
+        flags = _FLAG_AUTH if self._auth_token is not None else 0
+        conn.sendall(MAGIC + bytes([flags]) + nonce)
+        self.counters["bytes_out"] += len(MAGIC) + 1 + _NONCE_LEN
+        if not flags:
+            return True
+        old = conn.gettimeout()
+        conn.settimeout(_HANDSHAKE_TIMEOUT_S)
+        try:
+            mac = _recv_exact(conn, _MAC_LEN)
+        except (ConnectionError, OSError):
+            self.counters["auth_failures"] += 1
+            return False
+        finally:
+            conn.settimeout(old)
+        self.counters["bytes_in"] += _MAC_LEN
+        want = hmac.new(self._auth_token.encode("utf-8"), nonce,
+                        hashlib.sha256).digest()
+        if not hmac.compare_digest(mac, want):
+            self.counters["auth_failures"] += 1
+            with contextlib.suppress(OSError):
+                conn.sendall(b"\x00")
+            return False
+        conn.sendall(b"\x01")
+        self.counters["bytes_out"] += 1
+        return True
+
     def _serve_conn(self, conn: socket.socket) -> None:
         wlock = threading.Lock()
 
-        def send(payload: dict) -> None:
+        def send(payload: dict) -> int:
             data = encode_frame(payload)
             with wlock:
                 conn.sendall(data)
             self.counters["frames_out"] += 1
+            self.counters["bytes_out"] += len(data)
+            return len(data)
 
         try:
+            if not self._handshake(conn):
+                return
             while not self._closed.is_set():
                 try:
-                    msg = read_frame(conn, self._max_frame)
+                    msg = read_frame(conn, self._max_frame,
+                                     self.counters)
                 except (TimeoutError, socket.timeout):
                     continue
                 if msg is None:
@@ -310,7 +425,9 @@ class SweepServer:
                   "alive": not self._closing.is_set()})
             return
         if op == "health":
-            send({"rid": rid, "health": self.service.health()})
+            send({"rid": rid,
+                  "health": {**self.service.health(),
+                             "transport": dict(self.counters)}})
             return
         if op == "submit":
             if self._closing.is_set():
@@ -362,6 +479,7 @@ class SweepServer:
         from ..core import stream as ST
         deadline = (None if timeout is None
                     else time.monotonic() + float(timeout))
+        prev_snap = None
         while not t.done():
             if deadline is not None and time.monotonic() >= deadline:
                 send({"rid": rid, "error": "timeout",
@@ -380,7 +498,19 @@ class SweepServer:
                 # float "progress" field, and the final frame embeds a
                 # summary — the streaming key must never collide with
                 # it or clients would skip the final frame.
-                send({"rid": rid, "snapshot": snap, "seq": seq})
+                if prev_snap is None:
+                    # Full baseline first (also after a reconnecting
+                    # watch — the server cannot know what the client
+                    # still holds), per-chunk deltas from then on.
+                    n = send({"rid": rid, "snapshot": snap,
+                              "seq": seq})
+                    self.counters["watch_snapshot_bytes"] += n
+                else:
+                    n = send({"rid": rid, "seq": seq,
+                              "delta": ST.result_delta_to_json(
+                                  prev_snap, snap)})
+                    self.counters["watch_delta_bytes"] += n
+                prev_snap = snap
             elif not t.done():
                 send({"rid": rid, "hb": True, **t.summary()})
         out = {"rid": rid, "done": True, **t.summary()}

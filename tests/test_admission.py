@@ -347,3 +347,55 @@ class TestCrossTenantFusion:
         # Each claimed entry charges in-flight to its own tenant.
         assert q.pending("a") == 2         # a-x1 in flight + a-y1 queued
         assert q.pending("b") == 2         # b-x2, b-x3 in flight
+
+
+# ---------------------------------------------------------------------------
+# retry_after_s estimation (completion rate, executors-aware fallback)
+# ---------------------------------------------------------------------------
+
+
+class TestRetryAfterEstimate:
+    def _estimate(self, q):
+        with pytest.raises(BackpressureError) as ei:
+            q.offer("rejected")
+        return ei.value.retry_after_s
+
+    def test_no_history_defaults_to_one_second(self):
+        q = AdmissionQueue(1)
+        q.offer("x")
+        assert self._estimate(q) == 1.0
+
+    def test_completion_rate_is_the_primary_signal(self):
+        # One completion every 0.2s, one item ahead -> ~0.4s.  The
+        # executors knob must NOT divide this: parallel workers'
+        # completions already interleave in the observed stream.
+        q = AdmissionQueue(1, executors=8)
+        t0 = time.monotonic()
+        q._done_times.extend([t0 - 0.4, t0 - 0.2, t0])
+        q.offer("x")
+        assert self._estimate(q) == pytest.approx(0.4, rel=0.05)
+
+    def test_claim_rate_fallback_divides_by_executors(self):
+        # Before any completion lands, the claim rate stands in — but
+        # a single dispatcher feeding an N-wide pool claims on one
+        # thread's clock, so the interval is divided by the width.
+        t0 = time.monotonic()
+        estimates = {}
+        for width in (1, 4):
+            q = AdmissionQueue(1, executors=width)
+            q._claim_times.extend([t0 - 0.8, t0 - 0.4, t0])
+            q.offer("x")
+            estimates[width] = self._estimate(q)
+        assert estimates[1] == pytest.approx(0.8, rel=0.05)
+        assert estimates[4] == pytest.approx(0.2, rel=0.05)
+
+    def test_estimate_is_clamped_to_sane_bounds(self):
+        t0 = time.monotonic()
+        slow = AdmissionQueue(1)
+        slow._done_times.extend([t0 - 500.0, t0])
+        slow.offer("x")
+        assert self._estimate(slow) == 60.0
+        fast = AdmissionQueue(1)
+        fast._done_times.extend([t0 - 1e-4, t0])
+        fast.offer("x")
+        assert self._estimate(fast) == 0.05

@@ -23,7 +23,7 @@ import numpy as np
 import pytest
 
 from repro.core import stream
-from repro.core.client import RemoteError, SweepClient
+from repro.core.client import AuthenticationError, RemoteError, SweepClient
 from repro.core.service import SweepRequest, SweepService
 from repro.runtime import BackpressureError, SweepServer
 from repro.runtime import transport
@@ -198,6 +198,7 @@ class TestNetworkedService:
         s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
         s.connect(served.address)
         try:
+            transport.client_handshake(s)  # consume the greeting
             s.sendall(transport.encode_frame({"op": "frobnicate",
                                               "rid": "r1"}))
             out = transport.read_frame(s)
@@ -235,6 +236,29 @@ class TestNetworkedService:
         client._sock.close()
         assert client.ping()["pong"] is True
         assert client.counters["reconnects"] >= 2
+
+    def test_watch_streams_deltas_and_counts_wire_bytes(self, served):
+        """After the first full snapshot a watch ships per-chunk
+        deltas; the client reassembles full snapshots from them, and
+        both sides account the wire bytes."""
+        with SweepClient(served.address) as cli:
+            snaps = []
+            # chunk 31 -> 7 dispatch steps: several progress frames, so
+            # at least one must ride the delta encoding.
+            t = cli.submit(_request(chunk_size=31))
+            res = t.result(timeout=600, on_progress=snaps.append)
+            assert not res.partial
+            assert len(snaps) >= 2
+            for s in snaps:     # every reassembled snap is *full*
+                assert {"fraction_complete", "front_size", "partial",
+                        "best", "front"} <= set(s)
+            fracs = [s["fraction_complete"] for s in snaps]
+            assert fracs == sorted(fracs)
+            assert res.stats["watch_wire_bytes"] > 0
+            tr = cli.health()["transport"]
+            assert tr["watch_snapshot_bytes"] > 0
+            assert tr["watch_delta_bytes"] > 0
+            assert tr["bytes_out"] > tr["bytes_in"] > 0
 
     def test_watch_timeout_is_a_timeout_not_a_disconnect(self, client,
                                                          served):
@@ -283,13 +307,31 @@ class TestServerKillReconnect:
         assert ready["listening"] == sock_path, ready
         return proc
 
-    def test_kill_reconnect_dedupe_bitwise(self, tmp_path, solo):
+    def test_kill_reconnect_dedupe_bitwise(self, tmp_path):
         sock_path = str(tmp_path / "svc.sock")
         spool = str(tmp_path / "spool")
         server_a = self._start_server(sock_path, spool)
         cli = SweepClient(sock_path, reconnect_timeout_s=240.0,
                           heartbeat_grace_s=8.0)
-        ticket = cli.submit(_request(), client_id="chaos-1")
+        # A job wide enough that the kill can never race completion:
+        # 3840 configs at chunk 31 -> 124 steps, each one checkpointed
+        # (fsync'd) before its progress frame goes out, so when the
+        # first frame arrives the server still has seconds of work
+        # left — even a heavily-loaded host can deliver the SIGKILL
+        # mid-execution, and any observed progress is backed by a
+        # durable checkpoint to resume from.  The solo reference runs
+        # the same chunk size: this grid has near-tied front points
+        # whose channel values drift by an ulp across chunk lowerings,
+        # so bitwise parity is only defined lowering-for-lowering.
+        kill_grid = dict(
+            GRID,
+            detnet_fps=tuple(float(f) for f in range(5, 65, 1)),
+            keynet_fps=(30.0, 37.5, 45.0, 52.5))
+        ref = stream.stream_grid(**kill_grid, track="all",
+                                 chunk_size=31, top_k=TOP_K)
+        ticket = cli.submit(
+            _request(grid=kill_grid, chunk_size=31),
+            client_id="chaos-1")
         first_id = ticket.id
         seen = {"frac": 0.0}
         box = {}
@@ -321,9 +363,133 @@ class TestServerKillReconnect:
             # journal-recovered ticket, not a new execution.
             assert ticket.id == first_id
             assert res.stats["resumed_from_step"] > 0
-            _assert_bitwise(res, solo)
+            _assert_bitwise(res, ref)
             assert cli.counters["reconnects"] >= 2
         finally:
             cli.close()
             server_b.send_signal(signal.SIGTERM)
             server_b.wait(60)
+
+
+# ---------------------------------------------------------------------------
+# Shared-secret HMAC handshake
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="class")
+def auth_served(tmp_path_factory):
+    sock = str(tmp_path_factory.mktemp("auth") / "svc.sock")
+    svc = SweepService(capacity=4, snapshot_every_s=0.0)
+    server = SweepServer(svc, unix_path=sock, heartbeat_s=0.1,
+                         own_service=True,
+                         auth_token="open-sesame").start()
+    yield server
+    server.close(drain=False, timeout=10.0)
+
+
+class TestAuthHandshake:
+    def test_right_token_is_accepted(self, auth_served):
+        with SweepClient(auth_served.address,
+                         auth="open-sesame") as cli:
+            assert cli.ping()["pong"] is True
+
+    def test_missing_token_fails_fast_without_retry(self, auth_served):
+        # A hopeless credential must not burn the reconnect budget:
+        # AuthenticationError is not a ConnectionError.
+        with SweepClient(auth_served.address,
+                         reconnect_timeout_s=60.0) as cli:
+            t0 = time.monotonic()
+            with pytest.raises(AuthenticationError,
+                               match="auth token"):
+                cli.ping()
+            assert time.monotonic() - t0 < 5.0
+
+    def test_wrong_token_is_rejected_before_any_json_parse(
+            self, auth_served):
+        before = auth_served.counters["auth_failures"]
+        with SweepClient(auth_served.address, auth="wrong") as cli:
+            with pytest.raises(AuthenticationError, match="rejected"):
+                cli.ping()
+        # The server never read a frame: rejection happened at the
+        # 32-byte MAC, and the failure is accounted.
+        assert auth_served.counters["auth_failures"] > before
+
+    def test_unauthenticated_frame_never_reaches_the_parser(
+            self, auth_served):
+        s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        s.connect(auth_served.address)
+        try:
+            greeting = transport._recv_exact(
+                s, 4 + 1 + transport._NONCE_LEN)
+            assert greeting[:4] == transport.MAGIC
+            assert greeting[4] & transport._FLAG_AUTH
+            # Answer with garbage the length of a MAC, then try to
+            # speak the protocol: the server hangs up instead of
+            # parsing the frame.
+            s.sendall(b"\x00" * transport._MAC_LEN)
+            verdict = s.recv(1)
+            assert verdict in (b"", b"\x00")
+            # EOF, reset, or a pipe broken mid-send — never a reply
+            # frame (BrokenPipeError just means the hang-up already
+            # reached us before the write).
+            try:
+                s.sendall(transport.encode_frame({"op": "ping",
+                                                  "rid": "r1"}))
+                assert transport.read_frame(s) is None
+            except ConnectionError:
+                pass
+        finally:
+            s.close()
+
+
+# ---------------------------------------------------------------------------
+# Hedged submit across replicas (idempotent dedup)
+# ---------------------------------------------------------------------------
+
+
+class TestHedgedSubmit:
+    def test_hedged_legs_dedupe_onto_one_execution(self, tmp_path,
+                                                   solo):
+        svc = SweepService(capacity=8, snapshot_every_s=0.0)
+        sa = str(tmp_path / "a.sock")
+        sb = str(tmp_path / "b.sock")
+        server_a = SweepServer(svc, unix_path=sa,
+                               heartbeat_s=0.1).start()
+        server_b = SweepServer(svc, unix_path=sb,
+                               heartbeat_s=0.1).start()
+        try:
+            with SweepClient([sa, sb]) as cli:
+                t = cli.submit(_request(), client_id="hedge-1",
+                               hedge_s=0.0)
+                res = t.result(timeout=600)
+                _assert_bitwise(res, solo)
+                assert cli.counters["hedged_submits"] == 1
+            # Both legs raced the same client_id into one service:
+            # at most one execution, the loser deduplicated.
+            assert svc.counters["executions"] == 1
+        finally:
+            server_a.close(drain=False, timeout=10.0)
+            server_b.close(drain=False, timeout=10.0)
+            svc.close()
+
+    def test_hedge_survives_a_dead_replica(self, tmp_path, solo):
+        svc = SweepService(capacity=8, snapshot_every_s=0.0)
+        sa = str(tmp_path / "dead.sock")     # never listening
+        sb = str(tmp_path / "live.sock")
+        server_b = SweepServer(svc, unix_path=sb,
+                               heartbeat_s=0.1).start()
+        try:
+            with SweepClient([sa, sb], connect_timeout_s=1.0,
+                             reconnect_timeout_s=6.0,
+                             backoff_max_s=0.2) as cli:
+                t = cli.submit(_request(), client_id="hedge-2",
+                               hedge_s=0.05)
+                # The watch also fails over: the client rotates off
+                # the dead primary to the live replica.
+                res = t.result(timeout=600)
+                _assert_bitwise(res, solo)
+                assert cli.counters["failovers"] >= 1
+            assert svc.counters["executions"] == 1
+        finally:
+            server_b.close(drain=False, timeout=10.0)
+            svc.close()
